@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing, CSV output, dataset builders."""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def timer(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return dt, out
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.csv"
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def are(estimates: np.ndarray, truths: np.ndarray) -> float:
+    """Average relative error, paper §5.1: (est - true) / true, true > 0."""
+    m = truths > 0
+    if m.sum() == 0:
+        return 0.0
+    return float(np.mean((estimates[m] - truths[m]) / truths[m]))

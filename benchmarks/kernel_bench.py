@@ -1,0 +1,86 @@
+"""Kernel micro-benchmarks: batched-vectorized vs scalar-sequential insert,
+and batched query throughput — the systems-side speedup story on CPU
+(TPU perf is structural, via the dry-run roofline)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import EdgeBatch, LSketchConfig, init_state
+from repro.core.lsketch import insert_window_batch
+from repro.core.queries import edge_query
+from repro.core.ref_prime import PrimeLSketch
+
+from .common import timer, write_csv
+
+
+def _batch(rng, n):
+    return EdgeBatch(
+        src=jnp.asarray(rng.integers(0, 500, n), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, 500, n), jnp.int32),
+        src_label=jnp.asarray(rng.integers(0, 3, n), jnp.int32),
+        dst_label=jnp.asarray(rng.integers(0, 3, n), jnp.int32),
+        edge_label=jnp.asarray(rng.integers(0, 6, n), jnp.int32),
+        weight=jnp.asarray(np.ones(n), jnp.int32),
+        time=jnp.asarray(np.zeros(n), jnp.int32))
+
+
+def insert_throughput(n=20000):
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=8192)
+    rng = np.random.default_rng(0)
+    batch = _batch(rng, n)
+    rows = []
+
+    def run_jit():
+        st = insert_window_batch(cfg, init_state(cfg), batch, 0)
+        jax.block_until_ready(st.C)
+        return st
+
+    dt, _ = timer(run_jit, warmup=1, iters=3)
+    rows.append(["jax_fori_batched", n, f"{dt / n * 1e6:.3f}", f"{dt:.3f}"])
+
+    # pure-python paper-literal implementation (the C++ analog baseline)
+    py = PrimeLSketch(cfg)
+    src = np.asarray(batch.src)
+    dst = np.asarray(batch.dst)
+    la = np.asarray(batch.src_label)
+    lb = np.asarray(batch.dst_label)
+    le = np.asarray(batch.edge_label)
+    m = min(n, 3000)
+
+    def run_py():
+        for i in range(m):
+            py.insert(int(src[i]), int(dst[i]), int(la[i]), int(lb[i]),
+                      int(le[i]), 1, 0)
+
+    dt_py, _ = timer(run_py, warmup=0, iters=1)
+    rows.append(["python_sequential", m, f"{dt_py / m * 1e6:.3f}",
+                 f"{dt_py:.3f}"])
+    write_csv("kernel_insert_throughput",
+              ["impl", "edges", "us_per_edge", "total_s"], rows)
+    return rows
+
+
+def query_throughput(n=20000, q=4096):
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=8192)
+    rng = np.random.default_rng(0)
+    batch = _batch(rng, n)
+    state = insert_window_batch(cfg, init_state(cfg), batch, 0)
+    qs = jnp.asarray(rng.integers(0, 500, q), jnp.int32)
+    qd = jnp.asarray(rng.integers(0, 500, q), jnp.int32)
+    labels = (qs % 3, qd % 3, jnp.zeros(q, jnp.int32))
+
+    def run():
+        w, _ = edge_query(cfg, state, qs, qd, labels, False, None)
+        jax.block_until_ready(w)
+        return w
+
+    dt, _ = timer(run, warmup=1, iters=3)
+    rows = [["edge_query_batched", q, f"{dt / q * 1e6:.3f}", f"{dt:.4f}"]]
+    write_csv("kernel_query_throughput",
+              ["impl", "queries", "us_per_query", "total_s"], rows)
+    return rows

@@ -1,0 +1,141 @@
+"""Assemble EXPERIMENTS.md from dry-run JSONs + bench CSVs + the perf log.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+
+The narrative sections (including §Perf iteration log) live in this file;
+tables are regenerated from artifacts so re-running refreshes numbers.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+BENCH = ROOT / "experiments" / "bench"
+
+V5E = "197 TF/s bf16 - 819 GB/s HBM - 50 GB/s/link ICI (per chip)"
+
+
+def load():
+    recs = {}
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_e(x):
+    return f"{x:.2e}"
+
+
+def dryrun_section(recs):
+    lines = [
+        "## §Dry-run\n",
+        "Every (architecture x input-shape) cell lowered **and compiled** with",
+        "`jax.jit(...).lower(...).compile()` on the production meshes:",
+        "single-pod `16x16` (`data`,`model`; 256 chips) and multi-pod",
+        "`2x16x16` (`pod`,`data`,`model`; 512 chips), via",
+        "`python -m repro.launch.dryrun --all --mesh both`. Numbers are",
+        "whole-step totals derived from the optimized per-device HLO by the",
+        "scan-aware structural analyzer (`launch/hlo_analysis.py`; XLA's",
+        "`cost_analysis` counts while bodies once — see §Methodology).\n",
+        "| arch | shape | mesh | mode | params | active | HLO FLOPs | HBM bytes | coll bytes | peak GiB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    skips = []
+    fails = []
+    for key in sorted(recs):
+        r = recs[key]
+        a, s, m = key
+        if "skipped" in r:
+            skips.append(f"* `{a} x {s} x {m}` — {r['skipped']}")
+            continue
+        if "error" in r:
+            fails.append(f"* `{a} x {s} x {m}` — {r['error'][:160]}")
+            continue
+        peak = r["memory"].get("peak_bytes") or (
+            (r["memory"].get("temp_bytes") or 0)
+            + (r["memory"].get("argument_bytes") or 0))
+        lines.append(
+            f"| {a} | {s} | {m} | {r['mode']} | {fmt_e(r['params_total'])} "
+            f"| {fmt_e(r['params_active'])} | {fmt_e(r['hlo_flops'])} "
+            f"| {fmt_e(r['hlo_bytes'])} "
+            f"| {fmt_e(r['collective_bytes']['total'])} "
+            f"| {peak / 2**30:.1f} | {r['compile_s']:.0f} |")
+    lines.append("")
+    if skips:
+        lines.append("**Skipped cells** (per assignment rule — `long_500k` "
+                     "needs sub-quadratic attention):\n")
+        lines.extend(sorted(set(skips)))
+    if fails:
+        lines.append("\n**Failed cells**:\n")
+        lines.extend(fails)
+    lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section(recs):
+    lines = [
+        "## §Roofline\n",
+        f"Hardware targets: {V5E}.",
+        "Terms are **seconds per step** (whole mesh): compute =",
+        "FLOPs/(chips x peak), memory = HBM bytes/(chips x bw), collective =",
+        "collective bytes/(chips x link bw). `useful` =",
+        "MODEL_FLOPS / HLO FLOPs where MODEL_FLOPS = 6 N_active D (train) or",
+        "2 N_active D (prefill/decode) — the remat/redundancy-waste meter.\n",
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    notes = {
+        "compute": "flash-fuse attention; bf16 softmax",
+        "memory": "flash-fuse softmax chain (kills [B,H,S,S] HBM traffic)",
+        "collective": "overlap DP reduce-scatter w/ bwd; int8-compress",
+    }
+    for key in sorted(recs):
+        r = recs[key]
+        if "roofline" not in r:
+            continue
+        a, s, m = key
+        rl = r["roofline"]
+        lines.append(
+            f"| {a} | {s} | {m} | {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | **{rl['dominant']}** "
+            f"| {rl['useful_flops_ratio']:.3f} | {notes[rl['dominant']]} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def bench_section():
+    lines = ["## §Paper-claims validation\n",
+             "Benchmarks regenerate with `python -m benchmarks.run`; CSVs in "
+             "`experiments/bench/`. Real dataset hosts are offline in this "
+             "container — streams are seeded generators matching each "
+             "dataset's published statistics (label cardinalities, skew, "
+             "window sizes; `repro/data/stream.py`).\n"]
+    for csv in sorted(BENCH.glob("*.csv")):
+        lines.append(f"### {csv.stem}\n")
+        rows = csv.read_text().strip().splitlines()
+        hdr = rows[0].split(",")
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+        for row in rows[1:40]:
+            lines.append("| " + " | ".join(row.split(",")) + " |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    doc = (ROOT / "benchmarks" / "experiments_narrative.md").read_text()
+    doc = doc.replace("<!--DRYRUN-->", dryrun_section(recs))
+    doc = doc.replace("<!--ROOFLINE-->", roofline_section(recs))
+    doc = doc.replace("<!--BENCH-->", bench_section())
+    (ROOT / "EXPERIMENTS.md").write_text(doc)
+    print(f"wrote EXPERIMENTS.md ({len(doc)} chars) from "
+          f"{len(recs)} dry-run records")
+
+
+if __name__ == "__main__":
+    main()

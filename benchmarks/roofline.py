@@ -1,0 +1,88 @@
+"""Roofline table generation from dry-run artifacts (EXPERIMENTS.md source).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and emits
+the §Dry-run and §Roofline tables: per (arch x shape x mesh) the three
+roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, bytes per
+device, and a one-line improvement note for the dominant term.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import write_csv
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+NOTES = {
+    "compute": ("fuse attention (Pallas flash kernel) / drop f32 softmax "
+                "to cut non-param FLOPs"),
+    "memory": ("flash-fuse softmax chain (removes [B,H,S,S] HBM round-trips)"
+               "; wider remat policy"),
+    "collective": ("overlap DP grad reduce-scatter with backward; int8 "
+                   "compressed all-reduce; shrink FSDP all-gather via "
+                   "larger per-chip shards"),
+}
+
+
+def load_records():
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def roofline_table():
+    rows = []
+    for r in load_records():
+        key = [r["arch"], r["shape"], r["mesh"]]
+        if "skipped" in r:
+            rows.append(key + ["SKIP", "-", "-", "-", "-", "-", "-",
+                               r["skipped"][:60]])
+            continue
+        if "error" in r:
+            rows.append(key + ["ERROR", "-", "-", "-", "-", "-", "-",
+                               r["error"][:60]])
+            continue
+        rl = r["roofline"]
+        peak = r["memory"].get("peak_bytes") or (
+            (r["memory"].get("temp_bytes") or 0)
+            + (r["memory"].get("argument_bytes") or 0))
+        rows.append(key + [
+            r["mode"],
+            f"{rl['compute_s']:.4f}", f"{rl['memory_s']:.4f}",
+            f"{rl['collective_s']:.4f}", rl["dominant"],
+            f"{rl['useful_flops_ratio']:.3f}",
+            f"{peak / 2**30:.2f}",
+            NOTES[rl["dominant"]][:70],
+        ])
+    write_csv("roofline", ["arch", "shape", "mesh", "mode", "compute_s",
+                           "memory_s", "collective_s", "dominant",
+                           "useful_ratio", "peak_GiB_per_dev", "note"], rows)
+    return rows
+
+
+def dryrun_table():
+    rows = []
+    for r in load_records():
+        key = [r["arch"], r["shape"], r["mesh"]]
+        if "skipped" in r or "error" in r:
+            continue
+        cb = r["collective_bytes"]
+        rows.append(key + [
+            f"{r['hlo_flops']:.3e}", f"{r['hlo_bytes']:.3e}",
+            f"{cb.get('total', 0):.3e}",
+            f"{cb.get('all-reduce', 0):.3e}",
+            f"{cb.get('all-gather', 0):.3e}",
+            f"{cb.get('reduce-scatter', 0):.3e}",
+            f"{cb.get('all-to-all', 0):.3e}",
+            f"{cb.get('collective-permute', 0):.3e}",
+            r["compile_s"],
+            f"{r['params_total']:.3e}", f"{r['params_active']:.3e}",
+        ])
+    write_csv("dryrun", ["arch", "shape", "mesh", "hlo_flops", "hlo_bytes",
+                         "coll_total", "all_reduce", "all_gather",
+                         "reduce_scatter", "all_to_all", "coll_permute",
+                         "compile_s", "params", "params_active"], rows)
+    return rows

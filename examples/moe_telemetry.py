@@ -1,0 +1,45 @@
+"""LSketch as MoE routing telemetry: train a small MoE while the sketch
+tracks windowed expert load; the capacity controller reacts to imbalance.
+
+    PYTHONPATH=src python examples/moe_telemetry.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.launch.inputs import random_inputs
+from repro.configs.shapes import ShapeCell
+from repro.launch.step_fns import init_train_state, make_train_step
+from repro.optim import AdamWConfig
+from repro.telemetry import CapacityController, RouterTelemetry
+
+cfg = configs.get("kimi-k2-1t-a32b", reduced=True)
+opt = AdamWConfig(warmup_steps=4, decay_steps=60)
+state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+step_fn = jax.jit(make_train_step(cfg, opt))
+cell = ShapeCell("demo", 32, 4, "train")
+
+tele = RouterTelemetry(n_experts=cfg.n_experts, window_steps=32,
+                       subwindows=8)
+ctrl = CapacityController(tele)
+cf = cfg.capacity_factor
+prev = np.asarray(state.telemetry)
+
+for step in range(24):
+    batch = random_inputs(cfg, cell, jax.random.PRNGKey(step + 1))
+    state, metrics = step_fn(state, batch)
+    cur = np.asarray(state.telemetry)
+    tele.ingest(cur - prev, step)
+    prev = cur
+    if step % 4 == 3:
+        imb = tele.imbalance(last=2)
+        cf = ctrl.update(cf)
+        loads = tele.load_vector(last=2)
+        print(f"step {step:3d} loss={float(metrics['loss']):.3f} "
+              f"imbalance(recent)={imb:.2f} capacity_factor={cf:.2f} "
+              f"hottest_expert={int(np.argmax(loads))}")
+
+print("\nwindowed routing-affinity query: bucket 0 -> each expert:")
+print([tele.routing_affinity(0, e) for e in range(cfg.n_experts)])

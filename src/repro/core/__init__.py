@@ -1,0 +1,36 @@
+"""repro.core — LSketch: label-enabled, sliding-window graph-stream sketch.
+
+Public API:
+  LSketchConfig / LSketchState / init_state / EdgeBatch  (types)
+  LSketch (object API), insert_batch / insert_window_batch (functional)
+  edge_query / vertex_query / vertex_label_aggregate / path_reachability /
+  subgraph_query (queries)
+  GSS / LGS (baselines), PrimeLSketch (paper-literal oracle)
+  merge_counters / psum_sketch (distributed merge)
+  theory (Theorem 1 bounds)
+"""
+
+from .types import (EMPTY, EdgeBatch, LSketchConfig, LSketchState, init_state,
+                    state_bytes)
+from .lsketch import (LSketch, edge_probes, insert_batch, insert_window_batch,
+                      precompute, valid_slot_mask, window_index)
+from .queries import (edge_query, path_reachability, subgraph_query,
+                      successor_scan, vertex_label_aggregate, vertex_query)
+from .gss import GSS, gss_config
+from .lgs import LGS, LGSConfig
+from .ref_prime import PrimeLSketch
+from .merge import keys_compatible, merge_counters, psum_sketch
+from . import hashing, theory
+from .analytics import (heavy_hitter_edges, heavy_hitter_vertices,
+                        triangle_estimate)
+
+__all__ = [
+    "EMPTY", "EdgeBatch", "LSketchConfig", "LSketchState", "init_state",
+    "state_bytes", "LSketch", "edge_probes", "insert_batch",
+    "insert_window_batch", "precompute", "valid_slot_mask", "window_index",
+    "edge_query", "path_reachability", "subgraph_query", "successor_scan",
+    "vertex_label_aggregate", "vertex_query", "GSS", "gss_config", "LGS",
+    "LGSConfig", "PrimeLSketch", "keys_compatible", "merge_counters",
+    "psum_sketch", "hashing", "theory", "heavy_hitter_edges",
+    "heavy_hitter_vertices", "triangle_estimate",
+]

@@ -1,0 +1,140 @@
+"""Higher-level LSketch-powered analytics (paper §1: "finding top-k items,
+finding heavy-hitters, approximate weight estimation, triangle counting").
+
+These build on the primitive queries of §4 exactly the way the paper
+suggests ("our algorithm can be applied as a black box") — each is a
+vectorized matrix/pool scan plus primitive edge queries, all windowed.
+
+  * heavy_hitter_vertices — top-k vertices by windowed out/in weight. Scans
+    every occupied cell once, aggregates by the recoverable vertex identity
+    (block, address, fingerprint) via the same H^-1 reversibility the BFS
+    uses, merges the pool, then takes top-k. One-sided estimates.
+  * heavy_hitter_edges — top-k (src, dst) cells by windowed weight.
+  * triangle_estimate — approximate directed-triangle count: for each heavy
+    edge (u, v), intersect successors(v) with successors(u)'s targets via
+    batched edge-existence checks (the sketch-native wedge-closure check).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import hashing as hsh
+from .lsketch import LSketch, valid_slot_mask
+from .queries import _edge_exists_by_vid, _successors_by_vid
+from .types import EMPTY, LSketchConfig, LSketchState
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def _cell_weights_by_vertex(cfg: LSketchConfig, state: LSketchState,
+                            direction: str = "out",
+                            last: int | None = None):
+    """[d*d*2] packed owner vertex-ids + windowed weights of every cell."""
+    mask = valid_slot_mask(cfg, state, last).astype(state.C.dtype)
+    w = jnp.sum(state.C * mask, axis=-1)  # [d,d,2]
+    keys = state.key
+    ia, ib, fa, fb = hsh.unpack_key(keys, cfg.F)
+    occupied = keys != EMPTY
+    starts, widths = cfg.block_start_width()
+    d = cfg.d
+    rows = jnp.arange(d, dtype=jnp.int32)
+    line_block = jnp.searchsorted(starts, rows, side="right") - 1
+    line_rel = rows - starts[line_block]
+    wB = widths[line_block]
+    if direction == "out":
+        # owner = source vertex: row line, index ia, print fa
+        offs = hsh.candidate_offsets(fa, cfg.r)  # [d,d,2,r]
+        sel = jnp.take_along_axis(offs, ia[..., None], axis=-1)[..., 0]
+        s_v = (line_rel[:, None, None] - sel) % wB[:, None, None]
+        vid = hsh.pack_vertex_id(line_block[:, None, None], s_v, fa, cfg.F)
+    else:
+        offs = hsh.candidate_offsets(fb, cfg.r)
+        sel = jnp.take_along_axis(offs, ib[..., None], axis=-1)[..., 0]
+        s_v = (line_rel[None, :, None] - sel) % wB[None, :, None]
+        vid = hsh.pack_vertex_id(line_block[None, :, None], s_v, fb, cfg.F)
+    vid = jnp.where(occupied & (w > 0), vid, -1)
+    return vid.reshape(-1), w.reshape(-1)
+
+
+def heavy_hitter_vertices(cfg: LSketchConfig, state: LSketchState, k: int = 10,
+                          direction: str = "out", last: int | None = None
+                          ) -> List[Tuple[int, int]]:
+    """Top-k (packed vertex id, weight) by windowed out/in weight."""
+    vid, w = _cell_weights_by_vertex(cfg, state, direction, last)
+    vid = np.asarray(vid)
+    w = np.asarray(w)
+    # pool contribution
+    mask = np.asarray(valid_slot_mask(cfg, state, last)).astype(np.int64)
+    pw = (np.asarray(state.pool_C) * mask).sum(-1)
+    col = 0 if direction == "out" else 1
+    pvid = np.asarray(state.pool_key[:, col])
+    vid = np.concatenate([vid, np.where(pw > 0, pvid, -1)])
+    w = np.concatenate([w, pw])
+    live = vid >= 0
+    agg: dict = {}
+    for v, ww in zip(vid[live].tolist(), w[live].tolist()):
+        agg[v] = agg.get(v, 0) + ww
+    return sorted(agg.items(), key=lambda kv: -kv[1])[:k]
+
+
+def heavy_hitter_edges(cfg: LSketchConfig, state: LSketchState, k: int = 10,
+                       last: int | None = None):
+    """Top-k matrix cells by windowed weight: [(src_vid, dst_vid, w)]."""
+    mask = np.asarray(valid_slot_mask(cfg, state, last)).astype(np.int64)
+    w = (np.asarray(state.C) * mask).sum(-1)  # [d,d,2]
+    src_vid, _ = _cell_weights_by_vertex(cfg, state, "out", last)
+    dst_vid, _ = _cell_weights_by_vertex(cfg, state, "in", last)
+    src_vid = np.asarray(src_vid)
+    dst_vid = np.asarray(dst_vid)
+    flat = w.reshape(-1)
+    order = np.argsort(-flat)[: 4 * k]
+    out = []
+    for i in order:
+        if flat[i] <= 0 or src_vid[i] < 0:
+            continue
+        out.append((int(src_vid[i]), int(dst_vid[i]), int(flat[i])))
+        if len(out) == k:
+            break
+    return out
+
+
+def triangle_estimate(cfg: LSketchConfig, state: LSketchState,
+                      max_seed_edges: int = 64) -> int:
+    """Approximate directed triangle count u->v->w->u over the heaviest
+    edges: wedge closure checked with batched sketch edge-existence."""
+    seeds = heavy_hitter_edges(cfg, state, k=max_seed_edges)
+    total = 0
+    for (u, v, _w) in seeds:
+        succ_v, valid_v = _successors_by_vid(
+            cfg, state, jnp.asarray([v], jnp.int32))
+        ws = np.unique(np.asarray(succ_v)[np.asarray(valid_v)])
+        ws = ws[ws >= 0][:256]
+        if len(ws) == 0:
+            continue
+        pairs = jnp.stack([jnp.asarray(ws, jnp.int32),
+                           jnp.full((len(ws),), u, jnp.int32)], axis=1)
+        closed = _edge_exists_by_vid(cfg, state, pairs)
+        total += int(np.asarray(closed).sum())
+    return total
+
+
+def _sketch_heavy_hitters(self: LSketch, k=10, direction="out", last=None):
+    return heavy_hitter_vertices(self.cfg, self.state, k, direction, last)
+
+
+def _sketch_heavy_edges(self: LSketch, k=10, last=None):
+    return heavy_hitter_edges(self.cfg, self.state, k, last)
+
+
+def _sketch_triangles(self: LSketch, max_seed_edges=64):
+    return triangle_estimate(self.cfg, self.state, max_seed_edges)
+
+
+LSketch.heavy_hitters = _sketch_heavy_hitters
+LSketch.heavy_edges = _sketch_heavy_edges
+LSketch.triangle_count = _sketch_triangles

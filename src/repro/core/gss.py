@@ -1,0 +1,45 @@
+"""GSS baseline (Gou et al., TKDE'22) — the paper's homogeneous competitor.
+
+GSS is exactly the degenerate LSketch: a single storage block (no label
+blocking), a single edge-label bucket (no counter P), no sliding window.
+The paper itself builds LSketch "on top of GSS", so sharing the machinery is
+both faithful and the strongest possible parity for accuracy comparisons
+(identical fingerprints/probing => differences measure *only* the label and
+window features).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .lsketch import LSketch
+from .types import LSketchConfig
+
+
+def gss_config(d: int = 256, F: int = 1024, r: int = 8, s: int = 8,
+               pool_capacity: int = 4096, seed: int = 1234) -> LSketchConfig:
+    return LSketchConfig(d=d, F=F, r=r, s=s, c=1, k=1, window_size=0,
+                         pool_capacity=pool_capacity, n_blocks=1, seed=seed)
+
+
+class GSS(LSketch):
+    """Homogeneous graph-stream sketch: labels and timestamps are ignored."""
+
+    def __init__(self, cfg: LSketchConfig | None = None, **kw):
+        super().__init__(cfg if cfg is not None else gss_config(**kw))
+
+    def insert(self, src, dst, src_label=None, dst_label=None,
+               edge_label=None, weight=None, time=None):
+        n = len(np.asarray(src))
+        zero = np.zeros(n, np.int32)
+        return super().insert(src, dst, zero, zero, zero, weight, zero)
+
+    def edge_weight(self, a, la, b, lb, le=None, last=None):
+        return super().edge_weight(a, 0, b, 0, le=None, last=None)
+
+    def vertex_weight(self, v, lv, le=None, direction="out", last=None):
+        return super().vertex_weight(v, 0, le=None, direction=direction,
+                                     last=None)
+
+    def reachable(self, a, la, b, lb, max_hops=64):
+        return super().reachable(a, 0, b, 0, max_hops)

@@ -1,0 +1,154 @@
+"""Vectorized integer hashing for LSketch.
+
+All hash machinery from the paper, ported to branch-free uint32 jnp ops:
+
+  * ``H(v)``: a murmur3-finalizer mix, truncated to 31 bits. The fingerprint
+    split follows GSS/LSketch exactly: ``s(v) = H(v) // F`` (block-relative,
+    reduced mod block width), ``f(v) = H(v) % F``.
+  * square hashing: the linear-congruence candidate list
+    ``l_1 = (T f + I) % M,  l_i = (T l_{i-1} + I) % M``  (paper Eq. 1)
+  * sampled probe cells: ``Sp_1 = (T (f(A)+f(B)) + I) % M``, iterated, with
+    subscripts ``A_i = (Sp_i // r) % r``, ``B_i = Sp_i % r`` (paper Eq. 3/4).
+
+T, I, M follow the classic LCG family the paper cites (L'Ecuyer '99 style
+parameters); M = 2^31 so all arithmetic stays in masked uint32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import IDX_RADIX
+
+# Linear-congruence constants (paper Eq. 1/3; L'Ecuyer-style generator).
+LCG_T = jnp.uint32(1103515245)
+LCG_I = jnp.uint32(12345)
+M_MASK = jnp.uint32(0x7FFFFFFF)  # M = 2**31
+
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def mix32(x, seed: int) -> jnp.ndarray:
+    """Murmur3 finalizer with seed; full-avalanche 32-bit mixer."""
+    h = _u32(x) ^ jnp.uint32(seed & 0xFFFFFFFF)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash31(x, seed: int) -> jnp.ndarray:
+    """H(.) in [0, 2^31): the paper's vertex hash before the fingerprint split."""
+    return (mix32(x, seed) & M_MASK).astype(jnp.int32)
+
+
+def fingerprint_split(h: jnp.ndarray, F: int, width) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split H(v) into (address s(v) in [0,width), fingerprint f(v) in [0,F)).
+
+    ``width`` may be a traced per-edge array (skewed blocking has per-block
+    widths).
+    """
+    f = h % jnp.int32(F)
+    s = (h // jnp.int32(F)) % jnp.asarray(width, jnp.int32)
+    return s.astype(jnp.int32), f.astype(jnp.int32)
+
+
+def lcg_next(x: jnp.ndarray) -> jnp.ndarray:
+    """One linear-congruence step in [0, 2^31)."""
+    return (LCG_T * _u32(x) + LCG_I) & M_MASK
+
+
+def candidate_offsets(f: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Candidate list l_1..l_r seeded by fingerprint f (paper Eq. 1).
+
+    Returns int32 [..., r]; offsets are reduced mod the block width at use
+    site (paper Eq. 2 applies ``% d`` at use).
+    """
+    outs = []
+    x = lcg_next(f)
+    for _ in range(r):
+        outs.append(x.astype(jnp.int32))
+        x = lcg_next(x)
+    return jnp.stack(outs, axis=-1)
+
+
+def sample_pairs(fa: jnp.ndarray, fb: jnp.ndarray, r: int, s: int):
+    """Sampled probe subscripts (A_i, B_i) for i=1..s (paper Eq. 3/4).
+
+    Returns (ai, bi): int32 [..., s] in [0, r).
+    """
+    ai, bi = [], []
+    x = lcg_next(_u32(fa) + _u32(fb))
+    for _ in range(s):
+        xi = x.astype(jnp.int32)
+        ai.append((xi // jnp.int32(r)) % jnp.int32(r))
+        bi.append(xi % jnp.int32(r))
+        x = lcg_next(x)
+    return jnp.stack(ai, axis=-1), jnp.stack(bi, axis=-1)
+
+
+def pack_key(ia, ib, fa, fb, F: int) -> jnp.ndarray:
+    """Pack (index pair, fingerprint pair) into one int32 key.
+
+    layout: ((ia * IDX_RADIX + ib) * F + fa) * F + fb  — with F <= 2048 and
+    ia, ib < 16 the max key is 2^30, safely positive int32 (EMPTY = -1).
+    """
+    idx = jnp.asarray(ia, jnp.int32) * IDX_RADIX + jnp.asarray(ib, jnp.int32)
+    return (idx * jnp.int32(F) + jnp.asarray(fa, jnp.int32)) * jnp.int32(F) + jnp.asarray(
+        fb, jnp.int32
+    )
+
+
+def unpack_key(key: jnp.ndarray, F: int):
+    """Inverse of pack_key -> (ia, ib, fa, fb). Undefined on EMPTY entries."""
+    fb = key % jnp.int32(F)
+    rest = key // jnp.int32(F)
+    fa = rest % jnp.int32(F)
+    idx = rest // jnp.int32(F)
+    ia = idx // jnp.int32(IDX_RADIX)
+    ib = idx % jnp.int32(IDX_RADIX)
+    return ia, ib, fa, fb
+
+
+def pack_vertex_id(m, s, f, F: int) -> jnp.ndarray:
+    """Canonical sketch-side vertex identity: (block m, address s, print f).
+
+    Used as the overflow-pool key and as the BFS node identity (the paper's
+    H(v) plus its block). Max = n_blocks * width * F; with d <= 2048 and
+    F <= 2048 this stays within int32.
+    """
+    return (jnp.asarray(m, jnp.int32) * jnp.int32(2048) + jnp.asarray(s, jnp.int32)) * jnp.int32(
+        F
+    ) + jnp.asarray(f, jnp.int32)
+
+
+def unpack_vertex_id(vid: jnp.ndarray, F: int):
+    f = vid % jnp.int32(F)
+    rest = vid // jnp.int32(F)
+    s = rest % jnp.int32(2048)
+    m = rest // jnp.int32(2048)
+    return m, s, f
+
+
+# ---- label hashing -------------------------------------------------------
+
+def vertex_label_block(label, n_blocks: int, seed: int) -> jnp.ndarray:
+    """m = H(l) % n  (paper Algorithm 1, line 2)."""
+    return (hash31(label, seed ^ 0x5B1D) % jnp.int32(n_blocks)).astype(jnp.int32)
+
+
+def edge_label_bucket(label, c: int, seed: int) -> jnp.ndarray:
+    """Edge-label bucket in [0, c): the paper's prime-number index H(l_e)%c."""
+    return (hash31(label, seed ^ 0x77E1) % jnp.int32(c)).astype(jnp.int32)
+
+
+def pool_slot_seq(pk_src: jnp.ndarray, pk_dst: jnp.ndarray, q: int, probes: int, seed: int):
+    """Open-addressing probe sequence for the additional pool: [..., probes]."""
+    h0 = mix32(_u32(pk_src) * jnp.uint32(0x9E3779B9) ^ _u32(pk_dst), seed ^ 0x0031)
+    base = (h0 & M_MASK).astype(jnp.int32) % jnp.int32(q)
+    offs = jnp.arange(probes, dtype=jnp.int32)
+    return (base[..., None] + offs) % jnp.int32(q)

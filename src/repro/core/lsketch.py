@@ -1,0 +1,233 @@
+"""LSketch construction: addressing, batched insertion, sliding window.
+
+Faithful port of the paper's Algorithms 1-2 with the TPU-native state layout
+of DESIGN.md §2. Everything here is functional: ``state -> state`` under
+``jax.jit`` with the config static.
+
+Insertion semantics are *identical* to the paper's sequential process:
+  - items are processed in stream order (``lax.fori_loop`` over the batch);
+  - each item probes its ``s`` sampled cells x 2 twin segments in order and
+    lands in the first slot whose stored (index-pair, fingerprint-pair) key
+    matches, or which is empty;
+  - otherwise it goes to the additional pool (open-addressing table);
+  - keys are never removed, so occupancy is monotone and first-fit is stable.
+
+The sliding window advances lazily: each batch is tagged with its logical
+subwindow index ``widx = t // W_s``; reusing a ring slot zeroes its counter
+planes. Query-time masking by ``slot_widx`` recency completes the semantics
+(equivalent to the paper's eager shift; property-tested against it).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing as hsh
+from .types import EMPTY, EdgeBatch, LSketchConfig, LSketchState, init_state
+
+
+class VertexAddressing(NamedTuple):
+    """Everything Algorithm 1 (Precompute) derives for one endpoint."""
+
+    m: jax.Array  # block index
+    start: jax.Array  # block start row/col
+    width: jax.Array  # block width
+    s: jax.Array  # initial address s(v) in [0, width)
+    f: jax.Array  # fingerprint f(v) in [0, F)
+    offs: jax.Array  # candidate offsets l_1..l_r  [..., r]
+    vid: jax.Array  # packed (m, s, f) sketch-side vertex identity
+
+
+def precompute(cfg: LSketchConfig, v, label) -> VertexAddressing:
+    """Paper Algorithm 1, vectorized over any batch shape."""
+    v = jnp.asarray(v, jnp.int32)
+    label = jnp.asarray(label, jnp.int32)
+    starts, widths = cfg.block_start_width()
+    m = hsh.vertex_label_block(label, cfg.n_blocks, cfg.seed)
+    start, width = starts[m], widths[m]
+    h = hsh.hash31(v, cfg.seed)
+    s, f = hsh.fingerprint_split(h, cfg.F, width)
+    offs = hsh.candidate_offsets(f, cfg.r)
+    vid = hsh.pack_vertex_id(m, s, f, cfg.F)
+    return VertexAddressing(m, start, width, s, f, offs, vid)
+
+
+class EdgeProbes(NamedTuple):
+    rows: jax.Array  # [..., s] absolute matrix rows
+    cols: jax.Array  # [..., s] absolute matrix cols
+    keys: jax.Array  # [..., s] packed candidate keys
+    pid_src: jax.Array  # packed pool id of the source
+    pid_dst: jax.Array  # packed pool id of the destination
+
+
+def edge_probes(cfg: LSketchConfig, pa: VertexAddressing, pb: VertexAddressing) -> EdgeProbes:
+    """The s sampled probe cells + keys for an edge (paper Eq. 3/4 + Alg. 2)."""
+    ai, bi = hsh.sample_pairs(pa.f, pb.f, cfg.r, cfg.s)  # [..., s]
+    off_a = jnp.take_along_axis(pa.offs, ai, axis=-1)
+    off_b = jnp.take_along_axis(pb.offs, bi, axis=-1)
+    p1 = (pa.s[..., None] + off_a) % pa.width[..., None]
+    p2 = (pb.s[..., None] + off_b) % pb.width[..., None]
+    rows = pa.start[..., None] + p1
+    cols = pb.start[..., None] + p2
+    keys = hsh.pack_key(ai, bi, pa.f[..., None], pb.f[..., None], cfg.F)
+    return EdgeProbes(rows, cols, keys, pa.vid, pb.vid)
+
+
+def window_index(cfg: LSketchConfig, t) -> jnp.ndarray:
+    return (jnp.asarray(t, jnp.int32) // jnp.int32(cfg.subwindow_size)).astype(jnp.int32)
+
+
+def valid_slot_mask(cfg: LSketchConfig, state: LSketchState, last: int | None = None):
+    """Boolean [k]: ring slots inside the sliding window (optionally the most
+    recent ``last`` subwindows only — time-restricted queries)."""
+    horizon = cfg.effective_k if last is None else min(last, cfg.effective_k)
+    return state.slot_widx > (state.cur_widx - jnp.int32(horizon))
+
+
+# --------------------------------------------------------------------------
+# insertion
+# --------------------------------------------------------------------------
+
+def _advance_window(cfg: LSketchConfig, state: LSketchState, widx):
+    """Claim the ring slot for subwindow ``widx``; zero it if being reused.
+
+    Returns (state, slot, live). A batch whose subwindow already expired
+    (stream far ahead of it) contributes nothing; caller masks with ``live``.
+    """
+    k = cfg.effective_k
+    slot = widx % jnp.int32(k)
+    stored = state.slot_widx[slot]
+    need_reset = stored != widx
+    live = widx >= stored  # widx < stored => slot owned by newer subwindow
+    rst = need_reset & live
+    C = state.C.at[:, :, :, slot].set(
+        jnp.where(rst, 0, state.C[:, :, :, slot]))
+    P = state.P.at[:, :, :, slot].set(
+        jnp.where(rst, 0, state.P[:, :, :, slot]))
+    pC = state.pool_C.at[:, slot].set(
+        jnp.where(rst, 0, state.pool_C[:, slot]))
+    pP = state.pool_P.at[:, slot].set(
+        jnp.where(rst, 0, state.pool_P[:, slot]))
+    slot_widx = state.slot_widx.at[slot].set(jnp.where(rst, widx, stored))
+    cur = jnp.maximum(state.cur_widx, widx)
+    new = LSketchState(
+        key=state.key, C=C, P=P, pool_key=state.pool_key, pool_C=pC,
+        pool_P=pP, pool_lost=state.pool_lost, slot_widx=slot_widx, cur_widx=cur)
+    return new, slot, live
+
+
+def _insert_loop(cfg: LSketchConfig, state: LSketchState, slot, live,
+                 probes: EdgeProbes, le_idx, weight) -> LSketchState:
+    """Sequential first-fit insertion of a pre-addressed batch (one subwindow)."""
+    n = probes.rows.shape[0]
+    pool_slots = hsh.pool_slot_seq(
+        probes.pid_src, probes.pid_dst, cfg.pool_capacity, cfg.pool_probes, cfg.seed)
+
+    def body(i, st: LSketchState) -> LSketchState:
+        rows, cols, key = probes.rows[i], probes.cols[i], probes.keys[i]
+        w = weight[i] * live.astype(weight.dtype)
+        le = le_idx[i]
+        # --- matrix probe: (s, 2) in paper order (probe-major, twin-minor)
+        cur = st.key[rows[:, None], cols[:, None], jnp.arange(2)[None, :]]
+        ok = (cur == key[:, None]) | (cur == EMPTY)
+        flat = ok.reshape(-1)
+        found = flat.any()
+        first = jnp.argmax(flat)
+        pi, tz = first // 2, first % 2
+        rr, cc = rows[pi], cols[pi]
+        old = st.key[rr, cc, tz]
+        new_key = st.key.at[rr, cc, tz].set(jnp.where(found, key[pi], old))
+        wm = jnp.where(found, w, 0)
+        C = st.C.at[rr, cc, tz, slot].add(wm)
+        P = st.P.at[rr, cc, tz, slot, le].add(wm)
+        # --- pool fallback
+        ps = pool_slots[i]
+        pk = st.pool_key[ps]
+        pmatch = (pk[:, 0] == probes.pid_src[i]) & (pk[:, 1] == probes.pid_dst[i])
+        pok = pmatch | (pk[:, 0] == EMPTY)
+        pfound = pok.any() & ~found & (w > 0)
+        pfirst = jnp.argmax(pok)
+        pslot = ps[pfirst]
+        pold = st.pool_key[pslot]
+        pool_key = st.pool_key.at[pslot, 0].set(
+            jnp.where(pfound, probes.pid_src[i], pold[0]))
+        pool_key = pool_key.at[pslot, 1].set(
+            jnp.where(pfound, probes.pid_dst[i], pold[1]))
+        pw = jnp.where(pfound, w, 0)
+        pool_C = st.pool_C.at[pslot, slot].add(pw)
+        pool_P = st.pool_P.at[pslot, slot, le].add(pw)
+        lost = st.pool_lost + jnp.where(~found & ~pok.any(), w, 0)
+        return LSketchState(
+            key=new_key, C=C, P=P, pool_key=pool_key, pool_C=pool_C,
+            pool_P=pool_P, pool_lost=lost, slot_widx=st.slot_widx,
+            cur_widx=st.cur_widx)
+
+    return jax.lax.fori_loop(0, n, body, state)
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def insert_window_batch(cfg: LSketchConfig, state: LSketchState,
+                        batch: EdgeBatch, widx: jax.Array) -> LSketchState:
+    """Insert a batch of items that all belong to subwindow ``widx``."""
+    pa = precompute(cfg, batch.src, batch.src_label)
+    pb = precompute(cfg, batch.dst, batch.dst_label)
+    probes = edge_probes(cfg, pa, pb)
+    le_idx = hsh.edge_label_bucket(batch.edge_label, cfg.c, cfg.seed)
+    state, slot, live = _advance_window(cfg, state, jnp.asarray(widx, jnp.int32))
+    return _insert_loop(cfg, state, slot, live, probes, le_idx,
+                        batch.weight.astype(state.C.dtype))
+
+
+def insert_batch(cfg: LSketchConfig, state: LSketchState, batch: EdgeBatch) -> LSketchState:
+    """Host wrapper: split a time-ordered batch at subwindow boundaries and
+    feed each chunk to the jit'd per-subwindow insert."""
+    t = np.asarray(batch.time)
+    widx = t // cfg.subwindow_size
+    # chunk boundaries where the subwindow index changes
+    cuts = np.flatnonzero(np.diff(widx)) + 1
+    starts = np.concatenate([[0], cuts])
+    ends = np.concatenate([cuts, [len(t)]])
+    for a, b in zip(starts, ends):
+        chunk = jax.tree.map(lambda x: x[a:b], batch)
+        state = insert_window_batch(cfg, state, chunk, int(widx[a]))
+    return state
+
+
+# --------------------------------------------------------------------------
+# friendly object API
+# --------------------------------------------------------------------------
+
+class LSketch:
+    """Stateful convenience wrapper around the functional core.
+
+    >>> sk = LSketch(LSketchConfig(d=64, n_blocks=2))
+    >>> sk.insert(src, dst, src_label, dst_label, edge_label, weight, time)
+    >>> sk.edge_weight(a, la, b, lb)
+    """
+
+    def __init__(self, cfg: LSketchConfig, state: LSketchState | None = None):
+        self.cfg = cfg
+        self.state = state if state is not None else init_state(cfg)
+
+    def insert(self, src, dst, src_label=None, dst_label=None,
+               edge_label=None, weight=None, time=None) -> "LSketch":
+        n = len(np.asarray(src))
+        z = np.zeros(n, np.int32)
+        batch = EdgeBatch(
+            src=jnp.asarray(src, jnp.int32),
+            dst=jnp.asarray(dst, jnp.int32),
+            src_label=jnp.asarray(z if src_label is None else src_label, jnp.int32),
+            dst_label=jnp.asarray(z if dst_label is None else dst_label, jnp.int32),
+            edge_label=jnp.asarray(z if edge_label is None else edge_label, jnp.int32),
+            weight=jnp.asarray(np.ones(n, np.int32) if weight is None else weight, jnp.int32),
+            time=jnp.asarray(z if time is None else time, jnp.int32),
+        )
+        self.state = insert_batch(self.cfg, self.state, batch)
+        return self
+
+    # query methods are attached in queries.py to keep this module focused

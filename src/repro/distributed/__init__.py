@@ -1,0 +1,10 @@
+from .checkpoint import CheckpointManager
+from .elastic import ElasticController, make_elastic_mesh, plan_mesh, resharding_specs
+from .fault_tolerance import (HeartbeatMonitor, HostClock, HotSparePool,
+                              RestartLoop, StragglerPolicy)
+from .sharding_ctx import ShardingCtx, constrain, use_sharding_ctx
+
+__all__ = ["CheckpointManager", "ElasticController", "make_elastic_mesh",
+           "plan_mesh", "resharding_specs", "HeartbeatMonitor", "HostClock",
+           "HotSparePool", "RestartLoop", "StragglerPolicy", "ShardingCtx",
+           "constrain", "use_sharding_ctx"]

@@ -1,0 +1,78 @@
+"""Elastic scaling: re-derive the mesh and reshard state across resizes.
+
+A checkpoint saved under mesh A restores under mesh B because leaves are
+stored unsharded and placement happens at restore time from the *new*
+mesh's PartitionSpecs (checkpoint.py). This module supplies the pieces
+around that:
+
+  * ``plan_mesh(n_chips)`` — factor an arbitrary healthy-chip count into
+    the (data, model) grid closest to the configured aspect ratio
+    (model axis capped by attention-head divisibility);
+  * ``resharding_specs`` — the new NamedSharding tree for a config;
+  * ``ElasticController`` — decides shrink/grow from the health sweep and
+    coordinates: drain -> checkpoint -> remesh -> restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+
+
+def plan_mesh(n_chips: int, model_max: int = 16,
+              prefer_model: int = 16) -> Tuple[int, int]:
+    """(data, model) factorization of n_chips; model <= model_max and
+    divides n_chips; prefer the largest model extent <= prefer_model."""
+    best = (n_chips, 1)
+    for m in range(min(model_max, prefer_model), 0, -1):
+        if n_chips % m == 0:
+            best = (n_chips // m, m)
+            break
+    return best
+
+
+def make_elastic_mesh(n_chips: int, devices=None):
+    data, model = plan_mesh(n_chips)
+    devices = devices if devices is not None else jax.devices()[:n_chips]
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+def resharding_specs(cfg, opt_cfg, mesh):
+    # imported lazily: launch.step_fns pulls the model stack, which itself
+    # uses repro.distributed (sharding_ctx) — keep this module light
+    from repro.launch.shardings import to_named
+    from repro.launch.step_fns import train_state_specs
+    specs = train_state_specs(cfg, opt_cfg, ("data",), "model")
+    return to_named(specs, mesh)
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    kind: str  # "shrink" | "grow" | "steady"
+    n_chips: int
+    mesh_shape: Tuple[int, int]
+
+
+class ElasticController:
+    """Chooses the mesh for the current healthy-host set."""
+
+    def __init__(self, chips_per_host: int = 4, min_chips: int = 2):
+        self.chips_per_host = chips_per_host
+        self.min_chips = min_chips
+        self.current: Tuple[int, int] | None = None
+
+    def evaluate(self, healthy_hosts: List[str]) -> ElasticEvent:
+        n = max(self.min_chips, len(healthy_hosts) * self.chips_per_host)
+        shape = plan_mesh(n)
+        if self.current is None or shape == self.current:
+            kind = "steady"
+        elif shape[0] * shape[1] < self.current[0] * self.current[1]:
+            kind = "shrink"
+        else:
+            kind = "grow"
+        self.current = shape
+        return ElasticEvent(kind=kind, n_chips=n, mesh_shape=shape)

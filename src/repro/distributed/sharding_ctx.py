@@ -1,0 +1,103 @@
+"""Logical activation-sharding context.
+
+Model code calls ``constrain(x, "dp", None, "tp", ...)`` with *logical* axis
+names; the launcher installs the mesh resolution once
+(``use_sharding_ctx(mesh)``). Outside a context the calls are no-ops, so CPU
+smoke tests and single-device examples run unchanged.
+
+Logical axes:
+  "dp"   -> the data-parallel axes (("pod","data") multi-pod, ("data",))
+  "tp"   -> "model"
+  "fsdp" -> ("data",)  (weight-sharding axis for manual constraints)
+  "sp"   -> "model"    (sequence-parallel option used by the perf pass)
+  None   -> unsharded
+
+Divisibility guard: any axis whose size doesn't divide the corresponding
+mesh extent degrades to None rather than erroring — the same constraint
+code serves every (arch x shape x mesh) cell.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current():
+    return getattr(_STATE, "ctx", None)
+
+
+class ShardingCtx:
+    def __init__(self, mesh, enable_sp: bool = False):
+        self.mesh = mesh
+        names = mesh.axis_names
+        multi = "pod" in names
+        self.logical = {
+            "dp": ("pod", "data") if multi else ("data",),
+            "fsdp": ("data",),
+            "tp": ("model",),
+            "sp": ("model",),
+            "ep": ("model",),
+            # full flattening: batch over every mesh axis (attention fallback
+            # when heads don't divide the model axis, §Perf cell B)
+            "dpx": (("pod", "data", "model") if multi
+                    else ("data", "model")),
+        }
+        self.enable_sp = enable_sp
+
+    def axis_size(self, axes) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def resolve(self, logical, shape):
+        """Left-to-right greedy: each logical name claims its mesh axes only
+        if the dim divides; claimed axes can't be reused. "sp" placed after
+        "tp" therefore acts as an automatic fallback — e.g. attention score
+        [B, H, Lq, Lk] with constrain(s, "dp", "tp", "sp", None): when H
+        divides the model axis it takes it (head parallelism); when it
+        doesn't (smollm's 9 heads on a 16-way axis), Lq takes it instead
+        (sequence parallelism) rather than replicating the quadratic."""
+        spec = []
+        used = set()
+        for dim, name in zip(shape, logical):
+            if name is None:
+                spec.append(None)
+                continue
+            axes = self.logical[name]
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                spec.append(None)
+                continue
+            n = self.axis_size(axes)
+            if dim % n == 0 and dim >= n:
+                spec.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+            else:
+                spec.append(None)
+        return P(*spec)
+
+
+@contextlib.contextmanager
+def use_sharding_ctx(mesh, enable_sp: bool = False):
+    prev = _current()
+    _STATE.ctx = ShardingCtx(mesh, enable_sp=enable_sp)
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x, *logical):
+    """Apply a logical sharding constraint (no-op outside a context)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = ctx.resolve(logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel package ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (binning, window-plane slicing, fallbacks)
+  ref.py    — pure-jnp oracle, the correctness contract
+
+Kernels:
+  sketch_insert   — block-binned batched LSketch insertion. The paper's
+                    Storage Blocks Division *is* the BlockSpec tiling: grid
+                    cell (mA, mB) owns the (b, b) tile of the storage matrix,
+                    streams its bin of edges through VMEM, first-fit probes
+                    twin cells exactly like the sequential algorithm.
+  sketch_query    — batched edge-weight queries on window-reduced planes.
+  vertex_scan     — batched vertex aggregate queries (r-row masked reduction).
+  flash_attention — blockwise-softmax causal attention for the LM substrate.
+
+This container is CPU-only: kernels are *validated* with interpret=True
+(Python execution of the kernel body) against ref.py across shape/dtype
+sweeps; TPU is the compile target.
+"""

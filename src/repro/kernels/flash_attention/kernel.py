@@ -1,0 +1,101 @@
+"""Pallas kernel: blockwise-softmax (flash) attention for the LM substrate.
+
+Standard IO-aware attention with explicit BlockSpec VMEM tiling:
+
+  grid = (batch * q_heads, q_len // BQ, kv_len // BK)
+  q tile   (BQ, dh)  revisited across the kv axis (Pallas keeps it in VMEM),
+  k/v tile (BK, dh)  streamed,
+  online-softmax running (m, l, acc) in VMEM scratch, f32 accumulation.
+
+GQA is handled by the kv head index map (q head h reads kv head
+h // group_size). The causal mask is applied from the absolute block
+offsets; fully-masked kv blocks are skipped structurally by the grid lower
+bound where possible (here: masked — Mosaic hoists the comparison).
+
+MXU alignment: BQ/BK default 128, head_dim padded to a multiple of 128 by
+the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, bq: int, bk: int, causal: bool, scale: float,
+                kv_blocks: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, dh]
+    k = k_ref[0].astype(jnp.float32)  # [bk, dh]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+    if causal:
+        qi = pl.program_id(1) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        ki = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qi >= ki, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(kb == kv_blocks - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True, bq: int = 128,
+                           bk: int = 128, interpret: bool = True):
+    """q: [B, Hq, Lq, dh]; k/v: [B, Hkv, Lk, dh]. Returns [B, Hq, Lq, dh].
+
+    Hq must be a multiple of Hkv (GQA); Lq % bq == 0, Lk % bk == 0.
+    """
+    B, Hq, Lq, dh = q.shape
+    _, Hkv, Lk, _ = k.shape
+    assert Hq % Hkv == 0 and Lq % bq == 0 and Lk % bk == 0
+    group = Hq // Hkv
+    qf = q.reshape(B * Hq, Lq, dh)
+    kf = k.reshape(B * Hkv, Lk, dh)
+    vf = v.reshape(B * Hkv, Lk, dh)
+    kv_blocks = Lk // bk
+    scale = 1.0 / (dh ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_body, bq=bq, bk=bk, causal=causal,
+                          scale=scale, kv_blocks=kv_blocks),
+        grid=(B * Hq, Lq // bq, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Lq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max  m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum  l
+            pltpu.VMEM((bq, dh), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Lq, dh)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (f32 softmax attention with GQA)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, causal: bool = True):
+    """q: [B, Hq, Lq, dh]; k/v: [B, Hkv, Lk, dh] -> [B, Hq, Lq, dh]."""
+    B, Hq, Lq, dh = q.shape
+    _, Hkv, Lk, _ = k.shape
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / (dh ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((Lq, Lk), bool), k=Lk - Lq)
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)

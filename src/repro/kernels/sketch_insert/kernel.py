@@ -1,0 +1,129 @@
+"""Pallas kernel: block-binned LSketch batch insertion.
+
+TPU mapping of the paper's hot loop (Algorithm 2, lines 10-23):
+
+  * grid = (n_blocks, n_blocks): one grid step per storage block (mA, mB) —
+    the paper's Storage Blocks Division becomes the BlockSpec tiling, so the
+    (b, b) tile of `key`/`C`/`P` lives in VMEM for the whole bin.
+  * the edge bin of a block arrives as padded rows of a (n^2, max_bin, ...)
+    tensor (BlockSpec row-select); padding has weight 0.
+  * within a bin, edges are processed in stream order (`fori_loop`) with the
+    exact sequential first-fit semantics: s sampled probe cells x 2 twin
+    segments, first (key-match | empty) slot wins; failures are flagged for
+    the host-side additional-pool path.
+  * state tensors are updated in place (input_output_aliases).
+
+VMEM budget per grid step (b=128, c=8, int32): key 2*128*128*4 = 128 KiB,
+C plane 128 KiB, P plane 1 MiB, bin arrays O(max_bin*s) — comfortably inside
+the ~16 MiB/core budget; b and max_bin are the tuning knobs.
+
+TPU layout note: the twin axis is kept leading ((2, b, b) tiles) so the
+trailing two dims are lane/sublane-aligned multiples of (8, 128) when b is a
+multiple of 128. Scalar probe reads/writes lower to single-element
+dynamic slices — the same access pattern production paged-KV kernels use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EMPTY = -1
+
+
+def _insert_body(rows_ref, cols_ref, keys_ref, le_ref, w_ref,
+                 key_in, c_in, p_in,  # aliased with the out refs below
+                 key_ref, c_ref, p_ref, ok_ref,
+                 *, s: int, max_bin: int):
+    """One storage block: stream the bin through the VMEM tile.
+
+    The state refs are input/output-aliased: ``key_ref``/``c_ref``/``p_ref``
+    hold the input tile on entry and are updated in place.
+    """
+    del key_in, c_in, p_in  # same buffers as the out refs
+
+    def edge(i, _):
+        w = w_ref[0, i]
+        # gather the s*2 candidate slots in paper order (probe-major)
+        cand = []
+        for pi in range(s):
+            r = rows_ref[0, i, pi]
+            c = cols_ref[0, i, pi]
+            kw = keys_ref[0, i, pi]
+            for tz in range(2):
+                cur = key_ref[tz, r, c]
+                cand.append((cur == kw) | (cur == EMPTY))
+        okv = jnp.stack(cand)  # [s*2]
+        found = okv.any() & (w > 0)
+        first = jnp.argmax(okv)
+        pi_sel = first // 2
+        tz_sel = first % 2
+
+        # select the winning coordinates (static gather over s alternatives)
+        r_sel = jnp.int32(0)
+        c_sel = jnp.int32(0)
+        k_sel = jnp.int32(0)
+        for pi in range(s):
+            hit = pi_sel == pi
+            r_sel = jnp.where(hit, rows_ref[0, i, pi], r_sel)
+            c_sel = jnp.where(hit, cols_ref[0, i, pi], c_sel)
+            k_sel = jnp.where(hit, keys_ref[0, i, pi], k_sel)
+
+        old_key = jnp.where(tz_sel == 0, key_ref[0, r_sel, c_sel],
+                            key_ref[1, r_sel, c_sel])
+        new_key = jnp.where(found, k_sel, old_key)
+        wm = jnp.where(found, w, 0)
+        le = le_ref[0, i]
+
+        for tz in range(2):
+            sel = (tz_sel == tz) & found
+            key_ref[tz, r_sel, c_sel] = jnp.where(sel, new_key,
+                                                  key_ref[tz, r_sel, c_sel])
+            c_ref[tz, r_sel, c_sel] = c_ref[tz, r_sel, c_sel] + jnp.where(
+                sel, wm, 0)
+            p_ref[tz, r_sel, c_sel, le] = p_ref[tz, r_sel, c_sel, le] + \
+                jnp.where(sel, wm, 0)
+        ok_ref[0, i] = found
+        return _
+
+    jax.lax.fori_loop(0, max_bin, edge, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "b", "s", "c",
+                                             "max_bin", "interpret"))
+def sketch_insert_kernel(rows, cols, keys, le, w, key, C_plane, P_plane,
+                         *, n_blocks: int, b: int, s: int, c: int,
+                         max_bin: int, interpret: bool = True):
+    """rows/cols: [n^2, max_bin, s] block-relative probe coords;
+    keys: [n^2, max_bin, s]; le/w: [n^2, max_bin];
+    key/C_plane: [2, d, d]; P_plane: [2, d, d, c]  (current-slot planes).
+
+    Returns (key, C_plane, P_plane, inserted_flags[n^2, max_bin]).
+    """
+    n2 = n_blocks * n_blocks
+    grid = (n_blocks, n_blocks)
+
+    bin_spec3 = pl.BlockSpec((1, max_bin, s), lambda i, j: (i * n_blocks + j, 0, 0))
+    bin_spec2 = pl.BlockSpec((1, max_bin), lambda i, j: (i * n_blocks + j, 0))
+    tile = pl.BlockSpec((2, b, b), lambda i, j: (0, i, j))
+    tile_p = pl.BlockSpec((2, b, b, c), lambda i, j: (0, i, j, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_insert_body, s=s, max_bin=max_bin),
+        grid=grid,
+        in_specs=[bin_spec3, bin_spec3, bin_spec3, bin_spec2, bin_spec2,
+                  tile, tile, tile_p],
+        out_specs=[tile, tile, tile_p, bin_spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct(key.shape, key.dtype),
+            jax.ShapeDtypeStruct(C_plane.shape, C_plane.dtype),
+            jax.ShapeDtypeStruct(P_plane.shape, P_plane.dtype),
+            jax.ShapeDtypeStruct((n2, max_bin), jnp.bool_),
+        ],
+        input_output_aliases={5: 0, 6: 1, 7: 2},
+        interpret=interpret,
+    )(rows, cols, keys, le, w, key, C_plane, P_plane)
+    return out

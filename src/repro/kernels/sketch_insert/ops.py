@@ -1,0 +1,126 @@
+"""Public wrapper for the block-binned Pallas insertion kernel.
+
+Pipeline (DESIGN.md §2 "binned batch insertion"):
+  1. advance the sliding window (claim/zero the ring slot);
+  2. vectorized addressing: probes, keys, block ids for the whole batch;
+  3. stable binning by destination block (order within a block == stream
+     order, so first-fit semantics match the sequential algorithm exactly);
+  4. Pallas kernel over the (n x n) block grid, current-slot planes in VMEM;
+  5. host-side additional-pool pass for the (rare) all-probes-occupied edges,
+     in original stream order.
+
+Restrictions: uniform blocking only (equal tiles — skewed blocking falls
+back to `repro.core.insert_window_batch`, the fori-loop path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing as hsh
+from repro.core.lsketch import _advance_window, edge_probes, precompute
+from repro.core.types import EdgeBatch, LSketchConfig, LSketchState
+
+from .kernel import sketch_insert_kernel
+
+
+def _pool_pass(cfg: LSketchConfig, state: LSketchState, slot, probes, le_idx,
+               weight, failed) -> LSketchState:
+    """Additional-pool insertion for edges the matrix rejected (stream order)."""
+    pool_slots = hsh.pool_slot_seq(probes.pid_src, probes.pid_dst,
+                                   cfg.pool_capacity, cfg.pool_probes, cfg.seed)
+    n = weight.shape[0]
+
+    def body(i, st: LSketchState) -> LSketchState:
+        w = jnp.where(failed[i], weight[i], 0)
+        ps = pool_slots[i]
+        pk = st.pool_key[ps]
+        pmatch = (pk[:, 0] == probes.pid_src[i]) & (pk[:, 1] == probes.pid_dst[i])
+        pok = pmatch | (pk[:, 0] == jnp.int32(-1))
+        pfound = pok.any() & (w > 0)
+        pfirst = jnp.argmax(pok)
+        pslot = ps[pfirst]
+        pold = st.pool_key[pslot]
+        pool_key = st.pool_key.at[pslot, 0].set(
+            jnp.where(pfound, probes.pid_src[i], pold[0]))
+        pool_key = pool_key.at[pslot, 1].set(
+            jnp.where(pfound, probes.pid_dst[i], pold[1]))
+        pw = jnp.where(pfound, w, 0)
+        pool_C = st.pool_C.at[pslot, slot].add(pw)
+        pool_P = st.pool_P.at[pslot, slot, le_idx[i]].add(pw)
+        lost = st.pool_lost + jnp.where((w > 0) & ~pok.any(), w, 0)
+        return LSketchState(key=st.key, C=st.C, P=st.P, pool_key=pool_key,
+                            pool_C=pool_C, pool_P=pool_P, pool_lost=lost,
+                            slot_widx=st.slot_widx, cur_widx=st.cur_widx)
+
+    return jax.lax.fori_loop(0, n, body, state)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("max_bin", "interpret"),
+                   donate_argnums=1)
+def insert_window_batch_pallas(cfg: LSketchConfig, state: LSketchState,
+                               batch: EdgeBatch, widx,
+                               max_bin: int | None = None,
+                               interpret: bool = True) -> LSketchState:
+    """Drop-in replacement for ``repro.core.insert_window_batch``."""
+    if cfg.block_bounds is not None:
+        raise ValueError("Pallas path supports uniform blocking only")
+    n, b = cfg.n_blocks, cfg.b
+    B = batch.src.shape[0]
+    max_bin = B if max_bin is None else max_bin
+
+    pa = precompute(cfg, batch.src, batch.src_label)
+    pb = precompute(cfg, batch.dst, batch.dst_label)
+    probes = edge_probes(cfg, pa, pb)
+    le_idx = hsh.edge_label_bucket(batch.edge_label, cfg.c, cfg.seed)
+    state, slot, live = _advance_window(cfg, state, jnp.asarray(widx, jnp.int32))
+    weight = batch.weight.astype(state.C.dtype) * live.astype(state.C.dtype)
+
+    # --- stable binning by destination block ---
+    bid = pa.m * jnp.int32(n) + pb.m  # [B]
+    order = jnp.argsort(bid, stable=True)
+    bid_s = bid[order]
+    counts = jnp.bincount(bid, length=n * n)
+    offs = jnp.cumsum(counts) - counts
+    pos = jnp.arange(B, dtype=jnp.int32) - offs[bid_s].astype(jnp.int32)
+    ok_pos = pos < max_bin  # static max_bin >= B makes this all-true
+
+    def to_bins(x, fill=0):
+        shape = (n * n, max_bin) + x.shape[1:]
+        out = jnp.full(shape, fill, x.dtype)
+        return out.at[bid_s, pos].set(x[order], mode="drop")
+
+    rows_rel = probes.rows - (pa.m * jnp.int32(b))[:, None]
+    cols_rel = probes.cols - (pb.m * jnp.int32(b))[:, None]
+    rows_b = to_bins(rows_rel)
+    cols_b = to_bins(cols_rel)
+    keys_b = to_bins(probes.keys)
+    le_b = to_bins(le_idx)
+    w_b = to_bins(weight)
+
+    # --- current-slot planes, twin-leading layout ---
+    key_t = jnp.moveaxis(state.key, 2, 0)  # [2, d, d]
+    C_t = jnp.moveaxis(state.C[..., slot], 2, 0)  # [2, d, d]
+    P_t = jnp.moveaxis(state.P[..., slot, :], 2, 0)  # [2, d, d, c]
+
+    key_t, C_t, P_t, flags = sketch_insert_kernel(
+        rows_b, cols_b, keys_b, le_b, w_b, key_t, C_t, P_t,
+        n_blocks=n, b=b, s=cfg.s, c=cfg.c, max_bin=max_bin,
+        interpret=interpret)
+
+    new_key = jnp.moveaxis(key_t, 0, 2)
+    new_C = state.C.at[..., slot].set(jnp.moveaxis(C_t, 0, 2))
+    new_P = state.P.at[..., slot, :].set(jnp.moveaxis(P_t, 0, 2))
+    state = LSketchState(key=new_key, C=new_C, P=new_P,
+                         pool_key=state.pool_key, pool_C=state.pool_C,
+                         pool_P=state.pool_P, pool_lost=state.pool_lost,
+                         slot_widx=state.slot_widx, cur_widx=state.cur_widx)
+
+    # --- un-bin the inserted flags back to stream order; pool pass ---
+    flags_sorted = flags[bid_s, pos] & ok_pos
+    inserted = jnp.zeros((B,), jnp.bool_).at[order].set(flags_sorted)
+    failed = (~inserted) & (weight > 0)
+    return _pool_pass(cfg, state, slot, probes, le_idx, weight, failed)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the sketch_insert kernel.
+
+The contract: ``insert_window_batch_pallas(cfg, state, batch, widx)`` must
+produce a state *identical* to the sequential fori-loop reference
+``repro.core.insert_window_batch`` (which itself is validated against the
+paper-literal prime-product Python oracle in tests/test_core_vs_prime.py).
+
+Identity holds exactly because (a) binning is stable, so per-block stream
+order is preserved and first-fit choices match, and (b) the matrix and pool
+are disjoint state, so running the pool pass after the matrix pass cannot
+change any outcome.
+"""
+
+from repro.core.lsketch import insert_window_batch as reference_insert
+
+__all__ = ["reference_insert"]

@@ -1,0 +1,83 @@
+"""Pallas kernel: batched LSketch edge-weight queries.
+
+Grid = query chunks; the window-reduced state planes (key / Cw / Pw) are
+VMEM-resident for the whole call (BlockSpec = whole array; fits for d <= 512
+with small c — the telemetry regime; larger sketches use the block-binned
+formulation of sketch_insert).
+
+Per query the kernel replays the insertion walk: s probe cells x 2 twins in
+order, stopping at the first key match (weight found) or first empty slot
+(edge provably absent from the matrix). The all-occupied-mismatch case sets
+``go_pool`` and is resolved by the wrapper with a vectorized pool lookup.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EMPTY = -1
+
+
+def _query_body(rows_ref, cols_ref, keys_ref, le_ref,
+                key_ref, cw_ref, pw_ref,
+                w_ref, wl_ref, pool_ref, *, s: int, chunk: int):
+    def one(q, _):
+        # ordered probe walk, stop at first (match | empty)
+        done = jnp.bool_(False)
+        hit = jnp.bool_(False)
+        w = jnp.int32(0)
+        wl = jnp.int32(0)
+        le = le_ref[0, q]
+        for pi in range(s):
+            r = rows_ref[0, q, pi]
+            c = cols_ref[0, q, pi]
+            kw = keys_ref[0, q, pi]
+            for tz in range(2):
+                cur = key_ref[tz, r, c]
+                is_m = (cur == kw) & ~done
+                is_e = (cur == EMPTY) & ~done
+                w = jnp.where(is_m, cw_ref[tz, r, c], w)
+                wl = jnp.where(is_m, pw_ref[tz, r, c, le], wl)
+                hit = hit | is_m
+                done = done | is_m | is_e
+        w_ref[0, q] = w
+        wl_ref[0, q] = wl
+        pool_ref[0, q] = ~done  # every slot occupied-mismatch -> ask the pool
+        return _
+
+    jax.lax.fori_loop(0, chunk, one, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "s", "c", "chunk", "interpret"))
+def sketch_query_kernel(rows, cols, keys, le, key_plane, cw, pw,
+                        *, d: int, s: int, c: int, chunk: int = 128,
+                        interpret: bool = True):
+    """rows/cols/keys: [nq, s]; le: [nq] label-bucket index;
+    key_plane/cw: [2, d, d]; pw: [2, d, d, c].
+    Returns (w [nq], w_label [nq], go_pool [nq])."""
+    nq = rows.shape[0]
+    assert nq % chunk == 0, "pad queries to a chunk multiple"
+    grid = (nq // chunk,)
+    qs3 = pl.BlockSpec((1, chunk, s), lambda i: (i, 0, 0))
+    qs2 = pl.BlockSpec((1, chunk), lambda i: (i, 0))
+    full3 = pl.BlockSpec(key_plane.shape, lambda i: (0, 0, 0))
+    full4 = pl.BlockSpec(pw.shape, lambda i: (0, 0, 0, 0))
+    w, wl, go_pool = pl.pallas_call(
+        functools.partial(_query_body, s=s, chunk=chunk),
+        grid=grid,
+        in_specs=[qs3, qs3, qs3, qs2, full3, full3, full4],
+        out_specs=[qs2, qs2, qs2],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq // chunk, chunk), cw.dtype),
+            jax.ShapeDtypeStruct((nq // chunk, chunk), pw.dtype),
+            jax.ShapeDtypeStruct((nq // chunk, chunk), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(rows.reshape(nq // chunk, chunk, s), cols.reshape(nq // chunk, chunk, s),
+      keys.reshape(nq // chunk, chunk, s), le.reshape(nq // chunk, chunk),
+      key_plane, cw, pw)
+    return w.reshape(nq), wl.reshape(nq), go_pool.reshape(nq)

@@ -1,0 +1,64 @@
+"""Wrapper for the batched edge-query kernel: window reduction, pool path."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing as hsh
+from repro.core.lsketch import edge_probes, precompute, valid_slot_mask
+from repro.core.types import LSketchConfig, LSketchState
+
+from .kernel import sketch_query_kernel
+
+
+def _pad_to(x, mult, fill=0):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    padding = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, padding, constant_values=fill), n
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5), static_argnames=("interpret",))
+def edge_query_pallas(cfg: LSketchConfig, state: LSketchState, src, dst,
+                      labels, last: int | None = None, interpret: bool = True):
+    """Kernel-backed equivalent of ``repro.core.edge_query`` (both outputs)."""
+    la, lb, le = labels
+    pa = precompute(cfg, src, la)
+    pb = precompute(cfg, dst, lb)
+    pr = edge_probes(cfg, pa, pb)
+    le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed)
+    mask = valid_slot_mask(cfg, state, last).astype(state.C.dtype)
+
+    key_plane = jnp.moveaxis(state.key, 2, 0)
+    cw = jnp.moveaxis(jnp.sum(state.C * mask, -1), 2, 0)
+    pw = jnp.moveaxis(jnp.sum(state.P * mask[:, None], -2), 2, 0)
+
+    rows, n = _pad_to(pr.rows, 128)
+    cols, _ = _pad_to(pr.cols, 128)
+    keys, _ = _pad_to(pr.keys, 128, fill=-2)  # -2 never matches, never EMPTY
+    lei, _ = _pad_to(le_idx, 128)
+    w, wl, go_pool = sketch_query_kernel(
+        rows, cols, keys, lei, key_plane, cw, pw,
+        d=cfg.d, s=cfg.s, c=cfg.c, interpret=interpret)
+    w, wl, go_pool = w[:n], wl[:n], go_pool[:n]
+
+    # pool lookup for all-occupied-mismatch queries (vectorized)
+    ps = hsh.pool_slot_seq(pr.pid_src, pr.pid_dst, cfg.pool_capacity,
+                           cfg.pool_probes, cfg.seed)
+    pk = state.pool_key[ps]
+    pmatch = (pk[..., 0] == pr.pid_src[:, None]) & (pk[..., 1] == pr.pid_dst[:, None])
+    pany = pmatch.any(-1)
+    pfirst = jnp.argmax(pmatch, -1)
+    pslot = jnp.take_along_axis(ps, pfirst[:, None], -1)[:, 0]
+    maskk = valid_slot_mask(cfg, state, last).astype(state.pool_C.dtype)
+    w_p = jnp.sum(state.pool_C[pslot] * maskk, -1)
+    wl_p = jnp.take_along_axis(
+        jnp.sum(state.pool_P[pslot] * maskk[:, None], -2),
+        le_idx[:, None].astype(jnp.int32), -1)[:, 0]
+    sel = go_pool & pany
+    return w + jnp.where(sel, w_p, 0), wl + jnp.where(sel, wl_p, 0)

@@ -1,0 +1,7 @@
+"""Oracle for sketch_query: ``repro.core.edge_query`` with with_edge_label
+True/False — the pure-jnp path validated against the paper-literal Python
+implementation. The kernel must agree exactly (integer counters)."""
+
+from repro.core.queries import edge_query as reference_edge_query
+
+__all__ = ["reference_edge_query"]

@@ -1,0 +1,74 @@
+"""Pallas kernel: batched vertex aggregate queries (paper Algorithm 4).
+
+The TPU-shaped sketch query: for each queried vertex, its r candidate rows
+are scanned across all d columns x 2 twins — a masked reduction that maps
+straight onto the VPU (row loads are contiguous lane vectors; the key-field
+decode is integer element-wise math; the label select is a one-hot dot).
+
+Grid = query chunks; state planes VMEM-resident as in sketch_query.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EMPTY = -1
+IDX_RADIX = 16
+
+
+def _scan_body(lines_ref, f_ref, le_ref, key_ref, cw_ref, pw_ref,
+               w_ref, wl_ref, *, r: int, F: int, c: int, chunk: int):
+    def one(q, _):
+        f = f_ref[0, q]
+        le = le_ref[0, q]
+        w = jnp.int32(0)
+        wl = jnp.int32(0)
+        for i in range(r):  # static unroll over candidate rows
+            row = lines_ref[0, q, i]
+            krow = key_ref[:, row, :]  # [2, d] contiguous lane vector
+            rest = krow // jnp.int32(F)
+            fa = rest % jnp.int32(F)
+            ia = (rest // jnp.int32(F)) // jnp.int32(IDX_RADIX)
+            match = (krow != EMPTY) & (ia == i) & (fa == f)
+            w = w + jnp.sum(jnp.where(match, cw_ref[:, row, :], 0))
+            onehot = (jnp.arange(c, dtype=jnp.int32) == le).astype(jnp.int32)
+            prow = jnp.sum(pw_ref[:, row, :, :] * onehot, axis=-1)  # [2, d]
+            wl = wl + jnp.sum(jnp.where(match, prow, 0))
+        w_ref[0, q] = w
+        wl_ref[0, q] = wl
+        return _
+
+    jax.lax.fori_loop(0, chunk, one, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "F", "c", "chunk", "interpret"))
+def vertex_scan_kernel(lines, f, le, key_plane, cw, pw,
+                       *, r: int, F: int, c: int, chunk: int = 128,
+                       interpret: bool = True):
+    """lines: [nq, r] absolute candidate rows; f/le: [nq];
+    key_plane/cw: [2, d, d]; pw: [2, d, d, c].
+    Returns (w [nq], w_label [nq])."""
+    nq = lines.shape[0]
+    assert nq % chunk == 0
+    grid = (nq // chunk,)
+    qs2 = pl.BlockSpec((1, chunk, r), lambda i: (i, 0, 0))
+    qs1 = pl.BlockSpec((1, chunk), lambda i: (i, 0))
+    full3 = pl.BlockSpec(key_plane.shape, lambda i: (0, 0, 0))
+    full4 = pl.BlockSpec(pw.shape, lambda i: (0, 0, 0, 0))
+    w, wl = pl.pallas_call(
+        functools.partial(_scan_body, r=r, F=F, c=c, chunk=chunk),
+        grid=grid,
+        in_specs=[qs2, qs1, qs1, full3, full3, full4],
+        out_specs=[qs1, qs1],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq // chunk, chunk), cw.dtype),
+            jax.ShapeDtypeStruct((nq // chunk, chunk), pw.dtype),
+        ],
+        interpret=interpret,
+    )(lines.reshape(nq // chunk, chunk, r), f.reshape(nq // chunk, chunk),
+      le.reshape(nq // chunk, chunk), key_plane, cw, pw)
+    return w.reshape(nq), wl.reshape(nq)

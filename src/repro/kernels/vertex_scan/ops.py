@@ -1,0 +1,76 @@
+"""Wrapper for the vertex aggregate query kernel (out/in, pool included)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing as hsh
+from repro.core.lsketch import precompute, valid_slot_mask
+from repro.core.types import LSketchConfig, LSketchState
+
+from .kernel import vertex_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5),
+                   static_argnames=("interpret",))
+def vertex_query_pallas(cfg: LSketchConfig, state: LSketchState, vertex,
+                        labels, direction: str = "out",
+                        last: int | None = None, interpret: bool = True):
+    """Kernel-backed equivalent of ``repro.core.vertex_query``."""
+    lv, le = labels
+    pre = precompute(cfg, vertex, lv)
+    le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed)
+    mask = valid_slot_mask(cfg, state, last).astype(state.C.dtype)
+
+    key_plane = jnp.moveaxis(state.key, 2, 0)
+    cw = jnp.moveaxis(jnp.sum(state.C * mask, -1), 2, 0)
+    pw = jnp.moveaxis(jnp.sum(state.P * mask[:, None], -2), 2, 0)
+    if direction == "in":  # scan columns: transpose planes, swap key fields
+        key_plane = jnp.swapaxes(key_plane, 1, 2)
+        cw = jnp.swapaxes(cw, 1, 2)
+        pw = jnp.swapaxes(pw, 1, 2)
+        # swap (ia, fa) <-> (ib, fb) inside packed keys so the kernel's
+        # "row-owner" decode reads the destination fields
+        occupied = key_plane != -1
+        F = jnp.int32(cfg.F)
+        fb = key_plane % F
+        rest = key_plane // F
+        fa = rest % F
+        idx = rest // F
+        ia, ib = idx // 16, idx % 16
+        swapped = ((ib * 16 + ia) * F + fb) * F + fa
+        key_plane = jnp.where(occupied, swapped, key_plane)
+
+    pos = (pre.s[:, None] + pre.offs) % pre.width[:, None]
+    lines = pre.start[:, None] + pos  # [B, r]
+
+    def pad(x, fill=0):
+        n = x.shape[0]
+        p = (-n) % 128
+        if p == 0:
+            return x, n
+        return jnp.pad(x, [(0, p)] + [(0, 0)] * (x.ndim - 1),
+                       constant_values=fill), n
+
+    linesP, n = pad(lines)
+    fP, _ = pad(pre.f, fill=-3)  # never matches a real fingerprint
+    leP, _ = pad(le_idx)
+    w, wl = vertex_scan_kernel(linesP, fP, leP, key_plane, cw, pw,
+                               r=cfg.r, F=cfg.F, c=cfg.c, interpret=interpret)
+    w, wl = w[:n], wl[:n]
+
+    # pool contribution
+    col = 0 if direction == "out" else 1
+    pm = state.pool_key[:, col][None, :] == pre.vid[:, None]
+    maskk = valid_slot_mask(cfg, state, last).astype(state.pool_C.dtype)
+    ptot = jnp.sum(state.pool_C * maskk, -1)
+    w = w + jnp.sum(jnp.where(pm, ptot[None, :], 0), -1)
+    plw = jnp.sum(state.pool_P * maskk[None, :, None], axis=1)  # [Q, c]
+    lw = jnp.take_along_axis(
+        jnp.broadcast_to(plw[None], (pre.vid.shape[0],) + plw.shape),
+        le_idx[:, None, None].astype(jnp.int32), -1)[..., 0]
+    wl = wl + jnp.sum(jnp.where(pm, lw, 0), -1)
+    return w, wl

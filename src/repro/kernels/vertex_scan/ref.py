@@ -1,0 +1,5 @@
+"""Oracle for vertex_scan: ``repro.core.vertex_query`` (pure jnp)."""
+
+from repro.core.queries import vertex_query as reference_vertex_query
+
+__all__ = ["reference_vertex_query"]

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * compiled.memory_analysis()  — bytes per device (proves/falsifies fit),
+  * compiled.cost_analysis()    — HLO FLOPs & bytes for §Roofline,
+  * collective bytes parsed from the optimized HLO (all-gather/all-reduce/
+    reduce-scatter/all-to-all/collective-permute result sizes),
+  * the derived three-term roofline (197 TF/s bf16, 819 GB/s HBM,
+    50 GB/s/link ICI per chip).
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+EXPERIMENTS.md tables are generated from these files.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.shapes import SHAPES_BY_NAME, applicable_shapes
+from repro.launch import shardings as shd
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.step_fns import (init_train_state, make_prefill_step,
+                                   make_serve_step, make_train_step,
+                                   train_state_specs)
+from repro.distributed.sharding_ctx import use_sharding_ctx
+from repro.models import lm
+from repro.optim import AdamWConfig
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# v5e hardware targets
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s/link (per-chip effective injection, 1 link)
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64|u64)"
+                      r"\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "f64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shapes_blob, kind = m.group(1), m.group(2)
+        total = 0
+        for sm in SHAPE_RE.finditer(shapes_blob):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _dryrun_model_cfg(arch: str):
+    """Full config tuned for lowering: bf16 everywhere, dots+moe remat
+    (saves the MoE reshard boundaries so backward reuses the all-to-all —
+    §Perf cell A it7; a no-op for dense archs)."""
+    cfg = configs.get(arch)
+    return cfg.replace(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+                       remat="dots+moe")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Lower+compile one cell; returns the result record."""
+    cfg = _dryrun_model_cfg(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cell = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax = mesh_axes(mesh)
+    n_chips = mesh.size
+    opt = AdamWConfig()
+
+    t0 = time.time()
+    with use_sharding_ctx(mesh):
+        if cell.mode == "train":
+            state_struct = jax.eval_shape(
+                lambda: init_train_state(cfg, opt, jax.random.PRNGKey(0)))
+            specs = input_specs(cfg, cell)
+            st_p = shd.sanitize_specs(
+                train_state_specs(cfg, opt, ax["fsdp"], ax["tp"]),
+                state_struct, mesh)
+            st_spec = shd.to_named(st_p, mesh)
+            in_spec = shd.to_named(shd.batch_specs(cfg, cell, mesh), mesh)
+            step = make_train_step(cfg, opt)
+            jitted = jax.jit(step, in_shardings=(st_spec, in_spec),
+                             out_shardings=(st_spec, None), donate_argnums=0)
+            lowered = jitted.lower(state_struct, specs)
+        elif cell.mode == "prefill":
+            pshapes = lm.param_shapes(cfg)
+            pspec = shd.to_named(shd.sanitize_specs(
+                lm.param_specs(cfg, ax["fsdp"], ax["tp"]), pshapes, mesh),
+                mesh)
+            specs = input_specs(cfg, cell)
+            in_spec = shd.to_named(shd.batch_specs(cfg, cell, mesh), mesh)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(pspec, in_spec))
+            lowered = jitted.lower(pshapes, specs)
+        else:  # decode
+            pshapes = lm.param_shapes(cfg)
+            pspec = shd.to_named(shd.sanitize_specs(
+                lm.param_specs(cfg, ax["fsdp"], ax["tp"]), pshapes, mesh),
+                mesh)
+            specs = input_specs(cfg, cell)
+            dspec = shd.decode_input_shardings(cfg, cell, specs, mesh)
+            step = make_serve_step(cfg)
+            if cfg.is_encdec:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pspec, dspec["caches"], dspec["tokens"],
+                                  dspec["memory"]),
+                    out_shardings=(None, dspec["caches"]),
+                    donate_argnums=1)
+                lowered = jitted.lower(pshapes, specs["caches"],
+                                       specs["tokens"], specs["memory"])
+            else:
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pspec, dspec["caches"], dspec["tokens"]),
+                    out_shardings=(None, dspec["caches"]),
+                    donate_argnums=1)
+                lowered = jitted.lower(pshapes, specs["caches"],
+                                       specs["tokens"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    rep = hlo_analyze(hlo_text)  # per-device, scan-aware (hlo_analysis.py)
+
+    flops = rep.flops * n_chips  # whole-step totals across the mesh
+    bytes_acc = rep.hbm_total * n_chips
+    coll = {k: v * n_chips for k, v in rep.collective_bytes.items()}
+    coll["total"] = rep.collective_total * n_chips
+    xla_flops_once = float(cost.get("flops", 0.0))  # scan-once, per chip
+    mem_rec = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+
+    # roofline terms (per step, whole mesh -> per chip)
+    compute_s = flops / (n_chips * PEAK_FLOPS)
+    memory_s = bytes_acc / (n_chips * HBM_BW)
+    collective_s = coll["total"] / (n_chips * ICI_BW)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+
+    # MODEL_FLOPS = 6 N_active D (train) / 2 N_active (per decoded token)
+    n_active = cfg.active_param_count()
+    tokens = cell.global_batch * (cell.seq_len if cell.mode != "decode" else 1)
+    if cell.mode == "train":
+        model_flops = 6 * n_active * tokens
+    elif cell.mode == "prefill":
+        model_flops = 2 * n_active * tokens
+    else:
+        model_flops = 2 * n_active * tokens
+    useful = model_flops / flops if flops else 0.0
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": cell.mode, "chips": n_chips,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_flops": flops, "hlo_bytes": bytes_acc,
+        "xla_cost_flops_scan_once_per_chip": xla_flops_once,
+        "collective_bytes": coll, "memory": mem_rec,
+        "roofline": {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant,
+            "model_flops": model_flops, "useful_flops_ratio": useful,
+        },
+        "params_total": cfg.param_count(),
+        "params_active": n_active,
+        "overrides": overrides or {},
+    }
+
+
+def run_cell(arch, shape_name, multi_pod, skip_existing=False, tag=""):
+    name = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    if tag:
+        name += f"__{tag}"
+    out_path = OUT_DIR / f"{name}.json"
+    if skip_existing and out_path.exists():
+        print(f"[skip] {name}")
+        return json.loads(out_path.read_text())
+    cfg = configs.get(arch)
+    cell = SHAPES_BY_NAME[shape_name]
+    from repro.configs.shapes import skip_reason
+    reason = skip_reason(cfg, cell)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    if reason:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "skipped": reason}
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[SKIP] {name}: {reason}")
+        return rec
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+        out_path.write_text(json.dumps(rec, indent=1))
+        r = rec["roofline"]
+        print(f"[ok] {name}: compile={rec['compile_s']}s "
+              f"dom={r['dominant']} comp={r['compute_s']:.4f}s "
+              f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+              f"useful={r['useful_flops_ratio']:.2f}")
+        return rec
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[FAIL] {name}: {type(e).__name__}: {str(e)[:200]}")
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    archs = configs.ARCHS if args.all or not args.arch else \
+        [configs.ALIASES.get(args.arch, args.arch)]
+    shapes = [s.name for s in SHAPES_BY_NAME.values()] if args.all or not args.shape \
+        else [args.shape]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp,
+                               skip_existing=args.skip_existing)
+                n_fail += 1 if "error" in rec else 0
+    print(f"done; failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

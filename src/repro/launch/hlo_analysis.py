@@ -1,0 +1,203 @@
+"""Structural cost analysis of optimized HLO text — scan-aware.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (trip count
+ignored) and reports per-device numbers; for scan-over-layers models that
+under-counts by ~n_layers. This module re-derives the roofline inputs from
+the optimized HLO *structurally*:
+
+  * computations are parsed into instruction lists;
+  * `while` ops multiply their body cost by the ``known_trip_count``
+    backend_config XLA attaches (fallback: caller-provided default);
+  * matmul FLOPs: 2 x |result| x |contracted dims| from `dot` ops;
+  * HBM traffic proxy: sum of instruction result bytes x 2 (write + read)
+    over non-fusion-internal instructions — fusion internals never touch
+    HBM, so counting only fusion results is the right boundary;
+  * collective bytes: result bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (async -start counted,
+    -done skipped), per kind.
+
+All numbers are per device (the compiled module is the per-device SPMD
+program); multiply by mesh size for whole-step totals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "s64": 8, "f64": 8, "u64": 8, "c64": 8, "c128": 16,
+               "s4": 1, "u4": 1}
+
+SHAPE_RE = re.compile(r"(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                      r"([a-z][\w\-]*)\(")
+COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*\))?\s*(?:->[^{]*)?{\s*$")
+TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+BODY_RE = re.compile(r'body=%?([\w.\-]+)')
+CALLS_RE = re.compile(r'(?:calls|to_apply)=%?([\w.\-]+)')
+LHS_C_RE = re.compile(r'lhs_contracting_dims=\{([0-9,]*)\}')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes_and_dims(type_str: str):
+    """Total bytes + list of (dtype, dims) for a (possibly tuple) type."""
+    total = 0
+    shapes = []
+    for m in SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+        shapes.append((dt, [int(d) for d in dims.split(",") if d]))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+    result_bytes: int
+    dims: list
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    hbm_once: float = 0.0  # in-place DUS writes: one buffer per whole loop
+    collective_bytes: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.collective_bytes is None:
+            self.collective_bytes = {k: 0.0 for k in COLLECTIVES}
+
+    def add(self, other: "CostReport", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        # dynamic-update-slice into a loop-carried buffer writes 1/trip of
+        # the buffer per iteration: across the loop that's ONE buffer of
+        # traffic, not trip x buffer — do not scale by mult.
+        self.hbm_once += other.hbm_once
+        for k in COLLECTIVES:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+
+    @property
+    def hbm_total(self):
+        return self.hbm_bytes + self.hbm_once
+
+    @property
+    def collective_total(self):
+        return sum(self.collective_bytes.values())
+
+
+def parse_computations(hlo: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[List[Instr]] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = COMP_RE.match(line)
+            if m and "(" in line:
+                name = m.group(2)
+                comps[name] = []
+                cur = comps[name]
+                if m.group(1):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = INSTR_RE.match(line)
+        if im:
+            name, type_str, op = im.group(1), im.group(2), im.group(3)
+            rb, dims = _shape_bytes_and_dims(type_str)
+            cur.append(Instr(name, type_str, op, line, rb, dims))
+    return comps, entry
+
+
+def analyze(hlo: str, default_trip: int = 1) -> CostReport:
+    comps, entry = parse_computations(hlo)
+    # global name -> result dims (for dot operand lookup)
+    shapes: Dict[str, list] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            shapes[ins.name] = ins.dims
+
+    fusion_comps = {m.group(1)
+                    for instrs in comps.values()
+                    for ins in instrs
+                    if ins.op == "fusion"
+                    for m in CALLS_RE.finditer(ins.line)}
+
+    memo: Dict[str, CostReport] = {}
+
+    def comp_cost(name: str) -> CostReport:
+        if name in memo:
+            return memo[name]
+        rep = CostReport()
+        memo[name] = rep  # break cycles defensively
+        for ins in comps.get(name, []):
+            if ins.op == "while":
+                bm = BODY_RE.search(ins.line)
+                tm = TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else default_trip
+                if bm:
+                    rep.add(comp_cost(bm.group(1)), trip)
+                rep.hbm_bytes += ins.result_bytes * 2
+            elif ins.op in ("call", "conditional", "async-start"):
+                for m in CALLS_RE.finditer(ins.line):
+                    rep.add(comp_cost(m.group(1)))
+                rep.hbm_bytes += ins.result_bytes * 2
+            elif ins.op == "dot":
+                flops = _dot_flops(ins, shapes)
+                rep.flops += flops
+                rep.hbm_bytes += ins.result_bytes * 2
+            elif any(ins.op.startswith(c) for c in COLLECTIVES):
+                if ins.op.endswith("-done"):
+                    continue
+                kind = next(c for c in COLLECTIVES if ins.op.startswith(c))
+                rep.collective_bytes[kind] += ins.result_bytes
+                rep.hbm_bytes += ins.result_bytes * 2
+            elif ins.op in ("parameter", "constant", "tuple",
+                            "get-tuple-element", "bitcast"):
+                continue  # no HBM traffic of their own
+            elif "dynamic-update-slice" in ins.line:
+                rep.hbm_once += ins.result_bytes * 2
+            else:
+                # fusion / custom-call / elementwise root: result crosses HBM
+                rep.hbm_bytes += ins.result_bytes * 2
+        return rep
+
+    def _dot_flops(ins: Instr, shapes) -> float:
+        out_elems = 1
+        for dt, dims in ins.dims:
+            for d in dims:
+                out_elems *= d
+        # contracted size from lhs operand
+        m = re.search(r"\(\s*%?([\w.\-]+)\s*,", ins.line)
+        cd = LHS_C_RE.search(ins.line)
+        contracted = 1
+        if m and cd and m.group(1) in shapes:
+            lhs_dims = shapes[m.group(1)]
+            if lhs_dims:
+                _, dims = lhs_dims[0]
+                for i in (int(x) for x in cd.group(1).split(",") if x):
+                    if i < len(dims):
+                        contracted *= dims[i]
+        return 2.0 * out_elems * contracted
+
+    if entry is None:
+        return CostReport()
+    # drop fusion-internal computations from the walk (they are only reached
+    # via fusion ops, which we count as single HBM-crossing results)
+    return comp_cost(entry)

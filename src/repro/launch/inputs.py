@@ -1,0 +1,73 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run pattern.
+Also provides ``random_inputs`` (actual arrays) for smoke tests/examples.
+
+Modality frontends are stubs per the assignment: vision provides
+``prefix_emb`` (precomputed patch embeddings), audio provides ``frame_emb``
+(precomputed speech-frame embeddings, fixed 4096-frame encoder window).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeCell
+from repro.models.config import ModelConfig
+
+AUDIO_ENC_FRAMES = 4096  # stub encoder window (≈40 s of speech frames)
+
+
+def train_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    specs = {"tokens": tok, "labels": tok}
+    if cfg.frontend == "vision":
+        specs["prefix_emb"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_len, cfg.d_model), cfg.compute_dtype)
+    if cfg.is_encdec:
+        frames = min(AUDIO_ENC_FRAMES, cell.seq_len)
+        specs["frame_emb"] = jax.ShapeDtypeStruct(
+            (B, frames, cfg.d_model), cfg.compute_dtype)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    from repro.models.lm import init_cache_specs
+    B = cell.global_batch
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "caches": init_cache_specs(cfg, B, cell.seq_len),
+    }
+    if cfg.is_encdec:
+        frames = min(AUDIO_ENC_FRAMES, cell.seq_len)
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (B, frames, cfg.d_model), cfg.compute_dtype)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    if cell.mode == "decode":
+        return decode_input_specs(cfg, cell)
+    return train_input_specs(cfg, cell)
+
+
+def random_inputs(cfg: ModelConfig, cell: ShapeCell, rng) -> dict:
+    """Materialized inputs matching input_specs (smoke tests / examples)."""
+    def mk(spec, key):
+        if spec.dtype == jnp.int32:
+            return jax.random.randint(key, spec.shape, 0, cfg.vocab_size,
+                                      jnp.int32)
+        return jax.random.normal(key, spec.shape, spec.dtype) * 0.02
+
+    specs = input_specs(cfg, cell)
+    flat, tree = jax.tree_util.tree_flatten(specs)
+    keys = jax.random.split(rng, len(flat))
+    leaves = []
+    for spec, key in zip(flat, keys):
+        if spec.dtype == jnp.int32 and spec.shape[-1:] == (spec.shape[-1],):
+            leaves.append(mk(spec, key))
+        else:
+            leaves.append(mk(spec, key))
+    return jax.tree_util.tree_unflatten(tree, leaves)

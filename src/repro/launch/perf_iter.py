@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration harness: re-lower one cell with overrides, print deltas.
+
+    python -m repro.launch.perf_iter --arch deepseek-v2-236b \
+        --shape train_4k --set attn_mat_dtype=bf16 --tag it4
+    python -m repro.launch.perf_iter --arch deepseek-v2-236b \
+        --shape decode_32k --serving-shardings --tag it1
+
+Also supports `--top-hbm/--top-coll` to print the largest contributors of
+the current lowering (the napkin-math input for the next hypothesis).
+"""
+
+import argparse
+import json
+import re
+
+import jax.numpy as jnp
+
+from repro.launch import dryrun
+from repro.launch import hlo_analysis as ha
+
+DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in DTYPES:
+            out[k] = DTYPES[v]
+        elif v in ("True", "False"):
+            out[k] = v == "True"
+        elif v.replace(".", "").replace("-", "").isdigit():
+            out[k] = float(v) if "." in v else int(v)
+        else:
+            out[k] = v
+    return out
+
+
+def top_contributors(arch, shape, multi_pod, overrides, n=10):
+    """Print the heaviest HBM / collective / dot instructions (trip-scaled)."""
+    import jax
+    from repro.launch.dryrun import (_dryrun_model_cfg, lower_cell)
+    rec, hlo = lower_cell_with_text(arch, shape, multi_pod, overrides)
+    comps, entry = ha.parse_computations(hlo)
+    trips = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.op == "while":
+                tm = ha.TRIP_RE.search(ins.line)
+                bm = ha.BODY_RE.search(ins.line)
+                if bm:
+                    trips[bm.group(1)] = int(tm.group(1)) if tm else 1
+    hbm, coll = [], []
+    for cname, instrs in comps.items():
+        mult = trips.get(cname, 1)
+        for ins in instrs:
+            if ins.op in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "bitcast"):
+                continue
+            entry_bytes = ins.result_bytes * 2 * mult
+            hbm.append((entry_bytes, mult, ins.op, ins.line.strip()[:110]))
+            if any(ins.op.startswith(c) for c in ha.COLLECTIVES) and \
+                    not ins.op.endswith("-done"):
+                coll.append((ins.result_bytes * mult, mult, ins.op,
+                             ins.line.strip()[:110]))
+    print("\n== top HBM contributors (bytes x2 x trip, per chip) ==")
+    for b, m, op, l in sorted(hbm, reverse=True)[:n]:
+        print(f"{b/2**30:9.2f} GiB x{m:3d} {l}")
+    print("\n== top collectives (result bytes x trip, per chip) ==")
+    for b, m, op, l in sorted(coll, reverse=True)[:n]:
+        print(f"{b/2**30:9.2f} GiB x{m:3d} {l}")
+    return rec
+
+
+def lower_cell_with_text(arch, shape, multi_pod, overrides):
+    # lower_cell but also returning the HLO text
+    import repro.launch.dryrun as dr
+    orig = dr.hlo_analyze
+    captured = {}
+
+    def capture(text, default_trip=1):
+        captured["hlo"] = text
+        return orig(text, default_trip)
+
+    dr.hlo_analyze = capture
+    try:
+        rec = dr.lower_cell(arch, shape, multi_pod, overrides)
+    finally:
+        dr.hlo_analyze = orig
+    return rec, captured["hlo"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="ModelConfig overrides k=v")
+    ap.add_argument("--serving-shardings", action="store_true",
+                    help="replicate params over data (pure TP) — decode")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--top", action="store_true",
+                    help="print top HBM/collective contributors")
+    args = ap.parse_args()
+
+    overrides = parse_overrides(args.set)
+    if args.serving_shardings:
+        # lower with fsdp disabled: monkey-wire through mesh_axes
+        import repro.launch.mesh as mesh_mod
+        orig_axes = mesh_mod.mesh_axes
+
+        def serving_axes(mesh):
+            ax = orig_axes(mesh)
+            ax = dict(ax)
+            ax["fsdp"] = ()
+            return ax
+
+        mesh_mod.mesh_axes = serving_axes
+        import repro.launch.dryrun as dr
+        dr.mesh_axes = serving_axes
+
+    if args.top:
+        rec = top_contributors(args.arch, args.shape, args.multipod,
+                               overrides)
+    else:
+        rec = dryrun.lower_cell(args.arch, args.shape, args.multipod,
+                                overrides)
+    rl = rec["roofline"]
+    print(f"\n[{args.tag}] {args.arch} x {args.shape}: "
+          f"compute={rl['compute_s']:.4f}s memory={rl['memory_s']:.4f}s "
+          f"collective={rl['collective_s']:.4f}s dom={rl['dominant']} "
+          f"useful={rl['useful_flops_ratio']:.3f}")
+    out = dryrun.OUT_DIR / (f"{args.arch}__{args.shape}__"
+                            f"{'2x16x16' if args.multipod else '16x16'}"
+                            f"__{args.tag}.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Sharding assignment for inputs, caches, and train state.
+
+Rules (DESIGN.md §5):
+  * token batches shard over dp = ("pod","data");
+  * params/opt-state: FSDP over "data" (+"pod" for >=100B when
+    fsdp_over_pod) x TP over "model" — built from the ParamDef logical axes;
+  * decode caches: batch over dp when divisible; otherwise *context
+    parallelism* — the cache sequence axis shards over "data" (the
+    long_500k cell: one sequence spread over the pod, XLA turns the
+    attention reduction into a psum); head/feature axes take "model" when
+    divisible.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeCell
+from repro.models.config import ModelConfig
+
+from .mesh import mesh_axes
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    ax = mesh_axes(mesh)
+    dp = ax["dp"]
+    dp_ok = cell.global_batch % _axis_size(mesh, dp) == 0
+    bspec = dp if dp_ok else None
+    spec = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.frontend == "vision":
+        spec["prefix_emb"] = P(bspec, None, None)
+    if cfg.is_encdec:
+        spec["frame_emb"] = P(bspec, None, None)
+    return spec
+
+
+# per-leaf cache sharding templates keyed by cache-dict field name:
+# which axis may take "model" (head/state axes only — NEVER a contraction
+# axis like MLA's kv_lora rank or an attention feature dim: sharding those
+# turns every decode step into per-layer cache all-gathers, §Perf cell C),
+# and which axis is the sequence (context-parallel fallback for batch=1).
+_CACHE_RULES = {
+    # name: (seq_axis | None, model_axis | None)
+    "k": (1, 2), "v": (1, 2),          # [B, S, KV, dh]
+    "ckv": (1, None), "krope": (1, None),  # [B, S, r] — replicate over model
+    "conv": (None, 2),                 # [B, kc-1, di]
+    "ssm": (None, 1),                  # [B, di, ds]
+    "C": (None, 1), "n": (None, 1),    # mLSTM [B, H, dh(, dh)]
+    "c": (None, 1), "h": (None, 1),    # sLSTM [B, di]
+    "pos": (None, None),
+}
+
+
+def _cache_leaf_spec(name, shape, mesh) -> P:
+    ax = mesh_axes(mesh)
+    dp, tp = ax["dp"], ax["tp"]
+    dp_n = _axis_size(mesh, dp)
+    tp_n = _axis_size(mesh, tp)
+    data_n = _axis_size(mesh, ("data",))
+    if len(shape) == 0:
+        return P()
+    seq_ax, model_ax = _CACHE_RULES.get(name, (None, None))
+    spec = [None] * len(shape)
+    if shape[0] % dp_n == 0 and shape[0] >= dp_n:
+        spec[0] = dp
+    elif seq_ax is not None and shape[seq_ax] % data_n == 0:
+        # batch unshardable (long_500k): context-parallel over the sequence
+        spec[seq_ax] = "data"
+    if model_ax is not None and model_ax < len(shape) and \
+            shape[model_ax] % tp_n == 0 and shape[model_ax] >= tp_n and \
+            spec[model_ax] is None:
+        spec[model_ax] = tp
+    return P(*spec)
+
+
+def cache_shardings(cache_specs, mesh):
+    def one(path, s):
+        name = None
+        for k in reversed(path):
+            key = getattr(k, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        return NamedSharding(mesh, _cache_leaf_spec(name, s.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+
+def decode_input_shardings(cfg: ModelConfig, cell: ShapeCell, specs, mesh):
+    ax = mesh_axes(mesh)
+    dp = ax["dp"]
+    dp_ok = cell.global_batch % _axis_size(mesh, dp) == 0
+    out = {
+        "tokens": NamedSharding(mesh, P(dp if dp_ok else None, None)),
+        "caches": cache_shardings(specs["caches"], mesh),
+    }
+    if "memory" in specs:
+        out["memory"] = NamedSharding(
+            mesh, P(dp if dp_ok else None, None, None))
+    return out
+
+
+def to_named(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def sanitize_specs(spec_tree, shape_tree, mesh):
+    """Drop sharding on any tensor axis whose size doesn't divide its mesh
+    extent (e.g. seamless-m4t's 256206-token vocab on a 16-way model axis).
+    spec_tree: PartitionSpecs; shape_tree: matching ShapeDtypeStructs."""
+    def fix(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        shape = leaf.shape
+        out = []
+        for i, ax in enumerate(spec):
+            if ax is None or i >= len(shape):
+                out.append(None if i >= len(shape) else ax)
+                continue
+            n = _axis_size(mesh, ax)
+            out.append(ax if (shape[i] % n == 0 and shape[i] >= n) else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))

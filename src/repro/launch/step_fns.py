@@ -1,0 +1,121 @@
+"""train_step / serve_step factories — the functions the dry-run lowers and
+the launchers drive.
+
+``make_train_step`` returns f(train_state, batch) -> (train_state, metrics):
+forward + backward + AdamW, with optional microbatch gradient accumulation
+(scan) and optional int8 error-feedback gradient compression on the DP
+all-reduce (the compression runs inside shard_map in launch/train.py; under
+plain pjit the psum is implicit in the sharded grad reduction).
+
+``make_serve_step`` returns f(params, caches, tokens[, memory]) ->
+(logits, caches): one decode step for the whole batch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    telemetry: Any  # summed MoE routing count matrix (token-bucket x expert)
+    step: jax.Array
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, rng) -> TrainState:
+    params = lm.init_params(cfg, rng)
+    opt = init_opt_state(opt_cfg, params)
+    from repro.models.moe import TELEMETRY_BUCKETS
+    tele = jnp.zeros((TELEMETRY_BUCKETS, max(cfg.n_experts, 1)), jnp.int32)
+    return TrainState(params=params, opt=opt, telemetry=tele,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                      fsdp_axes=("data",), tp_axis="model"):
+    from jax.sharding import PartitionSpec as P
+    pspecs = lm.param_specs(cfg, fsdp_axes, tp_axis)
+    return TrainState(
+        params=pspecs,
+        opt={"mu": pspecs, "nu": pspecs, "step": P()},
+        telemetry=P(),
+        step=P(),
+    )
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    """Returns the jit-able train step (pure function of (state, batch))."""
+
+    def loss_for_grad(params, batch):
+        loss, aux = lm.loss_fn(cfg, params, batch)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def single(state: TrainState, batch: Dict[str, jax.Array]):
+        (loss, aux), grads = grad_fn(state.params, batch)
+        return loss, aux, grads
+
+    def accumulate(state: TrainState, batch):
+        """Microbatch scan: overlaps the DP grad reduction with backward."""
+        def micro(carry, mb):
+            gsum, lsum = carry
+            (loss, aux), grads = grad_fn(state.params, mb)
+            gsum = jax.tree.map(jnp.add, gsum, grads)
+            return (gsum, lsum + loss), aux
+
+        mbatch = jax.tree.map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            state.params)
+        (gsum, lsum), auxs = jax.lax.scan(micro, (zero, jnp.float32(0)), mbatch)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        aux = jax.tree.map(lambda a: a[-1], auxs)
+        return lsum / microbatches, aux, grads
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            loss, aux, grads = accumulate(state, batch)
+        else:
+            loss, aux, grads = single(state, batch)
+        params, opt, stats = apply_updates(opt_cfg, state.params, grads,
+                                           state.opt)
+        tele = state.telemetry
+        if cfg.n_experts:
+            tele = tele + aux["telemetry"]
+        metrics = {"loss": loss, **stats}
+        if cfg.n_experts:
+            metrics["lb_loss"] = aux["lb_loss"]
+            metrics["dropped"] = aux["dropped"]
+        return TrainState(params=params, opt=opt, telemetry=tele,
+                          step=state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward-only full-sequence step (the prefill_32k cell)."""
+
+    def prefill_step(params, batch):
+        logits, _ = lm.forward(cfg, params, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, tokens, memory=None):
+        return lm.serve_step(cfg, params, caches, tokens, memory=memory)
+
+    return serve_step

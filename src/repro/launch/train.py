@@ -1,0 +1,143 @@
+"""Training driver: mesh + sharded train loop + LSketch telemetry + FT.
+
+Runs at any scale: ``--smoke`` trains a reduced config on this host's
+devices (used by examples/ and the e2e test); on a fleet the same driver
+runs under the production mesh (launch/mesh.py) with per-host data shards.
+
+Wiring per step:
+  1. TokenPipeline batch (host, prefetched)
+  2. jit'd train_step (forward/backward/AdamW, donated state)
+  3. the MoE telemetry count matrix (tiny) goes to RouterTelemetry.ingest
+     asynchronously — the LSketch lives off the critical path
+  4. CapacityController adjusts the capacity factor from windowed
+     sketch queries every ``controller_every`` steps
+  5. CheckpointManager.save(async) every ``ckpt_every`` steps; on any
+     fault, RestartLoop restores the newest checkpoint (exact pipeline
+     cursor + sketch state included)
+
+Usage: python -m repro.launch.train --arch smollm-135m --steps 200 --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.sharding_ctx import use_sharding_ctx
+from repro.launch.mesh import make_smoke_mesh, make_production_mesh, mesh_axes
+from repro.launch import shardings as shd
+from repro.launch.step_fns import (TrainState, init_train_state,
+                                   make_train_step, train_state_specs)
+from repro.optim import AdamWConfig
+from repro.telemetry import CapacityController, RouterTelemetry
+
+
+def train(arch: str = "smollm-135m", steps: int = 100, smoke: bool = True,
+          batch_size: int = 8, seq_len: int = 128, ckpt_dir: str | None = None,
+          ckpt_every: int = 50, controller_every: int = 10,
+          microbatches: int = 1, resume: bool = False, log_every: int = 10,
+          seed: int = 0, cfg=None, lr_peak: float = 3e-4,
+          schedule_steps: int | None = None):
+    cfg = cfg if cfg is not None else configs.get(arch, reduced=smoke)
+    arch = cfg.name
+    horizon = schedule_steps or steps  # fixed horizon => exact resume
+    opt_cfg = AdamWConfig(lr_peak=lr_peak,
+                          warmup_steps=max(2, horizon // 20),
+                          decay_steps=horizon)
+    mesh = make_smoke_mesh() if smoke else make_production_mesh()
+    ax = mesh_axes(mesh)
+
+    pipe_cfg = TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, batch_size=batch_size, seq_len=seq_len,
+        seed=seed)
+    ckpt = CheckpointManager(ckpt_dir or f"/tmp/repro_ckpt_{arch}", keep=2)
+
+    tele = RouterTelemetry(n_experts=max(cfg.n_experts, 1)) \
+        if cfg.n_experts else None
+    controller = CapacityController(tele) if tele else None
+    capacity_factor = cfg.capacity_factor
+
+    with use_sharding_ctx(mesh):
+        state = init_train_state(cfg, opt_cfg, jax.random.PRNGKey(seed))
+        specs = shd.to_named(
+            train_state_specs(cfg, opt_cfg, ax["fsdp"], ax["tp"]), mesh)
+        state = jax.device_put(state, specs)
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, microbatches),
+                          in_shardings=(specs, None),
+                          out_shardings=(specs, None), donate_argnums=0)
+
+        start = 0
+        cursor = 0
+        if resume and ckpt.latest_step() is not None:
+            state, extra = ckpt.restore(state, shardings=specs)
+            start = extra["step"]
+            cursor = extra["cursor"]
+            print(f"[train] resumed at step {start}")
+        # the pipeline worker captures its cursor at thread start — it must
+        # be constructed *after* restore for exact resume
+        pipe = TokenPipeline(pipe_cfg, cursor=cursor)
+
+        losses = []
+        prev_tele = np.asarray(state.telemetry)
+        for step in range(start, steps):
+            t0 = time.time()
+            batch = next(pipe)
+            jbatch = {"tokens": jnp.asarray(batch["tokens"]),
+                      "labels": jnp.asarray(batch["labels"])}
+            state, metrics = step_fn(state, jbatch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+
+            if tele is not None and step % controller_every == 0:
+                cur = np.asarray(state.telemetry)
+                tele.ingest(cur - prev_tele, step)
+                prev_tele = cur
+                capacity_factor = controller.update(capacity_factor)
+
+            if ckpt_every and step and step % ckpt_every == 0:
+                ckpt.save(step, state,
+                          extra={"step": step, "cursor": pipe.cursor},
+                          blocking=False)
+            if step % log_every == 0:
+                dt = time.time() - t0
+                extra = ""
+                if tele is not None:
+                    extra = (f" imb={tele.imbalance(last=2):.2f}"
+                             f" cf={capacity_factor:.2f}")
+                print(f"[train] step={step} loss={loss:.4f} "
+                      f"dt={dt*1e3:.0f}ms{extra}")
+        ckpt.save(steps, state, extra={"step": steps, "cursor": pipe.cursor},
+                  blocking=True)
+    pipe.close()
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    losses = train(arch=args.arch, steps=args.steps, smoke=args.smoke,
+                   batch_size=args.batch_size, seq_len=args.seq_len,
+                   microbatches=args.microbatches, resume=args.resume,
+                   ckpt_dir=args.ckpt_dir)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

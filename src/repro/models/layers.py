@@ -1,0 +1,98 @@
+"""Shared model layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, losses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding_ctx import constrain
+
+from .config import ModelConfig
+from .params import FSDP, TP, ParamDef
+
+
+# ---- RMSNorm --------------------------------------------------------------
+
+def rmsnorm_defs(dim: int):
+    return {"scale": ParamDef((dim,), (None,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---- RoPE -----------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., L, H, dh]; positions: [..., L] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., L, dh/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---- SwiGLU MLP -----------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None):
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "w_gate": ParamDef((D, F), (FSDP, TP), init="scaled"),
+        "w_up": ParamDef((D, F), (FSDP, TP), init="scaled"),
+        "w_down": ParamDef((F, D), (TP, FSDP), init="scaled"),
+    }
+
+
+def mlp(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    lg = ("dp",) + (None,) * (x.ndim - 2) + ("tp",)
+    g = constrain(g, *lg)
+    u = constrain(u, *lg)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, params["w_down"])
+
+
+# ---- embeddings / unembedding ---------------------------------------------
+
+def embed_defs(cfg: ModelConfig):
+    defs = {"tok": ParamDef((cfg.vocab_size, cfg.d_model), (TP, FSDP))}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.d_model, cfg.vocab_size), (FSDP, TP),
+                                   init="scaled")
+    return defs
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    out = jnp.take(params["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+    return constrain(out, "dp", None, None)
+
+
+def unembed(params, x, cfg: ModelConfig):
+    w = params["tok"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return constrain(logits, *(("dp",) + (None,) * (x.ndim - 2) + ("tp",)))
+
+
+# ---- loss -----------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """Token-mean cross entropy in f32; labels: int32, mask: optional bool."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

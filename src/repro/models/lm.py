@@ -1,0 +1,145 @@
+"""End-to-end language model: params, forward, train_step, serve_step.
+
+Handles the three input topologies of the assigned pool:
+  * decoder-only LM (tokens -> next-token loss);
+  * prefix-multimodal ([vision/audio stub embeddings ; tokens], loss on the
+    token suffix) — phi-3-vision;
+  * encoder-decoder (stub frame embeddings -> encoder; tokens -> decoder
+    with cross attention) — seamless-m4t.
+
+``train_step`` is the object the dry-run lowers for train shapes;
+``serve_step``/``init_cache`` for decode shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import embed, embed_defs, rmsnorm, rmsnorm_defs, softmax_xent, unembed
+from .params import init_tree, shape_tree, spec_tree
+from .transformer import (StackPlan, build_plan, stack_apply, stack_cache_specs,
+                          stack_decode, stack_init, stack_shapes, stack_specs)
+
+
+def plans(cfg: ModelConfig):
+    dec = build_plan(cfg, decoder=True)
+    enc = build_plan(cfg, decoder=False) if cfg.is_encdec else None
+    return dec, enc
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _top_defs(cfg: ModelConfig):
+    return {"embed": embed_defs(cfg), "final_norm": rmsnorm_defs(cfg.d_model)}
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    dec, enc = plans(cfg)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    params = {
+        **init_tree(_top_defs(cfg), r1, cfg.param_dtype),
+        "decoder": stack_init(cfg, dec, r2),
+    }
+    if enc is not None:
+        params["encoder"] = stack_init(cfg, enc, r3)
+        params["enc_norm"] = init_tree(rmsnorm_defs(cfg.d_model), r3,
+                                       cfg.param_dtype)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    dec, enc = plans(cfg)
+    out = {
+        **shape_tree(_top_defs(cfg), cfg.param_dtype),
+        "decoder": stack_shapes(cfg, dec),
+    }
+    if enc is not None:
+        out["encoder"] = stack_shapes(cfg, enc)
+        out["enc_norm"] = shape_tree(rmsnorm_defs(cfg.d_model), cfg.param_dtype)
+    return out
+
+
+def param_specs(cfg: ModelConfig, fsdp_axes=("data",), tp_axis="model"):
+    dec, enc = plans(cfg)
+    out = {
+        **spec_tree(_top_defs(cfg), fsdp_axes, tp_axis),
+        "decoder": stack_specs(cfg, dec, fsdp_axes, tp_axis),
+    }
+    if enc is not None:
+        out["encoder"] = stack_specs(cfg, enc, fsdp_axes, tp_axis)
+        out["enc_norm"] = spec_tree(rmsnorm_defs(cfg.d_model), fsdp_axes,
+                                    tp_axis)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, batch) -> tuple[jax.Array, dict]:
+    """batch: {tokens [B,S], labels [B,S], (prefix_emb [B,P,D] |
+    frame_emb [B,Se,D])}. Returns (logits at token positions, aux)."""
+    dec, enc = plans(cfg)
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, cfg)
+
+    memory = None
+    if enc is not None:
+        mem = batch["frame_emb"].astype(cfg.compute_dtype)
+        mem, _ = stack_apply(cfg, enc, params["encoder"], mem)
+        memory = rmsnorm(params["enc_norm"], mem, cfg.norm_eps)
+
+    n_prefix = 0
+    if cfg.frontend == "vision" and "prefix_emb" in batch:
+        pre = batch["prefix_emb"].astype(cfg.compute_dtype)
+        n_prefix = pre.shape[1]
+        x = jnp.concatenate([pre, x], axis=1)
+
+    x, aux = stack_apply(cfg, dec, params["decoder"], x,
+                         token_ids=tokens, memory=memory)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = unembed(params["embed"], x, cfg)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits, aux = forward(cfg, params, batch)
+    loss = softmax_xent(logits, batch["labels"], batch.get("mask"))
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    dec, _ = plans(cfg)
+    return stack_cache_specs(cfg, dec, batch, seq)
+
+
+def serve_step(cfg: ModelConfig, params, caches, tokens, memory=None):
+    """tokens: [B, 1] newest token ids. Returns (logits [B,1,V], caches)."""
+    dec, enc = plans(cfg)
+    x = embed(params["embed"], tokens, cfg)
+    x, caches = stack_decode(cfg, dec, params["decoder"], x, caches,
+                             memory=memory)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), caches
+
+
+def encode_memory(cfg: ModelConfig, params, frame_emb):
+    """Enc-dec serving: run the encoder once over stub frame embeddings."""
+    _, enc = plans(cfg)
+    mem, _ = stack_apply(cfg, enc, params["encoder"],
+                         frame_emb.astype(cfg.compute_dtype))
+    return rmsnorm(params["enc_norm"], mem, cfg.norm_eps)

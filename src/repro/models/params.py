@@ -1,0 +1,93 @@
+"""Parameter definition & sharding helpers (flax-free, pure pytrees).
+
+Every module declares its parameters as a dict of ``ParamDef(shape, axes,
+init)`` where ``axes`` are *logical* sharding axes resolved against the mesh
+at launch:
+
+  TP    -> the tensor-parallel mesh axis ("model")
+  FSDP  -> the fully-sharded-data-parallel axes (("data",) single-pod,
+           ("pod", "data") multi-pod when fsdp_over_pod)
+  None  -> replicated
+
+``init_tree``   materializes arrays (vmap-stackable for scan layers);
+``spec_tree``   produces the matching PartitionSpec pytree;
+``shape_tree``  produces ShapeDtypeStructs (dry-run: no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+TP = "__tp__"
+FSDP = "__fsdp__"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Any, ...]  # logical axes, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(d: ParamDef, rng, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "scaled":  # fan-in scaled normal
+        fan_in = d.shape[0] if len(d.shape) > 1 else 1
+        return (jax.random.normal(rng, d.shape) / max(1.0, fan_in ** 0.5)
+                ).astype(dtype)
+    return (jax.random.normal(rng, d.shape) * d.scale).astype(dtype)
+
+
+def init_tree(defs, rng, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    rngs = jax.random.split(rng, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [_init_one(d, r, dtype) for d, r in zip(leaves, rngs)])
+
+
+def shape_tree(defs, dtype=jnp.float32, stack: int | None = None):
+    def one(d: ParamDef):
+        shp = (stack,) + d.shape if stack else d.shape
+        return jax.ShapeDtypeStruct(shp, dtype)
+    return jax.tree_util.tree_map(one, defs,
+                                  is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def spec_tree(defs, fsdp_axes=("data",), tp_axis="model",
+              stack: bool = False):
+    def resolve(ax):
+        if ax == TP:
+            return tp_axis
+        if ax == FSDP:
+            if not fsdp_axes:  # serving mode: weights replicated over data
+                return None
+            return fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+        return ax
+
+    def one(d: ParamDef):
+        spec = tuple(resolve(a) for a in d.axes)
+        if stack:
+            spec = (None,) + spec  # scan-stacked leading layer axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, defs,
+                                  is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def stacked_init(defs, rng, n: int, dtype=jnp.float32):
+    """Init n stacked copies (leading scan axis) of a def tree."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(lambda r: init_tree(defs, r, dtype))(rngs)

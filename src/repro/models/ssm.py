@@ -1,0 +1,331 @@
+"""Sequence-state models: Mamba (Jamba hybrid) and xLSTM (mLSTM + sLSTM).
+
+All three are implemented in chunked/parallel forms that map onto the MXU:
+
+  * Mamba: selective SSM; time is processed in chunks (lax.scan over chunks,
+    associative scan inside the chunk) so the saved state is O(L/chunk) and
+    the inner work is batched matmul-shaped. Decode carries (conv_state,
+    ssm_state) — O(1) per token, which is what makes the long_500k cell
+    meaningful for Jamba.
+  * mLSTM: matrix-memory linear recurrence with scalar forget/input gates;
+    chunkwise parallel form (intra-chunk attention-like matmuls + inter-chunk
+    (C, n) carry). Gates use sigmoid parameterization (f in (0,1), i in
+    (0,1)) rather than xLSTM's unbounded exponential gate — a numerics
+    simplification recorded in DESIGN.md; the state-update structure and
+    normalizer follow the paper.
+  * sLSTM: per-head scalar memory, sequential lax.scan (the layer is
+    intentionally recurrent; xLSTM interleaves 1 sLSTM per 7 mLSTM).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding_ctx import constrain
+
+from .config import ModelConfig
+from .params import FSDP, TP, ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6, diagonal)
+# ---------------------------------------------------------------------------
+
+def mamba_defs(cfg: ModelConfig):
+    D = cfg.d_model
+    di = cfg.ssm_expand * D
+    ds = cfg.ssm_state_dim
+    kc = cfg.ssm_conv_dim
+    return {
+        "w_in": ParamDef((D, 2 * di), (FSDP, TP), init="scaled"),
+        "conv_w": ParamDef((kc, di), (None, TP), init="scaled", scale=0.5),
+        "w_bcdt": ParamDef((di, 2 * ds + 1), (TP, None), init="scaled"),
+        "dt_bias": ParamDef((di,), (TP,), init="zeros"),
+        "a_log": ParamDef((di, ds), (TP, None), init="zeros"),
+        "d_skip": ParamDef((di,), (TP,), init="ones"),
+        "w_out": ParamDef((di, D), (TP, FSDP), init="scaled"),
+    }
+
+
+def _mamba_inner(params, xz, cfg: ModelConfig, chunk: int = 256):
+    """xz: [B, L, 2*di] post-in_proj. Returns [B, L, di] pre-out_proj."""
+    B, L, _ = xz.shape
+    di = cfg.ssm_expand * cfg.d_model
+    ds = cfg.ssm_state_dim
+    kc = cfg.ssm_conv_dim
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv (k=kc)
+    xp = jnp.pad(x, ((0, 0), (kc - 1, 0), (0, 0)))
+    x = sum(xp[:, i:i + L] * params["conv_w"][i] for i in range(kc))
+    x = jax.nn.silu(x)
+
+    bcdt = jnp.einsum("bld,dn->bln", x, params["w_bcdt"])
+    Bc, Cc, dt = bcdt[..., :ds], bcdt[..., ds:2 * ds], bcdt[..., -1:]
+    dt = jax.nn.softplus(dt + params["dt_bias"][None, None, :1])  # [B,L,1]
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))  # [di, ds]
+
+    nchunks = L // chunk
+
+    def chunk_step(h0, inp):
+        # the [B,chunk,di,ds] discretized tensors live only inside the chunk
+        # body — O(chunk) transient footprint, rematerialized on backward.
+        # All scan state is f32 (selective-SSM recurrences are precision-
+        # sensitive and mixing bf16 activations into the carry breaks the
+        # associative_scan dtype contract).
+        xx, dtc, bb, cc = inp  # [B,W,di], [B,W,1], [B,W,ds], [B,W,ds]
+        f32 = jnp.float32
+        dtc, bb, cc = dtc.astype(f32), bb.astype(f32), cc.astype(f32)
+        dec = jnp.exp(dtc[..., None] * A[None, None])  # [B,W,di,ds] f32
+        uu = (dtc * xx.astype(f32))[..., None] * bb[:, :, None, :]
+
+        def assoc(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        dec_c, hs = jax.lax.associative_scan(assoc, (dec, uu), axis=1)
+        hs = hs + dec_c * h0[:, None]  # include carry-in
+        y = jnp.einsum("blds,bls->bld", hs, cc)
+        return hs[:, -1], y
+
+    def rc(t):
+        return t.reshape(B, nchunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    body = chunk_step
+    if cfg.remat != "none":
+        body = jax.checkpoint(chunk_step)
+    _, ys = jax.lax.scan(body, h0, (rc(x), rc(dt), rc(Bc), rc(Cc)))
+    y = ys.swapaxes(0, 1).reshape(B, L, di).astype(x.dtype)
+    y = y + x * params["d_skip"]
+    return y * jax.nn.silu(z)
+
+
+def mamba_train(params, h, cfg: ModelConfig):
+    """h: [B,L,D] -> [B,L,D]."""
+    xz = constrain(jnp.einsum("bld,de->ble", h, params["w_in"]),
+                   "dp", None, "tp")
+    L = h.shape[1]
+    di = cfg.ssm_expand * cfg.d_model
+    # keep the chunk-local [B,W,di,ds] transient within a ~16M-element budget
+    budget = 1 << 24
+    chunk = max(8, min(256, budget // max(1, di * cfg.ssm_state_dim)))
+    chunk = min(chunk, L)
+    while L % chunk:
+        chunk //= 2
+    y = _mamba_inner(params, xz, cfg, chunk=max(1, chunk))
+    return jnp.einsum("bld,de->ble", y, params["w_out"])
+
+
+def mamba_decode(params, h, cache, cfg: ModelConfig):
+    """h: [B,1,D]; cache: conv [B,kc-1,di], ssm [B,di,ds]."""
+    B = h.shape[0]
+    di = cfg.ssm_expand * cfg.d_model
+    ds = cfg.ssm_state_dim
+    kc = cfg.ssm_conv_dim
+    xz = jnp.einsum("bld,de->ble", h, params["w_in"])[:, 0]
+    x, z = jnp.split(xz, 2, axis=-1)
+    conv_in = jnp.concatenate([cache["conv"], x[:, None]], axis=1)  # [B,kc,di]
+    xc = jnp.einsum("bkd,kd->bd", conv_in, params["conv_w"])
+    xc = jax.nn.silu(xc)
+    bcdt = jnp.einsum("bd,dn->bn", xc, params["w_bcdt"])
+    Bc, Cc, dt = bcdt[:, :ds], bcdt[:, ds:2 * ds], bcdt[:, -1:]
+    dt = jax.nn.softplus(dt + params["dt_bias"][None, :1])
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    f32 = jnp.float32
+    decay = jnp.exp(dt.astype(f32)[..., None] * A[None])  # [B,di,ds]
+    hnew = decay * cache["ssm"].astype(f32) + \
+        (dt * xc).astype(f32)[..., None] * Bc.astype(f32)[:, None, :]
+    y = jnp.einsum("bds,bs->bd", hnew, Cc.astype(f32)).astype(h.dtype) \
+        + xc * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", y, params["w_out"])[:, None]
+    return out, {"conv": conv_in[:, 1:], "ssm": hnew}
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_dim - 1, di),
+                                     cfg.compute_dtype),
+        # recurrent state kept in f32: precision-critical
+        "ssm": jax.ShapeDtypeStruct((batch, di, cfg.ssm_state_dim),
+                                    jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory), chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    di = cfg.ssm_expand * D
+    dh = di // H
+    return {
+        "w_in": ParamDef((D, 2 * di), (FSDP, TP), init="scaled"),
+        "w_q": ParamDef((di, di), (TP, None), init="scaled"),
+        "w_k": ParamDef((di, di), (TP, None), init="scaled"),
+        "w_v": ParamDef((di, di), (TP, None), init="scaled"),
+        "w_if": ParamDef((di, 2 * H), (TP, None), init="scaled"),
+        "b_if": ParamDef((2 * H,), (None,), init="zeros"),
+        "w_out": ParamDef((di, D), (TP, FSDP), init="scaled"),
+    }
+
+
+def mlstm_train(params, h, cfg: ModelConfig):
+    B, L, D = h.shape
+    Hh = cfg.n_heads
+    di = cfg.ssm_expand * D
+    dh = di // Hh
+    W = min(cfg.mlstm_chunk, L)
+    while L % W:
+        W //= 2
+    W = max(1, W)
+    nch = L // W
+
+    xz = constrain(jnp.einsum("bld,de->ble", h, params["w_in"]),
+                   "dp", None, "tp")
+    x, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bld,de->ble", x, params["w_q"]).reshape(B, L, Hh, dh)
+    k = jnp.einsum("bld,de->ble", x, params["w_k"]).reshape(B, L, Hh, dh) / (dh ** 0.5)
+    v = jnp.einsum("bld,de->ble", x, params["w_v"]).reshape(B, L, Hh, dh)
+    gates = jnp.einsum("bld,dg->blg", x, params["w_if"]) + params["b_if"]
+    i_g = jax.nn.sigmoid(gates[..., :Hh]).astype(jnp.float32)  # [B,L,H]
+    lf = jax.nn.log_sigmoid(gates[..., Hh:]).astype(jnp.float32)  # log f
+
+    # chunk reshape: [nch, B, W, ...]
+    def rc(t):
+        return t.reshape(B, nch, W, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, lfc = map(rc, (q, k, v, i_g, lf))
+
+    F = jnp.cumsum(lfc, axis=2)  # [nch,B,W,H] within-chunk cumulative log-f
+
+    def chunk_step(carry, inp):
+        C0, n0 = carry  # [B,H,dh,dh], [B,H,dh]
+        qq, kk, vv, ii, ff, Fc = inp  # per chunk
+        f32 = jnp.float32
+        qq, kk, vv = qq.astype(f32), kk.astype(f32), vv.astype(f32)
+        # intra-chunk: s_jk = (q_j . k_k) * exp(F_j - F_k) * i_k  for k<=j
+        dmat = Fc[:, :, None, :] - Fc[:, None, :, :]  # [B,W,W,H] F_j - F_k
+        causal = jnp.tril(jnp.ones((qq.shape[1], qq.shape[1]), bool))
+        s = jnp.einsum("bjhd,bkhd->bjkh", qq, kk) * jnp.exp(dmat) * \
+            ii[:, None, :, :]
+        s = jnp.where(causal[None, :, :, None], s, 0.0)
+        y_intra = jnp.einsum("bjkh,bkhd->bjhd", s, vv)
+        # inter-chunk: contribution of carry C0
+        decay_j = jnp.exp(Fc)  # [B,W,H]
+        y_inter = jnp.einsum("bjhd,bhde->bjhe", qq * decay_j[..., None], C0)
+        n_inter = jnp.einsum("bjhd,bhd->bjh", qq * decay_j[..., None], n0)
+        # normalizer: n_j . q_j = sum_k s_jk (intra) + carry term
+        norm = jnp.einsum("bjkh->bjh", s) + n_inter
+        y = (y_intra + y_inter) / jnp.maximum(jnp.abs(norm), 1.0)[..., None]
+        # carry update
+        Ftot = Fc[:, -1]  # [B,H]
+        wk = jnp.exp(Ftot[:, None] - Fc) * ii  # [B,W,H]
+        C1 = jnp.exp(Ftot)[..., None, None] * C0 + \
+            jnp.einsum("bkh,bkhd,bkhe->bhde", wk, kk, vv)
+        n1 = jnp.exp(Ftot)[..., None] * n0 + jnp.einsum("bkh,bkhd->bhd", wk, kk)
+        return (C1, n1), y.astype(h.dtype)
+
+    C0 = jnp.zeros((B, Hh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, Hh, dh), jnp.float32)
+    body = chunk_step
+    if cfg.remat != "none":
+        body = jax.checkpoint(chunk_step)
+    _, ys = jax.lax.scan(body, (C0, n0), (qc, kc, vc, ic, lfc, F))
+    y = ys.swapaxes(0, 1).reshape(B, L, di)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bld,de->ble", y, params["w_out"])
+
+
+def mlstm_decode(params, h, cache, cfg: ModelConfig):
+    B, _, D = h.shape
+    Hh = cfg.n_heads
+    di = cfg.ssm_expand * D
+    dh = di // Hh
+    xz = jnp.einsum("bld,de->ble", h, params["w_in"])[:, 0]
+    x, z = jnp.split(xz, 2, axis=-1)
+    f32 = jnp.float32
+    q = jnp.einsum("bd,de->be", x, params["w_q"]).reshape(B, Hh, dh).astype(f32)
+    k = (jnp.einsum("bd,de->be", x, params["w_k"]).reshape(B, Hh, dh)
+         / (dh ** 0.5)).astype(f32)
+    v = jnp.einsum("bd,de->be", x, params["w_v"]).reshape(B, Hh, dh).astype(f32)
+    gates = jnp.einsum("bd,dg->bg", x, params["w_if"]) + params["b_if"]
+    i_g = jax.nn.sigmoid(gates[:, :Hh]).astype(f32)[..., None, None]
+    f_g = jax.nn.sigmoid(gates[:, Hh:]).astype(f32)[..., None, None]
+    C1 = f_g * cache["C"] + i_g * jnp.einsum("bhd,bhe->bhde", k, v)
+    n1 = f_g[..., 0] * cache["n"] + i_g[..., 0] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C1)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n1)), 1.0)
+    y = (num / den[..., None]).reshape(B, di).astype(h.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bd,de->be", y, params["w_out"])[:, None], \
+        {"C": C1, "n": n1}
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    dh = di // cfg.n_heads
+    return {
+        "C": jax.ShapeDtypeStruct((batch, cfg.n_heads, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, cfg.n_heads, dh), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, sequential scan)
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    di = cfg.ssm_expand * D
+    return {
+        "w_in": ParamDef((D, di), (FSDP, TP), init="scaled"),
+        "w_gates": ParamDef((di, 4 * di), (TP, None), init="scaled"),
+        "b_gates": ParamDef((4 * di,), (None,), init="zeros"),
+        "w_out": ParamDef((di, D), (TP, FSDP), init="scaled"),
+    }
+
+
+def _slstm_cell(params, x_t, state):
+    """x_t: [B, di]; state: (c, n, h) each [B, di]."""
+    c, n, hprev = state
+    gates = jnp.einsum("bd,dg->bg", x_t + hprev, params["w_gates"]) + \
+        params["b_gates"]
+    zi, ii, fi, oi = jnp.split(gates, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    it = jax.nn.sigmoid(ii)
+    ft = jax.nn.sigmoid(fi)
+    ot = jax.nn.sigmoid(oi)
+    c1 = ft * c + it * zt
+    n1 = ft * n + it
+    h1 = ot * c1 / jnp.maximum(n1, 1.0)
+    return (c1, n1, h1), h1
+
+
+def slstm_train(params, h, cfg: ModelConfig):
+    B, L, D = h.shape
+    di = cfg.ssm_expand * D
+    x = constrain(jnp.einsum("bld,de->ble", h, params["w_in"]),
+                  "dp", None, "tp")
+    s0 = tuple(jnp.zeros((B, di), h.dtype) for _ in range(3))
+    (_, _, _), ys = jax.lax.scan(
+        lambda st, xt: _slstm_cell(params, xt, st), s0, x.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1)
+    return jnp.einsum("bld,de->ble", y, params["w_out"])
+
+
+def slstm_decode(params, h, cache, cfg: ModelConfig):
+    x = jnp.einsum("bld,de->ble", h, params["w_in"])[:, 0]
+    st = (cache["c"], cache["n"], cache["h"])
+    (c1, n1, h1), y = _slstm_cell(params, x, st)
+    out = jnp.einsum("bd,de->be", y, params["w_out"])[:, None]
+    return out, {"c": c1, "n": n1, "h": h1}
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    z = jax.ShapeDtypeStruct((batch, di), cfg.compute_dtype)
+    return {"c": z, "n": z, "h": z}

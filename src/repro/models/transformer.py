@@ -1,0 +1,330 @@
+"""The composable decoder/encoder stack.
+
+Every architecture is compiled into a static *plan*:
+
+  head layers  — leading layers with unique shapes (e.g. DeepSeek's
+                 first-k-dense), applied unscanned;
+  body periods — the repeating layer pattern (period = 1 for homogeneous
+                 decoders, 8 for Jamba's attn:mamba 1:7, 6 for Gemma-3's
+                 5 local : 1 global, 8 for xLSTM's 7 mLSTM : 1 sLSTM),
+                 parameters stacked over periods and driven by lax.scan —
+                 the HLO stays O(period), which keeps the 80-config dry-run
+                 compilable and the TPU program cache warm;
+  tail layers  — remainder (n_layers % period), applied unscanned.
+
+Train uses the scanned path; decode unrolls layers in Python (heterogeneous
+per-layer caches: ring buffers for local attention, compressed MLA caches,
+O(1) SSM states) — decode HLO is small per layer so unrolling is cheap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ssm
+from .config import ModelConfig
+from .layers import mlp, mlp_defs, rmsnorm, rmsnorm_defs
+from .moe import TELEMETRY_BUCKETS, moe, moe_defs
+from .params import init_tree, shape_tree, spec_tree, stacked_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    kind: str  # attn | mamba | mlstm | slstm
+    mlp: str  # dense | moe | none
+    window: int = 0  # >0: local sliding-window attention
+    cross: bool = False  # enc-dec decoder layer
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    head: Tuple[LayerPlan, ...]
+    pattern: Tuple[LayerPlan, ...]
+    n_periods: int
+    tail: Tuple[LayerPlan, ...]
+
+    @property
+    def layers(self) -> List[LayerPlan]:
+        return (list(self.head) + list(self.pattern) * self.n_periods
+                + list(self.tail))
+
+
+def build_plan(cfg: ModelConfig, decoder: bool = True) -> StackPlan:
+    n_layers = cfg.n_layers if decoder else cfg.encoder_layers
+    cross = cfg.is_encdec and decoder
+
+    def mlp_kind(li: int, kind: str) -> str:
+        if kind in ("mlstm", "slstm"):
+            return "none"
+        if (cfg.n_experts > 0 and li >= cfg.first_k_dense
+                and li % cfg.moe_every == 0):
+            return "moe"
+        return "dense"
+
+    def layer(li: int) -> LayerPlan:
+        if cfg.layer_pattern:
+            kind = cfg.layer_pattern[li % len(cfg.layer_pattern)]
+        else:
+            kind = "attn"
+        window = 0
+        if kind == "attn" and cfg.sliding_window and cfg.global_every:
+            is_global = (li % cfg.global_every) == (cfg.global_every - 1)
+            window = 0 if is_global else cfg.sliding_window
+        elif kind == "attn" and cfg.sliding_window and not cfg.global_every:
+            window = cfg.sliding_window
+        return LayerPlan(kind=kind, mlp=mlp_kind(li, kind), window=window,
+                         cross=cross)
+
+    all_layers = [layer(li) for li in range(n_layers)]
+    head = tuple(all_layers[:cfg.first_k_dense])
+    body = all_layers[cfg.first_k_dense:]
+    period = len(cfg.layer_pattern) if cfg.layer_pattern else 1
+    if cfg.global_every:
+        period = max(period, cfg.global_every)
+    # a period is scannable only if the pattern of plans repeats exactly
+    n_periods = len(body) // period if period else 0
+    pattern = tuple(body[:period])
+    ok = all(tuple(body[p * period:(p + 1) * period]) == pattern
+             for p in range(n_periods))
+    if not ok or n_periods == 0:
+        return StackPlan(head=head, pattern=(), n_periods=0,
+                         tail=tuple(body))
+    tail = tuple(body[n_periods * period:])
+    return StackPlan(head=head, pattern=pattern, n_periods=n_periods,
+                     tail=tail)
+
+
+# ---------------------------------------------------------------------------
+# per-layer defs / apply / decode
+# ---------------------------------------------------------------------------
+
+def layer_defs(cfg: ModelConfig, plan: LayerPlan):
+    D = cfg.d_model
+    defs: dict = {"norm1": rmsnorm_defs(D)}
+    if plan.kind == "attn":
+        defs["attn"] = (attn.mla_defs(cfg) if cfg.attention == "mla"
+                        else attn.gqa_defs(cfg))
+    elif plan.kind == "mamba":
+        defs["mixer"] = ssm.mamba_defs(cfg)
+    elif plan.kind == "mlstm":
+        defs["mixer"] = ssm.mlstm_defs(cfg)
+    elif plan.kind == "slstm":
+        defs["mixer"] = ssm.slstm_defs(cfg)
+    if plan.cross:
+        defs["norm_x"] = rmsnorm_defs(D)
+        defs["cross"] = attn.cross_defs(cfg)
+    if plan.mlp == "dense":
+        defs["norm2"] = rmsnorm_defs(D)
+        defs["mlp"] = mlp_defs(cfg)
+    elif plan.mlp == "moe":
+        defs["norm2"] = rmsnorm_defs(D)
+        defs["moe"] = moe_defs(cfg)
+    return defs
+
+
+def _zero_aux(cfg: ModelConfig):
+    E = max(cfg.n_experts, 1)
+    return {"lb_loss": jnp.float32(0), "z_loss": jnp.float32(0),
+            "dropped": jnp.float32(0),
+            "telemetry": jnp.zeros((TELEMETRY_BUCKETS, E), jnp.int32)}
+
+
+def layer_apply(cfg: ModelConfig, plan: LayerPlan, params, x,
+                token_ids=None, memory=None):
+    """Train/prefill application. Returns (x, aux)."""
+    from repro.distributed.sharding_ctx import constrain
+    aux = _zero_aux(cfg)
+    x = constrain(x, "dp", None, None)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if plan.kind == "attn":
+        if cfg.attention == "mla":
+            y = attn.mla_train(params["attn"], h, cfg)
+        else:
+            y = attn.gqa_train(params["attn"], h, cfg, window=plan.window)
+    elif plan.kind == "mamba":
+        y = ssm.mamba_train(params["mixer"], h, cfg)
+    elif plan.kind == "mlstm":
+        y = ssm.mlstm_train(params["mixer"], h, cfg)
+    else:
+        y = ssm.slstm_train(params["mixer"], h, cfg)
+    x = x + y
+    if plan.cross:
+        hx = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attention(params["cross"], hx, memory, cfg)
+    if plan.mlp == "dense":
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        x = x + mlp(params["mlp"], h2)
+    elif plan.mlp == "moe":
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        y2, aux = moe(params["moe"], h2, cfg, token_ids=token_ids)
+        x = x + y2
+    return x, aux
+
+
+def layer_decode(cfg: ModelConfig, plan: LayerPlan, params, x, cache,
+                 memory=None):
+    """Single-token decode. Returns (x, cache)."""
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if plan.kind == "attn":
+        if cfg.attention == "mla":
+            y, cache_m = attn.mla_decode(params["attn"], h, cache["mixer"], cfg)
+        else:
+            y, cache_m = attn.gqa_decode(params["attn"], h, cache["mixer"],
+                                         cfg, window=plan.window)
+    elif plan.kind == "mamba":
+        y, cache_m = ssm.mamba_decode(params["mixer"], h, cache["mixer"], cfg)
+    elif plan.kind == "mlstm":
+        y, cache_m = ssm.mlstm_decode(params["mixer"], h, cache["mixer"], cfg)
+    else:
+        y, cache_m = ssm.slstm_decode(params["mixer"], h, cache["mixer"], cfg)
+    x = x + y
+    if plan.cross:
+        hx = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attention(params["cross"], hx, memory, cfg)
+    if plan.mlp == "dense":
+        x = x + mlp(params["mlp"], rmsnorm(params["norm2"], x, cfg.norm_eps))
+    elif plan.mlp == "moe":
+        # decode is drop-free (capacity = all tokens): serving must not
+        # depend on what else is in the batch
+        y2, _ = moe(params["moe"], rmsnorm(params["norm2"], x, cfg.norm_eps),
+                    cfg, token_ids=None,
+                    capacity_factor=float(cfg.n_experts))
+        x = x + y2
+    return x, {"mixer": cache_m}
+
+
+def layer_cache_spec(cfg: ModelConfig, plan: LayerPlan, batch: int, seq: int):
+    if plan.kind == "attn":
+        if cfg.attention == "mla":
+            spec = attn.mla_cache_spec(cfg, batch, seq)
+        else:
+            spec = attn.gqa_cache_spec(cfg, batch, seq, window=plan.window)
+    elif plan.kind == "mamba":
+        spec = ssm.mamba_cache_spec(cfg, batch)
+    elif plan.kind == "mlstm":
+        spec = ssm.mlstm_cache_spec(cfg, batch)
+    else:
+        spec = ssm.slstm_cache_spec(cfg, batch)
+    return {"mixer": spec}
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply
+# ---------------------------------------------------------------------------
+
+def stack_defs(cfg: ModelConfig, plan: StackPlan):
+    return {
+        "head": [layer_defs(cfg, p) for p in plan.head],
+        "body": [layer_defs(cfg, p) for p in plan.pattern],
+        "tail": [layer_defs(cfg, p) for p in plan.tail],
+    }
+
+
+def stack_init(cfg: ModelConfig, plan: StackPlan, rng):
+    defs = stack_defs(cfg, plan)
+    r_head, r_body, r_tail = jax.random.split(rng, 3)
+    return {
+        "head": [init_tree(d, r, cfg.param_dtype)
+                 for d, r in zip(defs["head"],
+                                 jax.random.split(r_head, max(1, len(defs["head"]))))],
+        "body": [stacked_init(d, r, plan.n_periods, cfg.param_dtype)
+                 for d, r in zip(defs["body"],
+                                 jax.random.split(r_body, max(1, len(defs["body"]))))],
+        "tail": [init_tree(d, r, cfg.param_dtype)
+                 for d, r in zip(defs["tail"],
+                                 jax.random.split(r_tail, max(1, len(defs["tail"]))))],
+    }
+
+
+def stack_shapes(cfg: ModelConfig, plan: StackPlan):
+    defs = stack_defs(cfg, plan)
+    return {
+        "head": [shape_tree(d, cfg.param_dtype) for d in defs["head"]],
+        "body": [shape_tree(d, cfg.param_dtype, stack=plan.n_periods)
+                 for d in defs["body"]],
+        "tail": [shape_tree(d, cfg.param_dtype) for d in defs["tail"]],
+    }
+
+
+def stack_specs(cfg: ModelConfig, plan: StackPlan, fsdp_axes, tp_axis):
+    defs = stack_defs(cfg, plan)
+    return {
+        "head": [spec_tree(d, fsdp_axes, tp_axis) for d in defs["head"]],
+        "body": [spec_tree(d, fsdp_axes, tp_axis, stack=True)
+                 for d in defs["body"]],
+        "tail": [spec_tree(d, fsdp_axes, tp_axis) for d in defs["tail"]],
+    }
+
+
+def _add_aux(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def stack_apply(cfg: ModelConfig, plan: StackPlan, params, x,
+                token_ids=None, memory=None):
+    """Full-sequence forward. Returns (x, aux)."""
+    aux = _zero_aux(cfg)
+    for p, pp in zip(plan.head, params["head"]):
+        x, a = layer_apply(cfg, p, pp, x, token_ids, memory)
+        aux = _add_aux(aux, a)
+
+    if plan.n_periods:
+        def period_body(carry, period_params):
+            h, acc = carry
+            for p, pp in zip(plan.pattern, period_params):
+                h, a = layer_apply(cfg, p, pp, h, token_ids, memory)
+                acc = _add_aux(acc, a)
+            return (h, acc), None
+
+        body = period_body
+        if cfg.remat == "full":
+            body = jax.checkpoint(period_body)
+        elif cfg.remat == "dots":
+            body = jax.checkpoint(
+                period_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        elif cfg.remat == "dots+moe":
+            # dots policy + pin the MoE reshard boundaries: backward reuses
+            # the saved all-to-all results instead of re-running collectives
+            pol = jax.checkpoint_policies.save_from_both_policies(
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                jax.checkpoint_policies.save_only_these_names(
+                    "moe_xe", "moe_ye"))
+            body = jax.checkpoint(period_body, policy=pol)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["body"])
+
+    for p, pp in zip(plan.tail, params["tail"]):
+        x, a = layer_apply(cfg, p, pp, x, token_ids, memory)
+        aux = _add_aux(aux, a)
+    return x, aux
+
+
+def stack_decode(cfg: ModelConfig, plan: StackPlan, params, x, caches,
+                 memory=None):
+    """Single-token decode through all layers (python-unrolled)."""
+    new_caches = []
+    li = 0
+    for p, pp in zip(plan.head, params["head"]):
+        x, c = layer_decode(cfg, p, pp, x, caches[li], memory)
+        new_caches.append(c)
+        li += 1
+    for period in range(plan.n_periods):
+        for pos, p in enumerate(plan.pattern):
+            pp = jax.tree.map(lambda t: t[period], params["body"][pos])
+            x, c = layer_decode(cfg, p, pp, x, caches[li], memory)
+            new_caches.append(c)
+            li += 1
+    for p, pp in zip(plan.tail, params["tail"]):
+        x, c = layer_decode(cfg, p, pp, x, caches[li], memory)
+        new_caches.append(c)
+        li += 1
+    return x, new_caches
+
+
+def stack_cache_specs(cfg: ModelConfig, plan: StackPlan, batch: int, seq: int):
+    return [layer_cache_spec(cfg, p, batch, seq) for p in plan.layers]

@@ -1,0 +1,7 @@
+from .adamw import (AdamWConfig, apply_updates, global_norm, init_opt_state,
+                    lr_at, opt_state_specs)
+from .compression import compress_int8, decompress_int8, compressed_psum
+
+__all__ = ["AdamWConfig", "apply_updates", "global_norm", "init_opt_state",
+           "lr_at", "opt_state_specs", "compress_int8", "decompress_int8",
+           "compressed_psum"]

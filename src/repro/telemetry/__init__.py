@@ -1,0 +1,4 @@
+from .router_sketch import CapacityController, RouterTelemetry
+from .stream_stats import BigramSketch
+
+__all__ = ["CapacityController", "RouterTelemetry", "BigramSketch"]

@@ -1,0 +1,123 @@
+"""LSketch as first-class training telemetry (the paper's technique in its
+production seat — DESIGN.md §4).
+
+The MoE layers emit a (token-bucket x expert) count matrix per step inside
+jit (cheap: one scatter-add into a [256, E] int32). This module turns those
+counts into heterogeneous graph-stream items
+
+    (token_bucket --rank/step-label--> expert, weight=count, t=step)
+
+and feeds them to an LSketch with a sliding window over *training steps* —
+so every paper query becomes a train-telemetry primitive:
+
+  * vertex_weight(expert, dir="in")           -> windowed expert load
+  * vertex_weight(expert, le=band, dir="in")  -> load from a token band
+  * edge_weight(bucket, expert)               -> routing affinity
+  * label_aggregate(band)                     -> per-band routed volume
+  * windowed queries (last=j)                 -> "recent j steps" imbalance
+
+The sketch update runs OFF the critical path (counts are tiny host
+transfers, inserted asynchronously between steps); the capacity-factor
+controller reads windowed expert load to adjust cfg.capacity_factor — the
+beyond-paper integration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (EdgeBatch, LSketch, LSketchConfig, insert_batch)
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class RouterTelemetry:
+    """Sliding-window sketch over the MoE routing stream."""
+
+    n_experts: int
+    n_buckets: int = 256
+    window_steps: int = 64  # sliding window = last 64 training steps
+    subwindows: int = 8
+    d: int = 128
+
+    def __post_init__(self):
+        self.cfg = LSketchConfig(
+            d=self.d, n_blocks=4, F=1024, r=4, s=8, c=8, k=self.subwindows,
+            window_size=self.window_steps, pool_capacity=4096,
+            pool_probes=16, seed=2024)
+        self.sketch = LSketch(self.cfg)
+        # vertex ids: buckets [0, n_buckets); experts [n_buckets, ...)
+        self._expert_base = self.n_buckets
+
+    def ingest(self, counts: np.ndarray, step: int, min_count: int = 1):
+        """counts: [n_buckets, n_experts] int (summed over layers).
+
+        Converts the count matrix to weighted edges and inserts them. Runs
+        on host, asynchronously with the next step's compute.
+        """
+        counts = np.asarray(counts)
+        bk, ex = np.nonzero(counts >= min_count)
+        if len(bk) == 0:
+            return self
+        w = counts[bk, ex].astype(np.int32)
+        n = len(bk)
+        batch = EdgeBatch(
+            src=jnp.asarray(bk, jnp.int32),
+            dst=jnp.asarray(ex + self._expert_base, jnp.int32),
+            # vertex labels: token band (bucket/64) vs "expert" class
+            src_label=jnp.asarray(bk // 64, jnp.int32),
+            dst_label=jnp.asarray(np.full(n, 3), jnp.int32),
+            # edge label: expert octile — queries can restrict by it
+            edge_label=jnp.asarray(ex % 8, jnp.int32),
+            weight=jnp.asarray(w, jnp.int32),
+            time=jnp.asarray(np.full(n, step), jnp.int32),
+        )
+        self.sketch.state = insert_batch(self.cfg, self.sketch.state, batch)
+        return self
+
+    # ---- queries the controller uses ----
+    def expert_load(self, expert: int, last: int | None = None) -> int:
+        return self.sketch.vertex_weight(
+            self._expert_base + expert, 3, direction="in", last=last)
+
+    def routing_affinity(self, bucket: int, expert: int,
+                         last: int | None = None) -> int:
+        return self.sketch.edge_weight(
+            bucket, bucket // 64, self._expert_base + expert, 3, last=last)
+
+    def load_vector(self, last: int | None = None) -> np.ndarray:
+        return np.array([self.expert_load(e, last)
+                         for e in range(self.n_experts)])
+
+    def imbalance(self, last: int | None = None) -> float:
+        """max/mean windowed expert load — the controller signal."""
+        v = self.load_vector(last).astype(np.float64)
+        mean = v.mean()
+        return float(v.max() / mean) if mean > 0 else 1.0
+
+
+class CapacityController:
+    """Adjusts the MoE capacity factor from windowed sketch imbalance.
+
+    hot (imbalance > hi): raise capacity (fewer drops); cold: lower it
+    (less padding compute). Classic feedback control, driven entirely by
+    time-sensitive LSketch queries.
+    """
+
+    def __init__(self, telemetry: RouterTelemetry, lo=1.1, hi=2.0,
+                 cf_min=1.0, cf_max=4.0, gain=0.25):
+        self.t = telemetry
+        self.lo, self.hi = lo, hi
+        self.cf_min, self.cf_max = cf_min, cf_max
+        self.gain = gain
+
+    def update(self, cf: float, last: int = 2) -> float:
+        imb = self.t.imbalance(last=last)
+        if imb > self.hi:
+            cf = min(self.cf_max, cf * (1 + self.gain))
+        elif imb < self.lo:
+            cf = max(self.cf_min, cf * (1 - self.gain / 2))
+        return cf

@@ -1,0 +1,31 @@
+import os
+import sys
+from pathlib import Path
+
+# tests see the default 1-device CPU (the dry-run sets its own flags in a
+# separate process); keep prealloc off for CI-sized machines
+os.environ.setdefault("XLA_PYTHON_CLIENT_PREALLOCATE", "false")
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_stream(rng, n=400, n_vertices=40, n_vlabels=3, n_elabels=5,
+                  tmax=800, weighted=True):
+    src = rng.integers(0, n_vertices, n).astype(np.int32)
+    dst = rng.integers(0, n_vertices, n).astype(np.int32)
+    la = (src % n_vlabels).astype(np.int32)
+    lb = (dst % n_vlabels).astype(np.int32)
+    le = rng.integers(0, n_elabels, n).astype(np.int32)
+    w = (rng.integers(1, 4, n) if weighted else np.ones(n)).astype(np.int32)
+    t = np.sort(rng.integers(0, tmax, n)).astype(np.int32)
+    return src, dst, la, lb, le, w, t

@@ -1,0 +1,67 @@
+"""Hash layer: jnp path must agree bit-for-bit with the Python oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hashing as H
+from repro.core import ref_prime as R
+
+
+def test_mix32_matches_python_oracle():
+    xs = np.arange(0, 5000, 7, dtype=np.int64)
+    for seed in (0, 1234, 0xDEADBEEF):
+        a = np.asarray(H.mix32(jnp.asarray(xs, jnp.uint32), seed))
+        b = np.array([R.mix32(int(x), seed) for x in xs], np.uint32)
+        assert np.array_equal(a, b)
+
+
+def test_hash31_range_and_agreement():
+    xs = np.arange(1000, dtype=np.int64)
+    a = np.asarray(H.hash31(jnp.asarray(xs, jnp.int32), 42))
+    b = np.array([R.hash31(int(x), 42) for x in xs])
+    assert np.array_equal(a, b)
+    assert (a >= 0).all() and (a < 2**31).all()
+
+
+def test_candidate_offsets_match():
+    f = jnp.asarray([0, 1, 17, 1023], jnp.int32)
+    outs = np.asarray(H.candidate_offsets(f, 8))
+    for i, fv in enumerate([0, 1, 17, 1023]):
+        assert list(outs[i]) == R.candidate_offsets(fv, 8)
+
+
+def test_sample_pairs_match_and_in_range():
+    fa = jnp.asarray([3, 99], jnp.int32)
+    fb = jnp.asarray([5, 11], jnp.int32)
+    ai, bi = H.sample_pairs(fa, fb, 8, 16)
+    ref0 = R.sample_pairs(3, 5, 8, 16)
+    assert [(int(a), int(b)) for a, b in zip(ai[0], bi[0])] == ref0
+    assert (np.asarray(ai) < 8).all() and (np.asarray(bi) < 8).all()
+
+
+def test_key_pack_roundtrip():
+    ia, ib = jnp.asarray([0, 7, 15]), jnp.asarray([1, 3, 15])
+    fa, fb = jnp.asarray([0, 1000, 2047]), jnp.asarray([5, 0, 2047])
+    key = H.pack_key(ia, ib, fa, fb, 2048)
+    ia2, ib2, fa2, fb2 = H.unpack_key(key, 2048)
+    for x, y in ((ia, ia2), (ib, ib2), (fa, fa2), (fb, fb2)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert (np.asarray(key) >= 0).all()  # EMPTY=-1 never collides
+
+
+def test_vertex_id_roundtrip():
+    m = jnp.asarray([0, 3, 63])
+    s = jnp.asarray([0, 100, 2047])
+    f = jnp.asarray([1, 99, 1023])
+    vid = H.pack_vertex_id(m, s, f, 1024)
+    m2, s2, f2 = H.unpack_vertex_id(vid, 1024)
+    assert np.array_equal(np.asarray(m), np.asarray(m2))
+    assert np.array_equal(np.asarray(s), np.asarray(s2))
+    assert np.array_equal(np.asarray(f), np.asarray(f2))
+
+
+def test_pool_slots_in_range():
+    a = jnp.arange(100, dtype=jnp.int32)
+    slots = H.pool_slot_seq(a, a + 7, 256, 16, 9)
+    assert slots.shape == (100, 16)
+    assert (np.asarray(slots) >= 0).all() and (np.asarray(slots) < 256).all()

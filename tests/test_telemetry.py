@@ -1,0 +1,82 @@
+"""LSketch telemetry integration: router sketch, controller, bigram sketch."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import lm
+from repro.telemetry import BigramSketch, CapacityController, RouterTelemetry
+
+
+def test_router_telemetry_tracks_loads():
+    tele = RouterTelemetry(n_experts=8, n_buckets=256, window_steps=64,
+                           subwindows=8)
+    rng = np.random.default_rng(0)
+    true_load = np.zeros(8, np.int64)
+    for step in range(0, 32, 4):
+        counts = rng.integers(0, 5, (256, 8))
+        counts[:, 3] += 10  # expert 3 is hot
+        tele.ingest(counts, step)
+        true_load += counts.sum(0)
+    got = tele.load_vector()
+    assert (got >= true_load).all()  # sketch over-estimates only
+    assert int(np.argmax(got)) == 3
+    assert tele.imbalance() > 1.5
+
+
+def test_windowed_expert_load_expires():
+    tele = RouterTelemetry(n_experts=4, window_steps=16, subwindows=4)
+    hot = np.zeros((256, 4), np.int64)
+    hot[:, 1] = 5
+    tele.ingest(hot, step=0)        # old burst on expert 1
+    cold = np.zeros((256, 4), np.int64)
+    cold[:10, 0] = 1
+    for s in (4, 8, 12, 16):        # window slides past step 0
+        tele.ingest(cold, step=s)
+    recent = tele.expert_load(1, last=2)
+    total = tele.expert_load(1)
+    assert recent == 0              # the burst is outside the recent slice
+    assert total <= 5 * 256         # and mostly expired from the window
+
+
+def test_capacity_controller_reacts():
+    tele = RouterTelemetry(n_experts=4, window_steps=16, subwindows=4)
+    ctrl = CapacityController(tele, lo=1.1, hi=1.5)
+    skew = np.zeros((256, 4), np.int64)
+    skew[:, 0] = 20
+    skew[:, 1:] = 1
+    tele.ingest(skew, step=0)
+    cf1 = ctrl.update(1.25)
+    assert cf1 > 1.25  # hot expert -> raise capacity
+    tele2 = RouterTelemetry(n_experts=4, window_steps=16, subwindows=4)
+    ctrl2 = CapacityController(tele2, lo=1.1, hi=1.5)
+    even = np.full((256, 4), 3, np.int64)
+    tele2.ingest(even, step=0)
+    cf2 = ctrl2.update(2.0)
+    assert cf2 < 2.0  # balanced -> shrink
+
+
+def test_moe_emits_telemetry_counts():
+    cfg = configs.get("kimi_k2_1t_a32b", reduced=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size, jnp.int32)
+    _, aux = lm.forward(cfg, params, {"tokens": toks, "labels": toks})
+    tele = np.asarray(aux["telemetry"])
+    assert tele.shape[1] == cfg.n_experts
+    # total routed = tokens * top_k * n_moe_layers
+    n_moe_layers = sum(1 for li in range(cfg.n_layers)
+                       if li >= cfg.first_k_dense and li % cfg.moe_every == 0)
+    assert tele.sum() == 2 * 16 * cfg.top_k * n_moe_layers
+
+
+def test_bigram_sketch_heavy_hitters():
+    bs = BigramSketch(window_steps=64, subwindows=8, d=128)
+    toks = np.zeros((2, 200), np.int64)
+    toks[:, 0::2] = 7
+    toks[:, 1::2] = 9  # dominant bigram (7 -> 9)
+    bs.ingest_tokens(toks, step=0)
+    assert bs.bigram_weight(7, 9) >= 190
+    assert bs.bigram_weight(3, 4) <= 5
+    assert bs.band_volume(1) >= 0
