@@ -1,8 +1,17 @@
 """Kernel micro-benchmarks: batched-vectorized vs scalar-sequential insert,
+engine insert-path comparison (fori-loop vs scan-fused vs Pallas-binned),
 and batched query throughput — the systems-side speedup story on CPU
-(TPU perf is structural, via the dry-run roofline)."""
+(TPU perf is structural, via the dry-run roofline).
+
+``python -m benchmarks.kernel_bench [--quick]`` runs everything and emits
+``BENCH_engine.json`` at the repo root (the CI smoke artifact).
+"""
 
 from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
 
 import numpy as np
 import jax
@@ -12,6 +21,7 @@ from repro.core import EdgeBatch, LSketchConfig, init_state
 from repro.core.lsketch import insert_window_batch
 from repro.core.queries import edge_query
 from repro.core.ref_prime import PrimeLSketch
+from repro.engine import insert as eng_insert
 
 from .common import timer, write_csv
 
@@ -64,6 +74,50 @@ def insert_throughput(n=20000):
     return rows
 
 
+def engine_insert_throughput(n=20000, subwindows_spanned=8,
+                             include_pallas=True):
+    """Insert-path comparison on one time-ordered batch spanning
+    ``subwindows_spanned`` subwindow boundaries:
+
+      * fori_chunked  — legacy host split loop, one dispatch per boundary;
+      * scan_fused    — engine single-dispatch ``lax.scan`` path;
+      * pallas_binned — engine dispatch with the block-binned kernel
+                        (interpret mode on CPU — structural check, not a
+                        CPU speed claim).
+
+    Emits ``BENCH_engine.json`` next to the repo root.
+    """
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=8192)
+    ws = cfg.subwindow_size
+    rng = np.random.default_rng(0)
+    batch = _batch(rng, n)
+    t = np.sort(rng.integers(0, ws * subwindows_spanned, n)).astype(np.int32)
+    batch = EdgeBatch(batch.src, batch.dst, batch.src_label, batch.dst_label,
+                      batch.edge_label, batch.weight, jnp.asarray(t))
+
+    paths = [("fori_chunked", "chunked"), ("scan_fused", "scan")]
+    if include_pallas:
+        paths.append(("pallas_binned", "pallas"))
+    rows, result = [], {}
+    for name, path in paths:
+        def run():
+            st = eng_insert.insert_batch(cfg, init_state(cfg), batch,
+                                         path=path)
+            jax.block_until_ready(st.C)
+            return st
+        dt, _ = timer(run, warmup=1, iters=3)
+        rows.append([name, n, subwindows_spanned,
+                     f"{dt / n * 1e6:.3f}", f"{dt:.3f}"])
+        result[name] = {"edges": n, "subwindows": subwindows_spanned,
+                        "us_per_edge": dt / n * 1e6, "total_s": dt}
+    write_csv("engine_insert_throughput",
+              ["impl", "edges", "subwindows", "us_per_edge", "total_s"], rows)
+    out = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    return rows
+
+
 def query_throughput(n=20000, q=4096):
     cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
                         window_size=100, pool_capacity=8192)
@@ -84,3 +138,27 @@ def query_throughput(n=20000, q=4096):
     write_csv("kernel_query_throughput",
               ["impl", "queries", "us_per_query", "total_s"], rows)
     return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="skip the interpret-mode Pallas comparison")
+    args = ap.parse_args(argv)
+    # power-of-two sizes: the fused path buckets batch shapes, so an
+    # aligned n measures the paths on identical item counts
+    n = 2048 if args.quick else 16384
+    rows = engine_insert_throughput(n=n, subwindows_spanned=4,
+                                    include_pallas=not args.no_pallas)
+    print("impl,edges,subwindows,us_per_edge,total_s")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    if not args.quick:
+        insert_throughput(n=n)
+        query_throughput(n=n)
+
+
+if __name__ == "__main__":
+    main()

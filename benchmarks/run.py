@@ -34,6 +34,9 @@ def main() -> None:
          lambda: paper_tables.tab5_query_latency(n_edges=nt)),
         ("kernel_insert_throughput",
          lambda: kernel_bench.insert_throughput(n=nt)),
+        ("engine_insert_throughput",
+         lambda: kernel_bench.engine_insert_throughput(
+             n=4096 if args.fast else 16384)),
         ("kernel_query_throughput",
          lambda: kernel_bench.query_throughput(n=nt)),
         ("roofline_tables",

@@ -8,6 +8,10 @@ Public API:
   GSS / LGS (baselines), PrimeLSketch (paper-literal oracle)
   merge_counters / psum_sketch (distributed merge)
   theory (Theorem 1 bounds)
+
+Window management, single-dispatch batch insertion, and the batched query
+frontend live in ``repro.engine`` (DESIGN.md §5); ``insert_batch`` and the
+object query methods here delegate to it.
 """
 
 from .types import (EMPTY, EdgeBatch, LSketchConfig, LSketchState, init_state,

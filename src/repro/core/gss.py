@@ -6,6 +6,13 @@ The paper itself builds LSketch "on top of GSS", so sharing the machinery is
 both faithful and the strongest possible parity for accuracy comparisons
 (identical fingerprints/probing => differences measure *only* the label and
 window features).
+
+Because GSS inherits LSketch wholesale it also inherits the engine layer
+for free: ingest is the single-dispatch ``repro.engine.insert`` path (every
+GSS batch is one subwindow, i.e. always Pallas-eligible), window state is
+the shared ``engine.WindowRing`` (a 1-slot ring), and the query methods
+accept arrays via ``repro.engine.query_batch`` — which recognizes GSS and
+forces the degenerate (label-free, window-free) arguments.
 """
 
 from __future__ import annotations

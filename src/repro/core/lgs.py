@@ -4,8 +4,16 @@ LGS extends TCM: ``t`` independent d'xd' count matrices. Each copy hashes
 the (vertex, vertex-label) pair to a row/column — *no fingerprints, no probe
 lists* — so distinct edges that share a cell are indistinguishable and every
 query overestimates by the full cell load. Labels ride along in per-cell
-per-label-bucket counters; timestamps use the same subwindow ring as LSketch.
+per-label-bucket counters; timestamps use the same subwindow ring as LSketch
+(via ``repro.engine.window.WindowRing``, the shared implementation).
 Queries take the min over the t copies (count-min style).
+
+Ingest is one jit dispatch per batch regardless of how many subwindows it
+spans: LGS updates are plain scatter-adds, so the engine's segment plan is
+applied fully vectorized (zero re-claimed slots up front, add only items
+whose subwindow still owns its ring slot at batch end). The query methods
+accept scalars or arrays (arrays return arrays — the
+``repro.engine.query_batch`` frontend convention).
 
 This mirrors the paper's experimental setup: "we use 6 copies of graph
 sketches to improve its accuracy ... LGS will use six times the storage
@@ -19,6 +27,9 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.engine import window as _window
+from repro.engine.window import WindowRing
 
 from . import hashing as hsh
 from .types import pytree_dataclass
@@ -75,47 +86,43 @@ class LGS:
     def insert(self, src, dst, src_label=None, dst_label=None,
                edge_label=None, weight=None, time=None):
         n = len(np.asarray(src))
+        if n == 0:  # empty batches are a no-op, not a zero-length dispatch
+            return self
         z = np.zeros(n, np.int32)
         src_label = z if src_label is None else src_label
         dst_label = z if dst_label is None else dst_label
         edge_label = z if edge_label is None else edge_label
         weight = np.ones(n, np.int32) if weight is None else weight
         time = z if time is None else np.asarray(time)
-        widx = np.asarray(time) // self.cfg.subwindow_size
-        cuts = np.flatnonzero(np.diff(widx)) + 1
-        starts = np.concatenate([[0], cuts])
-        ends = np.concatenate([cuts, [n]])
-        for a, b in zip(starts, ends):
-            self.state = _lgs_insert(
-                self.cfg.key(), self.state,
-                jnp.asarray(src[a:b], jnp.int32), jnp.asarray(dst[a:b], jnp.int32),
-                jnp.asarray(src_label[a:b], jnp.int32), jnp.asarray(dst_label[a:b], jnp.int32),
-                jnp.asarray(edge_label[a:b], jnp.int32), jnp.asarray(weight[a:b], jnp.int32),
-                int(widx[a]))
+        # bucket the batch size (scatter-adds of weight 0 are inert, so
+        # zero-weight replicas of the last row are safe padding)
+        arrs = [_window.pad_to_bucket(jnp.asarray(x, jnp.int32)) for x in
+                (src, dst, src_label, dst_label, edge_label, weight, time)]
+        arrs[5] = arrs[5].at[n:].set(0)  # padded weights
+        self.state = _lgs_insert_fused(self.cfg.key(), self.state, *arrs)
         return self
 
+    # ---- queries (scalar in -> int out; array in -> array out) ----
+
     def edge_weight(self, a, la, b, lb, le=None, last=None):
-        w = _lgs_edge_query(self.cfg.key(), self.state,
-                            jnp.asarray([a], jnp.int32), jnp.asarray([b], jnp.int32),
-                            jnp.asarray([la], jnp.int32), jnp.asarray([lb], jnp.int32),
-                            jnp.asarray([0 if le is None else le], jnp.int32),
-                            le is not None, last)
-        return int(w[0])
+        from repro.engine import query_batch as qb
+        out = qb.edge_weight_batch(self, a, la, b, lb, edge_label=le,
+                                   last=last)
+        return qb.scalarize(out, np.ndim(a) == 0)
 
     def vertex_weight(self, v, lv, le=None, direction="out", last=None):
-        w = _lgs_vertex_query(self.cfg.key(), self.state,
-                              jnp.asarray([v], jnp.int32), jnp.asarray([lv], jnp.int32),
-                              jnp.asarray([0 if le is None else le], jnp.int32),
-                              le is not None, direction, last)
-        return int(w[0])
+        from repro.engine import query_batch as qb
+        out = qb.vertex_weight_batch(self, v, lv, edge_label=le,
+                                     direction=direction, last=last)
+        return qb.scalarize(out, np.ndim(v) == 0)
 
     def reachable(self, a, la, b, lb, max_hops=64):
         """BFS over cells with positive counts (no reversibility in LGS: we
         walk cell columns as pseudo-nodes, per copy 0 — the LGS paper's own
-        approximation)."""
+        approximation). The walk always uses the full sliding window."""
         cfg = self.cfg
-        mask = self.state.slot_widx > (self.state.cur_widx - jnp.int32(
-            cfg.effective_k if max_hops else cfg.effective_k))
+        ring = WindowRing.for_config(cfg)
+        mask = ring.valid_mask(self.state.slot_widx, self.state.cur_widx)
         C0 = np.asarray(jnp.sum(self.state.C[0] * mask.astype(jnp.int32), -1))
         src_addr = int(_addr(cfg, jnp.int32(a), jnp.int32(la))[0])
         dst_addr = int(_addr(cfg, jnp.int32(b), jnp.int32(lb))[0])
@@ -134,33 +141,39 @@ class LGS:
         return False
 
 
-@functools.partial(jax.jit, static_argnums=(0, 8), donate_argnums=1)
-def _lgs_insert(key, state: LGSState, src, dst, la, lb, le, w, widx):
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=1)
+def _lgs_insert_fused(key, state: LGSState, src, dst, la, lb, le, w, times):
+    """One dispatch for a whole time-ordered batch (any #subwindows).
+
+    LGS has no structural claims (no keys, no pool), so the engine's
+    segment plan applies as pure vectorized masking: zero every re-claimed
+    ring slot up front, scatter-add each item into its own slot with
+    ``count_live`` gating — bit-identical to the per-subwindow replay.
+    """
     cfg = LGSConfig(*key)  # reconstruct from the hashable tuple
-    k = cfg.effective_k
-    widx = jnp.int32(widx)
-    slot = widx % jnp.int32(k)
-    stored = state.slot_widx[slot]
-    rst = (stored != widx) & (widx >= stored)
-    C = state.C.at[..., slot].set(jnp.where(rst, 0, state.C[..., slot]))
-    P = state.P.at[..., slot, :].set(jnp.where(rst, 0, state.P[..., slot, :]))
-    slot_widx = state.slot_widx.at[slot].set(jnp.where(rst, widx, stored))
-    cur = jnp.maximum(state.cur_widx, widx)
-    live = (widx >= stored).astype(w.dtype)
+    ring = WindowRing.for_config(cfg)
+    widx = (times // jnp.int32(cfg.subwindow_size)).astype(jnp.int32)
+    plan = ring.plan(state.slot_widx, state.cur_widx, widx)
+    C = WindowRing.zero_reset_slots(state.C, 3, plan.reset)
+    P = WindowRing.zero_reset_slots(state.P, 3, plan.reset)
+
     rows = _addr(cfg, src, la)  # [B, copies]
     cols = _addr(cfg, dst, lb)
     lei = hsh.edge_label_bucket(le, cfg.c, cfg.seed)
     copy_idx = jnp.broadcast_to(jnp.arange(cfg.copies, dtype=jnp.int32)[None], rows.shape)
-    wB = jnp.broadcast_to((w * live)[:, None], rows.shape)
+    wB = jnp.broadcast_to((w * plan.count_live.astype(w.dtype))[:, None],
+                          rows.shape)
     leB = jnp.broadcast_to(lei[:, None], rows.shape)
-    C = C.at[copy_idx, rows, cols, slot].add(wB)
-    P = P.at[copy_idx, rows, cols, slot, leB].add(wB)
-    return LGSState(C=C, P=P, slot_widx=slot_widx, cur_widx=cur)
+    slotB = jnp.broadcast_to(plan.slot[:, None], rows.shape)
+    C = C.at[copy_idx, rows, cols, slotB].add(wB)
+    P = P.at[copy_idx, rows, cols, slotB, leB].add(wB)
+    return LGSState(C=C, P=P, slot_widx=plan.slot_widx,
+                    cur_widx=plan.cur_widx)
 
 
 def _mask(cfg, state, last):
-    horizon = cfg.effective_k if last is None else min(last, cfg.effective_k)
-    return state.slot_widx > (state.cur_widx - jnp.int32(horizon))
+    return WindowRing.for_config(cfg).valid_mask(
+        state.slot_widx, state.cur_widx, last)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 7, 8))

@@ -15,7 +15,20 @@ Insertion semantics are *identical* to the paper's sequential process:
 The sliding window advances lazily: each batch is tagged with its logical
 subwindow index ``widx = t // W_s``; reusing a ring slot zeroes its counter
 planes. Query-time masking by ``slot_widx`` recency completes the semantics
-(equivalent to the paper's eager shift; property-tested against it).
+(equivalent to the paper's eager shift; property-tested against it). All
+ring mechanics live in ``repro.engine.window.WindowRing`` (shared with LGS
+and the Pallas insertion wrapper).
+
+Entry points (see DESIGN.md §5):
+  * ``repro.engine.insert.insert_batch`` — the default ingest path: one jit
+    dispatch per time-ordered batch regardless of how many subwindows it
+    spans, with the block-binned Pallas kernel as the TPU matrix path.
+    ``insert_batch`` below is a thin delegation kept for API stability.
+  * ``insert_window_batch`` — the per-subwindow ``lax.fori_loop`` reference
+    (interpreter/fallback path; the fused and Pallas paths are tested
+    bit-identical against it).
+  * ``repro.engine.query_batch`` — batched array-in/array-out queries; the
+    scalar methods attached in ``queries.py`` are length-1 wrappers.
 """
 
 from __future__ import annotations
@@ -26,6 +39,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.engine.window import WindowRing
 
 from . import hashing as hsh
 from .types import EMPTY, EdgeBatch, LSketchConfig, LSketchState, init_state
@@ -85,40 +100,38 @@ def window_index(cfg: LSketchConfig, t) -> jnp.ndarray:
 def valid_slot_mask(cfg: LSketchConfig, state: LSketchState, last: int | None = None):
     """Boolean [k]: ring slots inside the sliding window (optionally the most
     recent ``last`` subwindows only — time-restricted queries)."""
-    horizon = cfg.effective_k if last is None else min(last, cfg.effective_k)
-    return state.slot_widx > (state.cur_widx - jnp.int32(horizon))
+    return WindowRing.for_config(cfg).valid_mask(
+        state.slot_widx, state.cur_widx, last)
 
 
 # --------------------------------------------------------------------------
 # insertion
 # --------------------------------------------------------------------------
 
-def _advance_window(cfg: LSketchConfig, state: LSketchState, widx):
-    """Claim the ring slot for subwindow ``widx``; zero it if being reused.
+def advance_window(cfg: LSketchConfig, state: LSketchState, widx):
+    """Claim the ring slot for scalar subwindow ``widx`` via ``WindowRing``
+    and zero its counter planes on reuse.
 
     Returns (state, slot, live). A batch whose subwindow already expired
     (stream far ahead of it) contributes nothing; caller masks with ``live``.
+    Shared by the fori-loop reference path below and the Pallas wrapper in
+    ``kernels/sketch_insert/ops.py``.
     """
-    k = cfg.effective_k
-    slot = widx % jnp.int32(k)
-    stored = state.slot_widx[slot]
-    need_reset = stored != widx
-    live = widx >= stored  # widx < stored => slot owned by newer subwindow
-    rst = need_reset & live
-    C = state.C.at[:, :, :, slot].set(
-        jnp.where(rst, 0, state.C[:, :, :, slot]))
-    P = state.P.at[:, :, :, slot].set(
-        jnp.where(rst, 0, state.P[:, :, :, slot]))
-    pC = state.pool_C.at[:, slot].set(
-        jnp.where(rst, 0, state.pool_C[:, slot]))
-    pP = state.pool_P.at[:, slot].set(
-        jnp.where(rst, 0, state.pool_P[:, slot]))
-    slot_widx = state.slot_widx.at[slot].set(jnp.where(rst, widx, stored))
-    cur = jnp.maximum(state.cur_widx, widx)
+    ring = WindowRing.for_config(cfg)
+    claim = ring.claim(state.slot_widx, state.cur_widx,
+                       jnp.asarray(widx, jnp.int32))
     new = LSketchState(
-        key=state.key, C=C, P=P, pool_key=state.pool_key, pool_C=pC,
-        pool_P=pP, pool_lost=state.pool_lost, slot_widx=slot_widx, cur_widx=cur)
-    return new, slot, live
+        key=state.key,
+        C=WindowRing.zero_slot_plane(state.C, 3, claim.slot, claim.reset),
+        P=WindowRing.zero_slot_plane(state.P, 3, claim.slot, claim.reset),
+        pool_key=state.pool_key,
+        pool_C=WindowRing.zero_slot_plane(state.pool_C, 1, claim.slot,
+                                          claim.reset),
+        pool_P=WindowRing.zero_slot_plane(state.pool_P, 1, claim.slot,
+                                          claim.reset),
+        pool_lost=state.pool_lost, slot_widx=claim.slot_widx,
+        cur_widx=claim.cur_widx)
+    return new, claim.slot, claim.live
 
 
 def _insert_loop(cfg: LSketchConfig, state: LSketchState, slot, live,
@@ -173,29 +186,29 @@ def _insert_loop(cfg: LSketchConfig, state: LSketchState, slot, live,
 @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
 def insert_window_batch(cfg: LSketchConfig, state: LSketchState,
                         batch: EdgeBatch, widx: jax.Array) -> LSketchState:
-    """Insert a batch of items that all belong to subwindow ``widx``."""
+    """Insert a batch of items that all belong to subwindow ``widx``.
+
+    The sequential ``lax.fori_loop`` reference (interpreter/fallback path);
+    production ingest goes through ``repro.engine.insert.insert_batch``.
+    """
     pa = precompute(cfg, batch.src, batch.src_label)
     pb = precompute(cfg, batch.dst, batch.dst_label)
     probes = edge_probes(cfg, pa, pb)
     le_idx = hsh.edge_label_bucket(batch.edge_label, cfg.c, cfg.seed)
-    state, slot, live = _advance_window(cfg, state, jnp.asarray(widx, jnp.int32))
+    state, slot, live = advance_window(cfg, state, jnp.asarray(widx, jnp.int32))
     return _insert_loop(cfg, state, slot, live, probes, le_idx,
                         batch.weight.astype(state.C.dtype))
 
 
-def insert_batch(cfg: LSketchConfig, state: LSketchState, batch: EdgeBatch) -> LSketchState:
-    """Host wrapper: split a time-ordered batch at subwindow boundaries and
-    feed each chunk to the jit'd per-subwindow insert."""
-    t = np.asarray(batch.time)
-    widx = t // cfg.subwindow_size
-    # chunk boundaries where the subwindow index changes
-    cuts = np.flatnonzero(np.diff(widx)) + 1
-    starts = np.concatenate([[0], cuts])
-    ends = np.concatenate([cuts, [len(t)]])
-    for a, b in zip(starts, ends):
-        chunk = jax.tree.map(lambda x: x[a:b], batch)
-        state = insert_window_batch(cfg, state, chunk, int(widx[a]))
-    return state
+def insert_batch(cfg: LSketchConfig, state: LSketchState, batch: EdgeBatch,
+                 path: str = "auto") -> LSketchState:
+    """Insert a time-ordered batch in one jit dispatch (any #subwindows).
+
+    Thin delegation to ``repro.engine.insert.insert_batch`` (kept here for
+    API stability); see that module for the path options.
+    """
+    from repro.engine.insert import insert_batch as _engine_insert
+    return _engine_insert(cfg, state, batch, path=path)
 
 
 # --------------------------------------------------------------------------
@@ -210,13 +223,17 @@ class LSketch:
     >>> sk.edge_weight(a, la, b, lb)
     """
 
-    def __init__(self, cfg: LSketchConfig, state: LSketchState | None = None):
+    def __init__(self, cfg: LSketchConfig, state: LSketchState | None = None,
+                 insert_path: str = "auto"):
         self.cfg = cfg
         self.state = state if state is not None else init_state(cfg)
+        self.insert_path = insert_path
 
     def insert(self, src, dst, src_label=None, dst_label=None,
                edge_label=None, weight=None, time=None) -> "LSketch":
         n = len(np.asarray(src))
+        if n == 0:  # empty batches are a no-op, not a zero-length dispatch
+            return self
         z = np.zeros(n, np.int32)
         batch = EdgeBatch(
             src=jnp.asarray(src, jnp.int32),
@@ -227,7 +244,8 @@ class LSketch:
             weight=jnp.asarray(np.ones(n, np.int32) if weight is None else weight, jnp.int32),
             time=jnp.asarray(z if time is None else time, jnp.int32),
         )
-        self.state = insert_batch(self.cfg, self.state, batch)
+        self.state = insert_batch(self.cfg, self.state, batch,
+                                  path=self.insert_path)
         return self
 
     # query methods are attached in queries.py to keep this module focused

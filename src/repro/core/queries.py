@@ -402,37 +402,31 @@ def subgraph_query(cfg: LSketchConfig, state: LSketchState, edges,
 
 # --------------------------------------------------------------------------
 # attach friendly methods to the LSketch wrapper
+#
+# These are length-1 (or pass-through array) wrappers over the batched
+# frontend in repro.engine.query_batch — one calling convention shared with
+# LGS/GSS, bucketed batch shapes, no per-query host round-trip beyond the
+# final scalarize.
 # --------------------------------------------------------------------------
 
-def _as1(x):
-    return jnp.atleast_1d(jnp.asarray(x, jnp.int32))
-
-
 def _edge_weight(self: LSketch, a, la, b, lb, le=None, last=None):
-    les = _as1(0 if le is None else le)
-    w, wl = edge_query(self.cfg, self.state, _as1(a), _as1(b),
-                       (_as1(la), _as1(lb), les),
-                       with_edge_label=le is not None, last=last)
-    out = wl if le is not None else w
-    return int(out[0]) if np.ndim(a) == 0 else np.asarray(out)
+    from repro.engine import query_batch as qb
+    out = qb.edge_weight_batch(self, a, la, b, lb, edge_label=le, last=last)
+    return qb.scalarize(out, np.ndim(a) == 0)
 
 
 def _vertex_weight(self: LSketch, v, lv, le=None, direction="out", last=None):
-    les = _as1(0 if le is None else le)
-    w, wl = vertex_query(self.cfg, self.state, _as1(v), (_as1(lv), les),
-                         direction=direction, with_edge_label=le is not None,
-                         last=last)
-    out = wl if le is not None else w
-    return int(out[0]) if np.ndim(v) == 0 else np.asarray(out)
+    from repro.engine import query_batch as qb
+    out = qb.vertex_weight_batch(self, v, lv, edge_label=le,
+                                 direction=direction, last=last)
+    return qb.scalarize(out, np.ndim(v) == 0)
 
 
 def _label_aggregate(self: LSketch, lv, le=None, direction="out", last=None):
-    w, wl = vertex_label_aggregate(
-        self.cfg, self.state, _as1(lv), direction=direction,
-        with_edge_label=le is not None, last=last,
-        edge_label=None if le is None else _as1(le))
-    out = wl if le is not None else w
-    return int(out[0]) if np.ndim(lv) == 0 else np.asarray(out)
+    from repro.engine import query_batch as qb
+    out = qb.label_aggregate_batch(self, lv, edge_label=le,
+                                   direction=direction, last=last)
+    return qb.scalarize(out, np.ndim(lv) == 0)
 
 
 def _reachable(self: LSketch, a, la, b, lb, max_hops=64):

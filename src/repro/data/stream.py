@@ -173,3 +173,29 @@ class GroundTruth:
     def subgraph_count(self, edges, last=None) -> int:
         vals = [self.edge_weight(a, b, le, last) for (a, b, le) in edges]
         return min(vals) if vals else 0
+
+
+def edge_batches(st: GraphStream, batch_size: int):
+    """Yield a stream as ``EdgeBatch`` pytrees of ``batch_size`` items.
+
+    The ingest-loop shape the engine layer is built for: each yielded batch
+    is time-ordered (streams are generated sorted) and may span subwindow
+    boundaries — ``repro.engine.insert.insert_batch`` ingests it in one
+    dispatch either way. The final short batch is yielded as-is (the
+    engine's size bucketing keeps it from forcing a fresh compile).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.types import EdgeBatch
+
+    for a in range(0, len(st), batch_size):
+        b = min(a + batch_size, len(st))
+        yield EdgeBatch(
+            src=jnp.asarray(st.src[a:b], jnp.int32),
+            dst=jnp.asarray(st.dst[a:b], jnp.int32),
+            src_label=jnp.asarray(st.src_label[a:b], jnp.int32),
+            dst_label=jnp.asarray(st.dst_label[a:b], jnp.int32),
+            edge_label=jnp.asarray(st.edge_label[a:b], jnp.int32),
+            weight=jnp.asarray(st.weight[a:b], jnp.int32),
+            time=jnp.asarray(st.time[a:b], jnp.int32),
+        )

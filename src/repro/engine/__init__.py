@@ -1,0 +1,45 @@
+"""repro.engine — shared sketch-engine layer (DESIGN.md §5).
+
+One implementation of the machinery every sketch in this repo shares:
+
+  * ``WindowRing``       — lazy subwindow ring: claiming, zeroing, masking,
+                           and the in-jit multi-subwindow segment plan;
+  * ``insert_batch``     — single-dispatch windowed insertion (fused
+                           ``lax.scan``; Pallas block-binned matrix path);
+  * ``query_batch``      — batched array-in/array-out query frontend
+                           dispatching across LSketch / LGS / GSS.
+
+Import structure: ``window`` sits below ``repro.core`` (core imports it);
+``insert`` and ``query_batch`` sit above (they import core), so they load
+lazily via PEP 562 to keep the package import-cycle-free.
+"""
+
+from __future__ import annotations
+
+from .window import RingClaim, SegmentPlan, WindowRing
+
+_LAZY = {
+    "insert": "repro.engine.insert",
+    "query_batch": "repro.engine.query_batch",
+    "insert_batch": ("repro.engine.insert", "insert_batch"),
+    "insert_batch_chunked": ("repro.engine.insert", "insert_batch_chunked"),
+    "edge_weight_batch": ("repro.engine.query_batch", "edge_weight_batch"),
+    "vertex_weight_batch": ("repro.engine.query_batch",
+                            "vertex_weight_batch"),
+    "label_aggregate_batch": ("repro.engine.query_batch",
+                              "label_aggregate_batch"),
+}
+
+__all__ = ["RingClaim", "SegmentPlan", "WindowRing"] + sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    import importlib
+
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    if isinstance(target, str):
+        return importlib.import_module(target)
+    mod, attr = target
+    return getattr(importlib.import_module(mod), attr)

@@ -1,0 +1,233 @@
+"""Single-dispatch windowed insertion for LSketch-layout states.
+
+The seed implementation split every batch at subwindow boundaries on the
+host (``np.diff`` + Python loop) and dispatched one jit call per chunk —
+``O(#subwindows)`` dispatches, a fresh retrace for every new chunk length,
+and a dead host-device sync per boundary. This module replaces that with a
+**single jitted function per batch shape**:
+
+  1. ``WindowRing.plan`` computes per-item segment membership (ring slot,
+     structural/counter liveness) and per-slot reset flags *inside* jit;
+  2. slot planes flagged for reset are zeroed up front (vectorized — the
+     plan proves this commutes with the segment-by-segment replay);
+  3. one ``lax.scan`` walks the time-ordered batch in stream order with the
+     paper's exact first-fit probe semantics, each item writing its own
+     ring slot — so a batch spanning any number of subwindows is one scan;
+  4. when the batch sits in a single subwindow (the overwhelmingly common
+     case for a real ingest loop) and the sketch uses uniform blocking, the
+     matrix insert is routed to the block-binned Pallas kernel
+     (``kernels/sketch_insert``) — the default fast path on TPU; the scan
+     path doubles as the interpreter/CPU fallback and the only path for
+     skewed blocking or multi-subwindow batches.
+
+Host entry point: ``insert_batch(cfg, state, batch, path=...)`` — pads the
+batch to a size bucket (compile-count stays O(log max_batch), padding rows
+are fully masked) and makes exactly one dispatch.
+
+Equivalence contract: for any time-ordered batch the final state is
+bit-identical to the legacy chunked replay (``insert_batch_chunked``) and
+query-identical to the paper-literal oracle (``core/ref_prime.py``).
+Property-tested in ``tests/test_engine.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing as hsh
+from repro.core.lsketch import edge_probes, insert_window_batch, precompute
+from repro.core.types import EMPTY, EdgeBatch, LSketchConfig, LSketchState
+
+from .window import WindowRing, pad_to_bucket
+
+# trace-time counters keyed by path name — tests assert single-compile
+# behaviour (one trace per (cfg, batch-shape), zero traces per extra
+# subwindow) by reading these before/after a workload.
+TRACE_COUNTS = {"fused": 0}
+
+
+def _segment_count(widx):
+    """Number of distinct contiguous subwindow segments in a sorted batch."""
+    if widx.shape[0] <= 1:
+        return jnp.int32(widx.shape[0])
+    return jnp.int32(1) + jnp.sum((widx[1:] != widx[:-1]).astype(jnp.int32))
+
+
+def _scan_insert(cfg: LSketchConfig, state: LSketchState, probes, le_idx,
+                 slot, w_count, w_key, valid) -> LSketchState:
+    """Stream-order first-fit insertion; per-item ring slot and liveness.
+
+    Mirrors the paper's Algorithm 2 walk exactly (s probe cells x 2 twins,
+    first key-match-or-empty wins, additional pool on miss). ``w_count``
+    is the weight that survives the batch's window advances; ``w_key``
+    gates structural claims (matches the per-chunk reference, where a
+    chunk whose counters are later zeroed still claims keys/pool slots).
+    """
+    pool_slots = hsh.pool_slot_seq(
+        probes.pid_src, probes.pid_dst, cfg.pool_capacity, cfg.pool_probes,
+        cfg.seed)
+
+    def body(st: LSketchState, xs):
+        rows, cols, key, le, wc, wk, sl, ps, pid_s, pid_d, ok_item = xs
+        # --- matrix probe: (s, 2) in paper order (probe-major, twin-minor)
+        cur = st.key[rows[:, None], cols[:, None], jnp.arange(2)[None, :]]
+        ok = (cur == key[:, None]) | (cur == EMPTY)
+        flat = ok.reshape(-1)
+        found = flat.any() & ok_item
+        first = jnp.argmax(flat)
+        pi, tz = first // 2, first % 2
+        rr, cc = rows[pi], cols[pi]
+        old = st.key[rr, cc, tz]
+        new_key = st.key.at[rr, cc, tz].set(jnp.where(found, key[pi], old))
+        wm = jnp.where(found, wc, 0)
+        C = st.C.at[rr, cc, tz, sl].add(wm)
+        P = st.P.at[rr, cc, tz, sl, le].add(wm)
+        # --- pool fallback
+        pk = st.pool_key[ps]
+        pm = (pk[:, 0] == pid_s) & (pk[:, 1] == pid_d)
+        pok = pm | (pk[:, 0] == EMPTY)
+        pfound = pok.any() & ~found & (wk > 0)
+        pfirst = jnp.argmax(pok)
+        pslot = ps[pfirst]
+        pold = st.pool_key[pslot]
+        pool_key = st.pool_key.at[pslot, 0].set(
+            jnp.where(pfound, pid_s, pold[0]))
+        pool_key = pool_key.at[pslot, 1].set(
+            jnp.where(pfound, pid_d, pold[1]))
+        pw = jnp.where(pfound, wc, 0)
+        pool_C = st.pool_C.at[pslot, sl].add(pw)
+        pool_P = st.pool_P.at[pslot, sl, le].add(pw)
+        lost = st.pool_lost + jnp.where(ok_item & ~found & ~pok.any(), wk, 0)
+        return LSketchState(
+            key=new_key, C=C, P=P, pool_key=pool_key, pool_C=pool_C,
+            pool_P=pool_P, pool_lost=lost, slot_widx=st.slot_widx,
+            cur_widx=st.cur_widx), None
+
+    xs = (probes.rows, probes.cols, probes.keys, le_idx, w_count, w_key,
+          slot, pool_slots, probes.pid_src, probes.pid_dst, valid)
+    state, _ = jax.lax.scan(body, state, xs)
+    return state
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("use_pallas", "interpret"),
+                   donate_argnums=1)
+def _insert_batch_fused(cfg: LSketchConfig, state: LSketchState,
+                        batch: EdgeBatch, n_valid: jax.Array,
+                        use_pallas: bool = False,
+                        interpret: bool = True) -> LSketchState:
+    """One dispatch for a whole time-ordered batch (any #subwindows).
+
+    ``n_valid``: traced scalar — rows >= n_valid are padding and are fully
+    masked (they claim no keys, no pool slots, add no weight), so the host
+    wrapper can bucket batch sizes without changing semantics.
+    """
+    TRACE_COUNTS["fused"] += 1  # trace-time side effect (compile counter)
+    B = batch.src.shape[0]
+    if B == 0:
+        return state
+    valid = jnp.arange(B, dtype=jnp.int32) < jnp.asarray(n_valid, jnp.int32)
+
+    ring = WindowRing.for_config(cfg)
+    widx = (batch.time.astype(jnp.int32)
+            // jnp.int32(cfg.subwindow_size)).astype(jnp.int32)
+    plan = ring.plan(state.slot_widx, state.cur_widx, widx, valid=valid)
+
+    # apply the plan: zero re-claimed slot planes, commit ring bookkeeping
+    C = WindowRing.zero_reset_slots(state.C, 3, plan.reset)
+    P = WindowRing.zero_reset_slots(state.P, 3, plan.reset)
+    pool_C = WindowRing.zero_reset_slots(state.pool_C, 1, plan.reset)
+    pool_P = WindowRing.zero_reset_slots(state.pool_P, 1, plan.reset)
+    state = LSketchState(key=state.key, C=C, P=P, pool_key=state.pool_key,
+                         pool_C=pool_C, pool_P=pool_P,
+                         pool_lost=state.pool_lost,
+                         slot_widx=plan.slot_widx, cur_widx=plan.cur_widx)
+
+    pa = precompute(cfg, batch.src, batch.src_label)
+    pb = precompute(cfg, batch.dst, batch.dst_label)
+    probes = edge_probes(cfg, pa, pb)
+    le_idx = hsh.edge_label_bucket(batch.edge_label, cfg.c, cfg.seed)
+    w = batch.weight.astype(state.C.dtype)
+    w_count = w * plan.count_live.astype(w.dtype)
+    w_key = w * plan.key_live.astype(w.dtype)
+
+    def scan_path(st):
+        return _scan_insert(cfg, st, probes, le_idx, plan.slot, w_count,
+                            w_key, valid)
+
+    if not use_pallas:
+        return scan_path(state)
+
+    # Pallas fast path: eligible iff the (valid prefix of the) batch sits in
+    # one subwindow — then every item shares plan.slot[0] and
+    # count_live == key_live, which is exactly the kernel's contract.
+    from repro.kernels.sketch_insert.ops import matrix_insert_binned
+
+    def pallas_path(st):
+        return matrix_insert_binned(cfg, st, probes, le_idx, w_count,
+                                    plan.slot[0], valid=valid,
+                                    max_bin=B, interpret=interpret)
+
+    one_segment = _segment_count(
+        jnp.where(valid, widx, widx[0])) == jnp.int32(1)
+    return jax.lax.cond(one_segment, pallas_path, scan_path, state)
+
+
+# --------------------------------------------------------------------------
+# host frontends
+# --------------------------------------------------------------------------
+
+def default_path() -> str:
+    """Pallas binned kernel is the default matrix-insert path on TPU;
+    the fused scan is the interpreter/CPU fallback."""
+    return "pallas" if jax.default_backend() == "tpu" else "scan"
+
+
+def insert_batch(cfg: LSketchConfig, state: LSketchState, batch: EdgeBatch,
+                 path: str = "auto", bucket: bool = True) -> LSketchState:
+    """Insert a time-ordered batch in **one** jit dispatch.
+
+    path: "auto" (backend default), "scan" (fused lax.scan), "pallas"
+    (fused + block-binned kernel for single-subwindow batches; requires
+    uniform blocking), or "chunked" (legacy host split loop — reference).
+    """
+    n = int(batch.src.shape[0])
+    if n == 0:
+        return state
+    if path == "auto":
+        path = default_path()
+    if path == "pallas" and cfg.block_bounds is not None:
+        path = "scan"  # kernel requires uniform tiles; silent fallback
+    if path == "chunked":
+        return insert_batch_chunked(cfg, state, batch)
+    if path not in ("scan", "pallas"):
+        raise ValueError(f"unknown insert path {path!r}")
+    padded = jax.tree.map(pad_to_bucket, batch) if bucket else batch
+    interpret = jax.default_backend() != "tpu"
+    return _insert_batch_fused(cfg, state, padded, jnp.int32(n),
+                               use_pallas=path == "pallas",
+                               interpret=interpret)
+
+
+def insert_batch_chunked(cfg: LSketchConfig, state: LSketchState,
+                         batch: EdgeBatch) -> LSketchState:
+    """Legacy host-side chunk loop (one dispatch per subwindow boundary).
+
+    Kept as the sequential reference the fused path is tested against and
+    as the last-resort fallback; new code should call ``insert_batch``.
+    """
+    t = np.asarray(batch.time)
+    if t.shape[0] == 0:
+        return state
+    widx = t // cfg.subwindow_size
+    cuts = np.flatnonzero(np.diff(widx)) + 1
+    starts = np.concatenate([[0], cuts])
+    ends = np.concatenate([cuts, [len(t)]])
+    for a, b in zip(starts, ends):
+        chunk = jax.tree.map(lambda x: x[a:b], batch)
+        state = insert_window_batch(cfg, state, chunk, int(widx[a]))
+    return state

@@ -1,0 +1,170 @@
+"""WindowRing — the one implementation of the paper's lazy subwindow ring.
+
+Every sketch in this repo (LSketch, LGS, GSS-as-degenerate-LSketch) shares
+the same sliding-window mechanism (paper Algorithm 2, lines 6-9): ``k`` ring
+slots hold the ``k`` most recent subwindows; a slot is zeroed lazily when a
+newer subwindow claims it; queries mask slots by recency instead of shifting
+counters eagerly. This module owns that mechanism once — slot claiming,
+plane zeroing, validity masking, and the in-jit *segment plan* that lets a
+single dispatch ingest a time-ordered batch spanning any number of
+subwindows.
+
+The ring itself is layout-agnostic: it operates on the two bookkeeping
+arrays every sketch state carries
+
+  * ``slot_widx``: int32 [k] — logical subwindow index held by each slot
+    (``NEVER`` when the slot has never been filled);
+  * ``cur_widx``:  int32 []  — the most recent subwindow index seen.
+
+and hands back per-slot reset flags / per-item liveness that the caller
+applies to its own counter tensors (which may hang the slot axis anywhere —
+see ``zero_reset_slots``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# "slot never filled" sentinel; must equal repro.core.types.NEVER (this
+# module sits below repro.core in the import graph, so it cannot import it)
+NEVER = -(2**30)
+
+
+class RingClaim(NamedTuple):
+    """Result of claiming the ring slot for one subwindow (scalar widx)."""
+
+    slot: jax.Array  # [] ring slot owned by widx
+    live: jax.Array  # [] bool: False iff the slot is owned by a newer widx
+    reset: jax.Array  # [] bool: slot planes must be zeroed before inserting
+    slot_widx: jax.Array  # [k] updated
+    cur_widx: jax.Array  # [] updated
+
+
+class SegmentPlan(NamedTuple):
+    """In-jit plan for a time-ordered batch spanning >= 1 subwindows.
+
+    ``key_live`` gates structural claims (matrix keys, pool entries): an item
+    is structurally live iff its subwindow is not older than the one already
+    owning its slot. ``count_live`` additionally requires that no later item
+    in the same batch re-claims the slot — the counters of such an item
+    would be zeroed before the batch ends, so the fused path simply never
+    adds them (bit-identical final state, one pass).
+    """
+
+    slot: jax.Array  # [B] ring slot per item
+    key_live: jax.Array  # [B] bool
+    count_live: jax.Array  # [B] bool
+    reset: jax.Array  # [k] bool: slots whose planes must be zeroed up front
+    slot_widx: jax.Array  # [k] final
+    cur_widx: jax.Array  # [] final
+
+
+class WindowRing:
+    """Slot claiming / zeroing / masking for a ``k``-slot subwindow ring."""
+
+    def __init__(self, k: int):
+        self.k = int(k)
+
+    @classmethod
+    def for_config(cls, cfg) -> "WindowRing":
+        """Any config exposing ``effective_k`` (LSketchConfig, LGSConfig)."""
+        return cls(cfg.effective_k)
+
+    # ---- querying ---------------------------------------------------------
+
+    def valid_mask(self, slot_widx, cur_widx, last: int | None = None):
+        """Boolean [k]: slots inside the sliding window (optionally only the
+        most recent ``last`` subwindows — time-restricted queries)."""
+        horizon = self.k if last is None else min(int(last), self.k)
+        return slot_widx > (cur_widx - jnp.int32(horizon))
+
+    # ---- single-subwindow claim (per-chunk fallback & Pallas wrapper) -----
+
+    def claim(self, slot_widx, cur_widx, widx) -> RingClaim:
+        """Claim the slot for scalar subwindow ``widx``; idempotent when the
+        slot already holds ``widx``, a no-op when it holds a newer one."""
+        widx = jnp.asarray(widx, jnp.int32)
+        slot = widx % jnp.int32(self.k)
+        stored = slot_widx[slot]
+        live = widx >= stored
+        reset = (stored != widx) & live
+        new_slot_widx = slot_widx.at[slot].set(jnp.where(reset, widx, stored))
+        new_cur = jnp.maximum(cur_widx, widx)
+        return RingClaim(slot, live, reset, new_slot_widx, new_cur)
+
+    # ---- whole-batch segment plan (the fused single-dispatch path) --------
+
+    def plan(self, slot_widx, cur_widx, widx, valid=None) -> SegmentPlan:
+        """Plan the ring updates for a batch of per-item subwindow indices.
+
+        ``widx``: int32 [B], non-decreasing (time-ordered stream), B >= 1.
+        ``valid``: optional bool [B] marking real items (False = padding).
+
+        Sequential equivalence: replaying the batch segment-by-segment with
+        ``claim`` + zero-on-reset yields exactly (a) slots reset whenever a
+        live claim changes their stored widx, (b) counters surviving only
+        for items whose subwindow is the *final* claimant of their slot,
+        (c) ``slot_widx`` = max over live claims. The plan computes all
+        three vectorized so one `lax.scan` over items can apply them.
+        """
+        widx = jnp.asarray(widx, jnp.int32)
+        slot = widx % jnp.int32(self.k)
+        stored = slot_widx[slot]  # [B] pre-batch owner of each item's slot
+        key_live = widx >= stored
+        if valid is not None:
+            key_live = key_live & valid
+        claimed = jnp.where(key_live, widx, jnp.int32(NEVER))
+        new_slot_widx = slot_widx.at[slot].max(claimed)
+        # counters survive iff this item's subwindow ends the batch owning
+        # its slot (no later in-batch re-claim zeroes it)
+        count_live = key_live & (widx == new_slot_widx[slot])
+        reset = new_slot_widx > slot_widx
+        batch_max = jnp.max(jnp.where(key_live, widx, jnp.int32(NEVER)))
+        new_cur = jnp.maximum(cur_widx, batch_max)
+        return SegmentPlan(slot, key_live, count_live, reset,
+                           new_slot_widx, new_cur)
+
+    # ---- zeroing helpers --------------------------------------------------
+
+    @staticmethod
+    def zero_slot_plane(arr, axis: int, slot, reset):
+        """Zero ``arr[..., slot, ...]`` (slot axis at ``axis``) iff ``reset``.
+
+        ``slot``/``reset`` are traced scalars (the ``claim`` path)."""
+        axis = axis % arr.ndim
+        idx = (slice(None),) * axis + (slot,)
+        return arr.at[idx].set(jnp.where(reset, 0, arr[idx]))
+
+    @staticmethod
+    def zero_reset_slots(arr, axis: int, reset):
+        """Zero every slot flagged in ``reset`` ([k] bool) along ``axis``."""
+        axis = axis % arr.ndim
+        shape = [1] * arr.ndim
+        shape[axis] = reset.shape[0]
+        return jnp.where(jnp.reshape(reset, shape), 0, arr)
+
+
+def bucket_size(n: int, floor: int = 64) -> int:
+    """Next power-of-two >= n (>= floor) — the shared batch-shape bucketing
+    policy: every ingest/query frontend pads to these sizes so a serving
+    loop compiles O(log max_batch) shapes total."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_to_bucket(x, floor: int = 64):
+    """Pad a 1-D array to its size bucket by replicating the last element.
+
+    The one ingest-padding policy (replicate-last keeps `time` columns
+    non-decreasing, so segment plans are untouched); callers mask the pad
+    rows (LSketch: traced ``n_valid``; LGS: zeroed pad weights)."""
+    x = jnp.asarray(x)
+    to = bucket_size(x.shape[0], floor)
+    if to == x.shape[0]:
+        return x
+    return jnp.concatenate([x, jnp.broadcast_to(x[-1], (to - x.shape[0],))])

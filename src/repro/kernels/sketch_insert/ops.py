@@ -1,13 +1,19 @@
-"""Public wrapper for the block-binned Pallas insertion kernel.
+"""Public wrappers for the block-binned Pallas insertion kernel.
 
 Pipeline (DESIGN.md §2 "binned batch insertion"):
-  1. advance the sliding window (claim/zero the ring slot);
+  1. advance the sliding window (``engine.WindowRing`` claim/zero — or the
+     fused segment plan when called from ``engine.insert``);
   2. vectorized addressing: probes, keys, block ids for the whole batch;
   3. stable binning by destination block (order within a block == stream
-     order, so first-fit semantics match the sequential algorithm exactly);
+    order, so first-fit semantics match the sequential algorithm exactly);
   4. Pallas kernel over the (n x n) block grid, current-slot planes in VMEM;
   5. host-side additional-pool pass for the (rare) all-probes-occupied edges,
-     in original stream order.
+    in original stream order.
+
+``matrix_insert_binned`` is the composable middle: it takes pre-addressed
+probes plus the (single) target ring slot and is what the engine's fused
+single-dispatch path routes through; ``insert_window_batch_pallas`` is the
+standalone per-subwindow drop-in kept for tests and direct use.
 
 Restrictions: uniform blocking only (equal tiles — skewed blocking falls
 back to `repro.core.insert_window_batch`, the fori-loop path).
@@ -21,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hashing as hsh
-from repro.core.lsketch import _advance_window, edge_probes, precompute
+from repro.core.lsketch import (EdgeProbes, advance_window, edge_probes,
+                                precompute)
 from repro.core.types import EdgeBatch, LSketchConfig, LSketchState
 
 from .kernel import sketch_insert_kernel
@@ -59,28 +66,26 @@ def _pool_pass(cfg: LSketchConfig, state: LSketchState, slot, probes, le_idx,
     return jax.lax.fori_loop(0, n, body, state)
 
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("max_bin", "interpret"),
-                   donate_argnums=1)
-def insert_window_batch_pallas(cfg: LSketchConfig, state: LSketchState,
-                               batch: EdgeBatch, widx,
-                               max_bin: int | None = None,
-                               interpret: bool = True) -> LSketchState:
-    """Drop-in replacement for ``repro.core.insert_window_batch``."""
+def matrix_insert_binned(cfg: LSketchConfig, state: LSketchState,
+                         probes: EdgeProbes, le_idx, weight, slot,
+                         valid=None, max_bin: int | None = None,
+                         interpret: bool = True) -> LSketchState:
+    """Block-binned insertion of a pre-addressed batch into ring ``slot``.
+
+    Traced (not jitted) — compose inside a jitted caller. ``weight`` must
+    already carry the window-liveness mask (zeros insert nothing and claim
+    nothing); ``slot`` is the (traced) ring slot shared by the whole batch.
+    """
     if cfg.block_bounds is not None:
         raise ValueError("Pallas path supports uniform blocking only")
     n, b = cfg.n_blocks, cfg.b
-    B = batch.src.shape[0]
+    B = probes.rows.shape[0]
     max_bin = B if max_bin is None else max_bin
+    del valid  # zero-weight rows (padding or expired) are inert already
 
-    pa = precompute(cfg, batch.src, batch.src_label)
-    pb = precompute(cfg, batch.dst, batch.dst_label)
-    probes = edge_probes(cfg, pa, pb)
-    le_idx = hsh.edge_label_bucket(batch.edge_label, cfg.c, cfg.seed)
-    state, slot, live = _advance_window(cfg, state, jnp.asarray(widx, jnp.int32))
-    weight = batch.weight.astype(state.C.dtype) * live.astype(state.C.dtype)
-
-    # --- stable binning by destination block ---
-    bid = pa.m * jnp.int32(n) + pb.m  # [B]
+    # --- stable binning by destination block (uniform tiles: block = row//b)
+    bid = (probes.rows[:, 0] // jnp.int32(b)) * jnp.int32(n) \
+        + (probes.cols[:, 0] // jnp.int32(b))
     order = jnp.argsort(bid, stable=True)
     bid_s = bid[order]
     counts = jnp.bincount(bid, length=n * n)
@@ -93,10 +98,8 @@ def insert_window_batch_pallas(cfg: LSketchConfig, state: LSketchState,
         out = jnp.full(shape, fill, x.dtype)
         return out.at[bid_s, pos].set(x[order], mode="drop")
 
-    rows_rel = probes.rows - (pa.m * jnp.int32(b))[:, None]
-    cols_rel = probes.cols - (pb.m * jnp.int32(b))[:, None]
-    rows_b = to_bins(rows_rel)
-    cols_b = to_bins(cols_rel)
+    rows_b = to_bins(probes.rows % jnp.int32(b))
+    cols_b = to_bins(probes.cols % jnp.int32(b))
     keys_b = to_bins(probes.keys)
     le_b = to_bins(le_idx)
     w_b = to_bins(weight)
@@ -124,3 +127,20 @@ def insert_window_batch_pallas(cfg: LSketchConfig, state: LSketchState,
     inserted = jnp.zeros((B,), jnp.bool_).at[order].set(flags_sorted)
     failed = (~inserted) & (weight > 0)
     return _pool_pass(cfg, state, slot, probes, le_idx, weight, failed)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("max_bin", "interpret"),
+                   donate_argnums=1)
+def insert_window_batch_pallas(cfg: LSketchConfig, state: LSketchState,
+                               batch: EdgeBatch, widx,
+                               max_bin: int | None = None,
+                               interpret: bool = True) -> LSketchState:
+    """Drop-in replacement for ``repro.core.insert_window_batch``."""
+    pa = precompute(cfg, batch.src, batch.src_label)
+    pb = precompute(cfg, batch.dst, batch.dst_label)
+    probes = edge_probes(cfg, pa, pb)
+    le_idx = hsh.edge_label_bucket(batch.edge_label, cfg.c, cfg.seed)
+    state, slot, live = advance_window(cfg, state, jnp.asarray(widx, jnp.int32))
+    weight = batch.weight.astype(state.C.dtype) * live.astype(state.C.dtype)
+    return matrix_insert_binned(cfg, state, probes, le_idx, weight, slot,
+                                max_bin=max_bin, interpret=interpret)

@@ -5,6 +5,9 @@ decode batch; finished slots are refilled (continuous batching); per-slot
 KV caches live donated on device. Sampling is greedy/temperature.
 
 Usage: python -m repro.launch.serve --arch smollm-135m --requests 8
+       python -m repro.launch.serve --mode sketch [serve_sketch args]
+(``--mode sketch`` serves graph-stream queries through the batched engine
+frontend — see ``serve_sketch.py``.)
 """
 
 from __future__ import annotations
@@ -106,10 +109,22 @@ class DecodeServer:
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="lm", choices=["lm", "sketch"])
     ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="lm default: 4; sketch default: serve_sketch's own")
     ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
+    args, rest = ap.parse_known_args()
+    if args.mode == "sketch":
+        from .serve_sketch import main as sketch_main
+        if args.requests is not None:
+            rest += ["--requests", str(args.requests)]
+        sketch_main(rest)
+        return
+    if args.requests is None:
+        args.requests = 4
+    if rest:  # unknown flags are only forwarded in sketch mode
+        ap.error(f"unrecognized arguments: {' '.join(rest)}")
     cfg = configs.get(args.arch, reduced=True)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     server = DecodeServer(cfg, params)

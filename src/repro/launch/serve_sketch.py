@@ -1,0 +1,167 @@
+"""Sketch serving driver: batched ingest + batched queries over one engine.
+
+The sketch analog of the decode server in ``serve.py``: a request queue is
+drained into fixed-kind batches and answered through the engine layer —
+``repro.engine.insert.insert_batch`` for ingest (one dispatch per batch, any
+number of subwindow boundaries inside) and ``repro.engine.query_batch`` for
+queries (bucketed array shapes, no per-request host round-trip). The same
+server fronts LSketch, LGS, or GSS because the frontend dispatches on the
+sketch type.
+
+Usage: python -m repro.launch.serve_sketch --sketch lsketch --requests 4096
+   (or python -m repro.launch.serve --mode sketch ...)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.core import GSS, LGS, LSketch, LSketchConfig
+from repro.data.stream import PHONE, edge_batches, generate
+from repro.engine import query_batch as qb
+from repro.engine.insert import insert_batch
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One pending query; ``answer`` is filled by ``SketchServer.flush``."""
+
+    kind: str  # "edge" | "vertex" | "label"
+    args: Dict[str, Any]
+    answer: int | None = None
+
+
+class SketchServer:
+    """Continuous-batching frontend over one sketch.
+
+    ``submit`` enqueues; ``flush`` answers every pending request with one
+    batched dispatch per (kind, edge-label?, last?, direction?) group —
+    the static axes of the underlying jitted queries.
+    """
+
+    def __init__(self, sketch, max_batch: int = 4096):
+        self.sketch = sketch
+        self.max_batch = max_batch
+        self.pending: List[QueryRequest] = []
+
+    # ---- ingest ----
+    def ingest(self, batch) -> None:
+        if isinstance(self.sketch, (GSS, LGS)):
+            self.sketch.insert(np.asarray(batch.src), np.asarray(batch.dst),
+                               np.asarray(batch.src_label),
+                               np.asarray(batch.dst_label),
+                               np.asarray(batch.edge_label),
+                               np.asarray(batch.weight),
+                               np.asarray(batch.time))
+        else:
+            self.sketch.state = insert_batch(self.sketch.cfg,
+                                             self.sketch.state, batch)
+
+    # ---- queries ----
+    def submit(self, kind: str, **args) -> QueryRequest:
+        req = QueryRequest(kind, args)
+        self.pending.append(req)
+        if len(self.pending) >= self.max_batch:
+            self.flush()
+        return req
+
+    def _group_key(self, r: QueryRequest):
+        return (r.kind, r.args.get("le") is not None, r.args.get("last"),
+                r.args.get("direction", "out"))
+
+    def flush(self) -> int:
+        done = 0
+        groups: Dict[tuple, List[QueryRequest]] = {}
+        for r in self.pending:
+            groups.setdefault(self._group_key(r), []).append(r)
+        for (kind, with_le, last, direction), reqs in groups.items():
+            a = {k: np.asarray([r.args[k] for r in reqs], np.int32)
+                 for k in reqs[0].args if _batch_axis(reqs, k)}
+            le = a.get("le") if with_le else None
+            if kind == "edge":
+                out = qb.edge_weight_batch(self.sketch, a["src"], a["la"],
+                                           a["dst"], a["lb"], edge_label=le,
+                                           last=last)
+            elif kind == "vertex":
+                out = qb.vertex_weight_batch(self.sketch, a["v"], a["lv"],
+                                             edge_label=le,
+                                             direction=direction, last=last)
+            elif kind == "label":
+                out = qb.label_aggregate_batch(self.sketch, a["lv"],
+                                               edge_label=le,
+                                               direction=direction, last=last)
+            else:
+                raise ValueError(f"unknown query kind {kind!r}")
+            out = np.asarray(out)
+            for r, v in zip(reqs, out):
+                r.answer = int(v)
+            done += len(reqs)
+        self.pending.clear()
+        return done
+
+
+def _batch_axis(reqs: List[QueryRequest], k: str) -> bool:
+    """Request fields that batch into arrays (vs the static grouping axes)."""
+    return k not in ("direction", "last") and \
+        all(r.args.get(k) is not None for r in reqs)
+
+
+def build_sketch(name: str, window_size: int):
+    if name == "lgs":
+        return LGS(d=128, copies=3, c=8, k=8, window_size=window_size)
+    if name == "gss":
+        return GSS(d=128)
+    cfg = LSketchConfig(d=128, n_blocks=2, F=1024, r=8, s=8, c=16, k=8,
+                        window_size=window_size, pool_capacity=4096,
+                        pool_probes=16)
+    return LSketch(cfg)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sketch", default="lsketch",
+                    choices=["lsketch", "lgs", "gss"])
+    ap.add_argument("--edges", type=int, default=20000)
+    ap.add_argument("--requests", type=int, default=4096)
+    ap.add_argument("--ingest-batch", type=int, default=2048)
+    args = ap.parse_args(argv)
+
+    spec = dataclasses.replace(PHONE, n_edges=args.edges, n_vertices=1000)
+    st = generate(spec, seed=0)
+    server = SketchServer(build_sketch(args.sketch, spec.window_size))
+
+    from repro.engine.insert import TRACE_COUNTS
+    traces_before = TRACE_COUNTS["fused"]
+    t0 = time.time()
+    n_batches = 0
+    for batch in edge_batches(st, args.ingest_batch):
+        server.ingest(batch)
+        n_batches += 1
+    dt_ing = time.time() - t0
+    traces = TRACE_COUNTS["fused"] - traces_before  # measured, not derived:
+    # subwindow boundaries inside batches must not add compiles (engine
+    # contract); expect <= #distinct bucketed batch shapes
+    print(f"ingested {len(st)} edges in {dt_ing:.2f}s "
+          f"({len(st) / dt_ing:.0f} edges/s, {n_batches} batches, "
+          f"{traces} engine compiles)")
+
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, len(st), args.requests)
+    t0 = time.time()
+    reqs = [server.submit("edge", src=int(st.src[i]), la=int(st.src_label[i]),
+                          dst=int(st.dst[i]), lb=int(st.dst_label[i]))
+            for i in idx]
+    server.flush()
+    dt_q = time.time() - t0
+    print(f"answered {len(reqs)} edge queries in {dt_q:.2f}s "
+          f"({len(reqs) / dt_q:.0f} q/s)")
+    print("sample answers:", [r.answer for r in reqs[:8]])
+
+
+if __name__ == "__main__":
+    main()

@@ -89,8 +89,11 @@ class RouterTelemetry:
             bucket, bucket // 64, self._expert_base + expert, 3, last=last)
 
     def load_vector(self, last: int | None = None) -> np.ndarray:
-        return np.array([self.expert_load(e, last)
-                         for e in range(self.n_experts)])
+        """Windowed load of every expert in one batched query dispatch."""
+        from repro.engine import query_batch as qb
+        experts = self._expert_base + np.arange(self.n_experts, dtype=np.int32)
+        return np.asarray(qb.vertex_weight_batch(
+            self.sketch, experts, 3, direction="in", last=last))
 
     def imbalance(self, last: int | None = None) -> float:
         """max/mean windowed expert load — the controller signal."""
