@@ -118,6 +118,48 @@ def engine_insert_throughput(n=20000, subwindows_spanned=8,
     return rows
 
 
+def sharded_ingest_throughput(n=16384, shard_counts=(1, 4)):
+    """Sharded-ingest comparison through the ``repro.sketch`` handle layer:
+    the same time-ordered batch hash-partitioned over 1 vs N shards (vmapped
+    fused scan), us/edge each. Rows merge into ``BENCH_engine.json``.
+    """
+    from repro import sketch as skt
+
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=8192)
+    rng = np.random.default_rng(0)
+    batch = _batch(rng, n)
+    t = np.sort(rng.integers(0, cfg.subwindow_size * 4, n)).astype(np.int32)
+    batch = EdgeBatch(batch.src, batch.dst, batch.src_label, batch.dst_label,
+                      batch.edge_label, batch.weight, jnp.asarray(t))
+
+    rows, result = [], {}
+    warmup, iters = 1, 3
+    for ns in shard_counts:
+        spec = skt.make_spec("lsketch", n_shards=ns, config=cfg)
+        # pre-create one state per timed call (ingest donates its input) so
+        # the 1-vs-N comparison times ingest only, not N x state zeroing
+        states = [skt.create(spec) for _ in range(warmup + iters)]
+
+        def run():
+            st = skt.ingest(spec, states.pop(), batch)
+            jax.block_until_ready(st.shards.C)
+            return st
+        dt, _ = timer(run, warmup=warmup, iters=iters)
+        rows.append([f"sharded_ingest_x{ns}", n, ns,
+                     f"{dt / n * 1e6:.3f}", f"{dt:.3f}"])
+        result[f"sharded_ingest_x{ns}"] = {
+            "edges": n, "shards": ns, "us_per_edge": dt / n * 1e6,
+            "total_s": dt}
+    write_csv("sharded_ingest_throughput",
+              ["impl", "edges", "shards", "us_per_edge", "total_s"], rows)
+    out = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+    merged = json.loads(out.read_text()) if out.exists() else {}
+    merged.update(result)
+    out.write_text(json.dumps(merged, indent=2) + "\n")
+    return rows
+
+
 def query_throughput(n=20000, q=4096):
     cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
                         window_size=100, pool_capacity=8192)
@@ -154,6 +196,10 @@ def main(argv=None):
                                     include_pallas=not args.no_pallas)
     print("impl,edges,subwindows,us_per_edge,total_s")
     for r in rows:
+        print(",".join(str(x) for x in r))
+    srows = sharded_ingest_throughput(n=n, shard_counts=(1, 4))
+    print("impl,edges,shards,us_per_edge,total_s")
+    for r in srows:
         print(",".join(str(x) for x in r))
     if not args.quick:
         insert_throughput(n=n)

@@ -1,57 +1,98 @@
-"""Quickstart: LSketch over a heterogeneous graph stream, every query type.
+"""Quickstart: the functional sharded-sketch API over a labeled stream.
 
     PYTHONPATH=src python examples/quickstart.py
+
+A sketch is a (SketchSpec, ShardedState) pair: the spec is static and
+hashable, the state is one pytree with a leading [n_shards] axis. Every
+operation is a pure function — create / ingest / query / merge_all /
+save / restore (DESIGN.md §6).
 """
+
+import dataclasses
+import tempfile
 
 import numpy as np
 
+from repro import sketch as skt
 from repro.core import LSketch, LSketchConfig, state_bytes
-from repro.data.stream import PHONE, GroundTruth, generate
-import dataclasses
+from repro.data.stream import PHONE, GroundTruth, edge_batches, generate
 
 # 1. a phone-call-like labeled stream (paper §5.1): 10k calls between ~1900
 #    subscribers, 2 vertex labels (research subjects vs others), 9 edge
 #    labels (call type x duration), timestamps over two 1-week windows
-spec = dataclasses.replace(PHONE, n_edges=10_000)
-stream = generate(spec, seed=0)
+spec_stream = dataclasses.replace(PHONE, n_edges=10_000)
+stream = generate(spec_stream, seed=0)
 
-# 2. an LSketch: 64x64 matrix in 2x2 label blocks, 10-bit fingerprints,
-#    8 subwindows of 1 day each — ~2 MB total vs ~0.3 MB per *million*
-#    stream items it can absorb
+# 2. a 4-shard LSketch handle: 64x64 matrix in 2x2 label blocks per shard,
+#    10-bit fingerprints, 8 subwindows of 1 day each
 cfg = LSketchConfig(d=64, n_blocks=2, F=1024, r=8, s=8, c=16, k=8,
-                    window_size=spec.window_size, pool_capacity=8192)
-sk = LSketch(cfg)
-print(f"sketch budget: {state_bytes(cfg)/2**20:.1f} MiB "
+                    window_size=spec_stream.window_size, pool_capacity=8192)
+spec = skt.make_spec("lsketch", n_shards=4, config=cfg)
+state = skt.create(spec)
+print(f"sketch budget: {spec.n_shards} x {state_bytes(cfg)/2**20:.1f} MiB "
       f"for a {len(stream)}-item stream")
 
-# 3. stream it in (batched, jit'd, window slides automatically)
-sk.insert(stream.src, stream.dst, stream.src_label, stream.dst_label,
-          stream.edge_label, stream.weight, stream.time)
+# 3. stream it in — each batch is hash-partitioned by source endpoint and
+#    inserted into all shards in one vmapped dispatch
+for batch in edge_batches(stream, 2048):
+    state = skt.ingest(spec, state, batch)
 
-# 4. queries (paper §4) vs exact ground truth
-gt = GroundTruth(spec, k=8).insert_stream(stream)
+# 4. batched queries (paper §4) vs exact ground truth — queries fan through
+#    every shard and sum (hash partitioning makes shard estimates disjoint)
+gt = GroundTruth(spec_stream, k=8).insert_stream(stream)
 a, la = int(stream.src[0]), int(stream.src_label[0])
 b, lb = int(stream.dst[0]), int(stream.dst_label[0])
 le = int(stream.edge_label[0])
 
+
+def q1(qb):  # scalar convenience: length-1 QueryBatch -> int
+    return int(skt.query(spec, state, qb)[0])
+
+
 print("\n-- edge queries --")
-print("weight(a->b)            est:", sk.edge_weight(a, la, b, lb),
+print("weight(a->b)            est:",
+      q1(skt.QueryBatch.edges([a], [la], [b], [lb])),
       "true:", gt.edge_weight(a, b))
-print("weight(a->b, label=le)  est:", sk.edge_weight(a, la, b, lb, le=le),
+print("weight(a->b, label=le)  est:",
+      q1(skt.QueryBatch.edges([a], [la], [b], [lb], edge_label=[le])),
       "true:", gt.edge_weight(a, b, le=le))
-print("recent 2 subwindows     est:", sk.edge_weight(a, la, b, lb, last=2),
+print("recent 2 subwindows     est:",
+      q1(skt.QueryBatch.edges([a], [la], [b], [lb], last=2)),
       "true:", gt.edge_weight(a, b, last=2))
 
 print("\n-- vertex queries --")
-print("out-weight(a)           est:", sk.vertex_weight(a, la),
+print("out-weight(a)           est:",
+      q1(skt.QueryBatch.vertices([a], [la])),
       "true:", gt.vertex_weight(a))
-print("in-weight(b)            est:", sk.vertex_weight(b, lb, direction='in'),
+print("in-weight(b)            est:",
+      q1(skt.QueryBatch.vertices([b], [lb], direction="in")),
       "true:", gt.vertex_weight(b, direction='in'))
-print("label aggregate(l=0)    est:", sk.label_aggregate(0))
+print("label aggregate(l=0)    est:", q1(skt.QueryBatch.labels([0])))
 
-print("\n-- structure queries --")
+# 5. decode: merge the shards back to one plain sketch, usable with the
+#    object API for structure queries. Merging is *exact* (bit-identical to
+#    single-sketch ingest) when the hash partition was collision-free
+#    across shards (`shards_compatible`); a dense stream like this one
+#    contends, so the decode is best-effort — the sharded `query` path
+#    above stays exact either way (each edge is answered by its home shard)
+print("\n-- merge + structure queries --")
+print("collision-free partition (exact merge)?",
+      bool(skt.shards_compatible(spec, state)))
+merged = skt.merge_all(spec, state)
+sk = LSketch(cfg, merged)
 print("reachable(a -> b)?      est:", sk.reachable(a, la, b, lb),
       "true:", gt.reachable(a, b))
-tri = [(a, la, b, lb), (b, lb, a, la)]
-print("subgraph count (a<->b)  est:", sk.subgraph_count(tri))
-print("\npool_lost (should be 0):", int(sk.state.pool_lost))
+print("pool_lost (should be 0):", int(merged.pool_lost))
+
+# 6. checkpoint round-trip — sketches persist with the same manifests as
+#    train state, and restore under a *grown* shard count (exact for any
+#    state: queries sum shard contributions, new shards start empty)
+with tempfile.TemporaryDirectory() as d:
+    skt.save(spec, state, d, step=1)
+    spec8 = spec.replace(n_shards=8)
+    restored = skt.restore(spec8, d)
+    same = q1(skt.QueryBatch.edges([a], [la], [b], [lb]))
+    grown = int(skt.query(spec8, restored,
+                          skt.QueryBatch.edges([a], [la], [b], [lb]))[0])
+    print(f"\ncheckpoint restored 4 shards -> 8 shards: "
+          f"weight(a->b) {same} == {grown}: {same == grown}")

@@ -1,8 +1,13 @@
-"""Continuous-batching decode server demo (small model, batched requests).
+"""Continuous-batching servers, both serving seats in one demo:
+
+  1. the decode server (small LM, batched requests);
+  2. the sketch server over a 4-shard `repro.sketch` handle — batched
+     ingest, grouped batched queries (DESIGN.md §6).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 
+import dataclasses
 import time
 
 import numpy as np
@@ -11,6 +16,8 @@ import jax
 import repro.configs as configs
 from repro.launch.serve import DecodeServer, Request
 from repro.models import lm
+
+# ---- 1. LM decode serving -------------------------------------------------
 
 cfg = configs.get("smollm-135m", reduced=True)
 params = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -29,3 +36,39 @@ print(f"{len(requests)} requests, {tok} new tokens in {dt:.2f}s "
       f"({tok/dt:.1f} tok/s, 4-slot continuous batching)")
 for i, r in enumerate(requests):
     print(f"  req{i} prompt={r.prompt} -> {r.out}")
+
+# ---- 2. sketch serving over a sharded handle ------------------------------
+
+from repro.data.stream import PHONE, edge_batches, generate
+from repro.launch.serve_sketch import SketchServer, build_spec
+
+stream_spec = dataclasses.replace(PHONE, n_edges=8192, n_vertices=1000)
+stream = generate(stream_spec, seed=0)
+sketch_server = SketchServer(build_spec("lsketch", stream_spec.window_size,
+                                        n_shards=4))
+t0 = time.time()
+for batch in edge_batches(stream, 2048):
+    sketch_server.ingest(batch)
+dt_ing = time.time() - t0
+
+# mixed request traffic: edge weights, windowed edge weights, vertex loads —
+# flush() groups them by (kind, edge-label?, last?, direction) and answers
+# each group in one batched dispatch through repro.sketch.query
+idx = rng.integers(0, len(stream), 256)
+reqs = [sketch_server.submit("edge",
+                             src=int(stream.src[i]),
+                             la=int(stream.src_label[i]),
+                             dst=int(stream.dst[i]),
+                             lb=int(stream.dst_label[i]),
+                             last=(2 if i % 3 == 0 else None))
+        for i in idx]
+reqs += [sketch_server.submit("vertex", v=int(stream.src[i]),
+                              lv=int(stream.src_label[i]), direction="in")
+         for i in idx[:64]]
+t0 = time.time()
+done = sketch_server.flush()
+dt_q = time.time() - t0
+print(f"\nsketch: ingested {len(stream)} edges in {dt_ing:.2f}s over "
+      f"4 shards; answered {done} mixed queries in {dt_q:.2f}s "
+      f"({done/dt_q:.0f} q/s)")
+print("sample answers:", [r.answer for r in reqs[:8]])

@@ -1,7 +1,9 @@
 """repro — production JAX framework around LSketch (Zeng et al., 2023).
 
-Layers: core (the sketch), kernels (Pallas TPU), models (10-arch LM zoo),
-data, optim, distributed, telemetry, configs, launch. See DESIGN.md.
+Layers: core (the sketch), sketch (functional sharded handles), engine
+(shared window/insert/query machinery), kernels (Pallas TPU), models
+(10-arch LM zoo), data, optim, distributed, telemetry, configs, launch.
+See DESIGN.md.
 """
 
 __version__ = "1.0.0"

@@ -21,9 +21,10 @@ from .lsketch import (LSketch, edge_probes, insert_batch, insert_window_batch,
 from .queries import (edge_query, path_reachability, subgraph_query,
                       successor_scan, vertex_label_aggregate, vertex_query)
 from .gss import GSS, gss_config
-from .lgs import LGS, LGSConfig
+from .lgs import LGS, LGSConfig, LGSState, lgs_init_state
 from .ref_prime import PrimeLSketch
-from .merge import keys_compatible, merge_counters, psum_sketch
+from .merge import (keys_compatible, lgs_merge_all, merge_all,
+                    merge_counters, psum_sketch, shard_keys_compatible)
 from . import hashing, theory
 from .analytics import (heavy_hitter_edges, heavy_hitter_vertices,
                         triangle_estimate)
@@ -34,7 +35,8 @@ __all__ = [
     "insert_window_batch", "precompute", "valid_slot_mask", "window_index",
     "edge_query", "path_reachability", "subgraph_query", "successor_scan",
     "vertex_label_aggregate", "vertex_query", "GSS", "gss_config", "LGS",
-    "LGSConfig", "PrimeLSketch", "keys_compatible", "merge_counters",
-    "psum_sketch", "hashing", "theory", "heavy_hitter_edges",
-    "heavy_hitter_vertices", "triangle_estimate",
+    "LGSConfig", "LGSState", "lgs_init_state", "PrimeLSketch",
+    "keys_compatible", "lgs_merge_all", "merge_all", "merge_counters",
+    "psum_sketch", "shard_keys_compatible", "hashing", "theory",
+    "heavy_hitter_edges", "heavy_hitter_vertices", "triangle_estimate",
 ]

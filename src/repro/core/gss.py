@@ -35,6 +35,11 @@ class GSS(LSketch):
     def __init__(self, cfg: LSketchConfig | None = None, **kw):
         super().__init__(cfg if cfg is not None else gss_config(**kw))
 
+    @property
+    def spec(self):
+        from repro.sketch import SketchSpec
+        return SketchSpec(kind="gss", config=self.cfg, n_shards=1)
+
     def insert(self, src, dst, src_label=None, dst_label=None,
                edge_label=None, weight=None, time=None):
         n = len(np.asarray(src))

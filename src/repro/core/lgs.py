@@ -28,7 +28,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine import window as _window
 from repro.engine.window import WindowRing
 
 from . import hashing as hsh
@@ -60,6 +59,24 @@ class LGSConfig:
     def key(self):  # hashable static identity for jit
         return (self.d, self.copies, self.c, self.k, self.window_size, self.seed)
 
+    # value identity (by the static key) so an LGSConfig can ride inside a
+    # hashable SketchSpec and be a jit-static argument itself
+    def __eq__(self, other):
+        return isinstance(other, LGSConfig) and self.key() == other.key()
+
+    def __hash__(self):
+        return hash(self.key())
+
+
+def lgs_init_state(cfg: LGSConfig) -> LGSState:
+    k = cfg.effective_k
+    return LGSState(
+        C=jnp.zeros((cfg.copies, cfg.d, cfg.d, k), jnp.int32),
+        P=jnp.zeros((cfg.copies, cfg.d, cfg.d, k, cfg.c), jnp.int32),
+        slot_widx=jnp.full((k,), -(2**30), jnp.int32),
+        cur_widx=jnp.full((), -(2**30), jnp.int32),
+    )
+
 
 def _addr(cfg: LGSConfig, v, label):
     """Per-copy address of (v, l_v): [..., copies]."""
@@ -73,33 +90,28 @@ def _addr(cfg: LGSConfig, v, label):
 
 
 class LGS:
+    """Compatibility shim over the functional ``repro.sketch`` handle layer
+    (a 1-shard spec); ``.state`` stays a plain LGSState."""
+
     def __init__(self, cfg: LGSConfig | None = None, **kw):
         self.cfg = cfg if cfg is not None else LGSConfig(**kw)
-        k = self.cfg.effective_k
-        self.state = LGSState(
-            C=jnp.zeros((self.cfg.copies, self.cfg.d, self.cfg.d, k), jnp.int32),
-            P=jnp.zeros((self.cfg.copies, self.cfg.d, self.cfg.d, k, self.cfg.c), jnp.int32),
-            slot_widx=jnp.full((k,), -(2**30), jnp.int32),
-            cur_widx=jnp.full((), -(2**30), jnp.int32),
-        )
+        self.state = lgs_init_state(self.cfg)
+
+    @property
+    def spec(self):
+        from repro.sketch import SketchSpec
+        return SketchSpec(kind="lgs", config=self.cfg, n_shards=1)
 
     def insert(self, src, dst, src_label=None, dst_label=None,
                edge_label=None, weight=None, time=None):
         n = len(np.asarray(src))
         if n == 0:  # empty batches are a no-op, not a zero-length dispatch
             return self
-        z = np.zeros(n, np.int32)
-        src_label = z if src_label is None else src_label
-        dst_label = z if dst_label is None else dst_label
-        edge_label = z if edge_label is None else edge_label
-        weight = np.ones(n, np.int32) if weight is None else weight
-        time = z if time is None else np.asarray(time)
-        # bucket the batch size (scatter-adds of weight 0 are inert, so
-        # zero-weight replicas of the last row are safe padding)
-        arrs = [_window.pad_to_bucket(jnp.asarray(x, jnp.int32)) for x in
-                (src, dst, src_label, dst_label, edge_label, weight, time)]
-        arrs[5] = arrs[5].at[n:].set(0)  # padded weights
-        self.state = _lgs_insert_fused(self.cfg.key(), self.state, *arrs)
+        from repro.core.types import EdgeBatch
+        from repro.sketch import ingest_single
+        batch = EdgeBatch.from_arrays(src, dst, src_label, dst_label,
+                                      edge_label, weight, time)
+        self.state = ingest_single(self.spec, self.state, batch)
         return self
 
     # ---- queries (scalar in -> int out; array in -> array out) ----
@@ -141,19 +153,29 @@ class LGS:
         return False
 
 
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=1)
-def _lgs_insert_fused(key, state: LGSState, src, dst, la, lb, le, w, times):
+def lgs_insert_impl(key, state: LGSState, src, dst, la, lb, le, w, times,
+                    valid=None):
     """One dispatch for a whole time-ordered batch (any #subwindows).
 
     LGS has no structural claims (no keys, no pool), so the engine's
     segment plan applies as pure vectorized masking: zero every re-claimed
     ring slot up front, scatter-add each item into its own slot with
     ``count_live`` gating — bit-identical to the per-subwindow replay.
+
+    ``valid``: optional bool [B] marking real rows; padding rows take no
+    part in window claims (the sharded handle layer pads every shard's
+    sub-batch to a common length, including fully-empty shards, so pad rows
+    must not advance ``cur_widx``). Zero-weight padding alone covers the
+    counters but not the ring bookkeeping.
+
+    Plain (unjitted) so the sharded handle layer can ``vmap`` it over a
+    stacked shard axis; ``_lgs_insert_fused`` is the jitted single-shard
+    entry.
     """
     cfg = LGSConfig(*key)  # reconstruct from the hashable tuple
     ring = WindowRing.for_config(cfg)
     widx = (times // jnp.int32(cfg.subwindow_size)).astype(jnp.int32)
-    plan = ring.plan(state.slot_widx, state.cur_widx, widx)
+    plan = ring.plan(state.slot_widx, state.cur_widx, widx, valid=valid)
     C = WindowRing.zero_reset_slots(state.C, 3, plan.reset)
     P = WindowRing.zero_reset_slots(state.P, 3, plan.reset)
 
@@ -169,6 +191,10 @@ def _lgs_insert_fused(key, state: LGSState, src, dst, la, lb, le, w, times):
     P = P.at[copy_idx, rows, cols, slotB, leB].add(wB)
     return LGSState(C=C, P=P, slot_widx=plan.slot_widx,
                     cur_widx=plan.cur_widx)
+
+
+_lgs_insert_fused = functools.partial(jax.jit, static_argnums=(0,),
+                                      donate_argnums=1)(lgs_insert_impl)
 
 
 def _mask(cfg, state, last):

@@ -216,7 +216,9 @@ def insert_batch(cfg: LSketchConfig, state: LSketchState, batch: EdgeBatch,
 # --------------------------------------------------------------------------
 
 class LSketch:
-    """Stateful convenience wrapper around the functional core.
+    """Stateful convenience wrapper — a compatibility shim over the
+    functional ``repro.sketch`` handle layer (a 1-shard spec). ``.state``
+    stays a plain LSketchState so existing call sites keep working.
 
     >>> sk = LSketch(LSketchConfig(d=64, n_blocks=2))
     >>> sk.insert(src, dst, src_label, dst_label, edge_label, weight, time)
@@ -229,23 +231,21 @@ class LSketch:
         self.state = state if state is not None else init_state(cfg)
         self.insert_path = insert_path
 
+    @property
+    def spec(self):
+        from repro.sketch import SketchSpec
+        return SketchSpec(kind="lsketch", config=self.cfg, n_shards=1)
+
     def insert(self, src, dst, src_label=None, dst_label=None,
                edge_label=None, weight=None, time=None) -> "LSketch":
         n = len(np.asarray(src))
         if n == 0:  # empty batches are a no-op, not a zero-length dispatch
             return self
-        z = np.zeros(n, np.int32)
-        batch = EdgeBatch(
-            src=jnp.asarray(src, jnp.int32),
-            dst=jnp.asarray(dst, jnp.int32),
-            src_label=jnp.asarray(z if src_label is None else src_label, jnp.int32),
-            dst_label=jnp.asarray(z if dst_label is None else dst_label, jnp.int32),
-            edge_label=jnp.asarray(z if edge_label is None else edge_label, jnp.int32),
-            weight=jnp.asarray(np.ones(n, np.int32) if weight is None else weight, jnp.int32),
-            time=jnp.asarray(z if time is None else time, jnp.int32),
-        )
-        self.state = insert_batch(self.cfg, self.state, batch,
-                                  path=self.insert_path)
+        from repro.sketch import ingest_single
+        batch = EdgeBatch.from_arrays(src, dst, src_label, dst_label,
+                                      edge_label, weight, time)
+        self.state = ingest_single(self.spec, self.state, batch,
+                                   path=self.insert_path)
         return self
 
     # query methods are attached in queries.py to keep this module focused

@@ -1,4 +1,4 @@
-"""Sketch mergeability — the distributed-LSketch primitive (DESIGN.md §3).
+"""Sketch mergeability — the distributed-LSketch primitive (DESIGN.md §5/§6).
 
 Two LSketches built with the *same config/seed* over disjoint sub-streams
 merge exactly:
@@ -6,14 +6,18 @@ merge exactly:
   * matrix counters are linear: addresses/keys are seed-determined, so the
     same logical edge lands in the same (cell, twin) on every shard whose
     occupancy history matches. In the general case occupancy histories can
-    differ (different first-fit choices); merge handles this by re-inserting
-    mismatched cells — but for the common telemetry pattern (shards see
-    disjoint time-slices or the same key population) plain addition is exact.
+    differ (different first-fit choices); ``shard_keys_compatible`` detects
+    exactly that divergence — for the common patterns (shards see disjoint
+    time-slices, the same key population, or a hash partition without
+    cross-shard cell contention) plain addition is exact.
   * pool entries merge by key-aligned union.
 
-``merge_counters`` is the fast in-jit path used for the cross-host psum of
-telemetry sketches (keys validated equal); ``merge`` is the general host
-path.
+``merge_counters`` is the fast in-jit pairwise path used for the cross-host
+psum of telemetry sketches (keys validated equal); ``merge_all`` reduces a
+whole ``[n_shards, ...]`` stack — the decode step of the sharded-sketch
+handle layer (``repro.sketch``, DESIGN.md §6) — with per-slot window
+reconciliation so shards that fell behind the ring don't leak stale
+counters into the merge.
 """
 
 from __future__ import annotations
@@ -51,6 +55,72 @@ def merge_counters(cfg: LSketchConfig, a: LSketchState, b: LSketchState) -> LSke
         pool_lost=a.pool_lost + b.pool_lost,
         slot_widx=jnp.maximum(a.slot_widx, b.slot_widx),
         cur_widx=jnp.maximum(a.cur_widx, b.cur_widx),
+    )
+
+
+def shard_keys_compatible(stacked: LSketchState) -> jax.Array:
+    """True iff an ``[n_shards, ...]`` stack of shard states is exactly
+    mergeable: every matrix cell and pool slot that is occupied in more than
+    one shard holds the same key in all of them.
+
+    This is precisely the condition under which hash-partitioned ingest is
+    bit-identical to single-sketch ingest: the only way sharded first-fit
+    can diverge from the combined walk is an edge landing in a cell (or pool
+    slot) that a *different* shard's edge also claimed — which leaves two
+    different keys at the same address and trips this check.
+    """
+    mk = jnp.max(stacked.key, axis=0)  # keys are non-negative; EMPTY = -1
+    ok_m = jnp.all((stacked.key == EMPTY) | (stacked.key == mk[None]))
+    pk = jnp.max(stacked.pool_key, axis=0)
+    ok_p = jnp.all((stacked.pool_key == EMPTY) | (stacked.pool_key == pk[None]))
+    return ok_m & ok_p
+
+
+def merge_all(cfg: LSketchConfig, stacked: LSketchState) -> LSketchState:
+    """Reduce an ``[n_shards, ...]`` stack of same-config shard states to one
+    LSketchState (the ``repro.sketch`` decode step, DESIGN.md §6).
+
+    Counters add; keys union (validated by ``shard_keys_compatible``). The
+    subtlety is the sliding window: a shard that saw no items for subwindow
+    ``w`` never re-claimed ring slot ``w % k``, so it may still hold *stale*
+    counters there. The combined ingest would have zeroed that slot, so the
+    merge keeps, per ring slot, only the counters of shards whose
+    ``slot_widx`` equals the merged (max) owner — bit-identical to replaying
+    the full stream into a single sketch whenever the shards are
+    key-compatible (property-tested in tests/test_sketch_api.py).
+    """
+    slot_widx = jnp.max(stacked.slot_widx, axis=0)  # [k]
+    cur_widx = jnp.max(stacked.cur_widx, axis=0)
+    keep = (stacked.slot_widx == slot_widx[None]).astype(stacked.C.dtype)
+    return LSketchState(
+        key=jnp.max(stacked.key, axis=0),
+        C=jnp.sum(stacked.C * keep[:, None, None, None, :], axis=0),
+        P=jnp.sum(stacked.P * keep[:, None, None, None, :, None], axis=0),
+        pool_key=jnp.max(stacked.pool_key, axis=0),
+        pool_C=jnp.sum(stacked.pool_C * keep[:, None, :], axis=0),
+        pool_P=jnp.sum(stacked.pool_P * keep[:, None, :, None], axis=0),
+        pool_lost=jnp.sum(stacked.pool_lost, axis=0),
+        slot_widx=slot_widx,
+        cur_widx=cur_widx,
+    )
+
+
+def lgs_merge_all(cfg, stacked):
+    """``merge_all`` for an ``[n_shards, ...]`` stack of LGS states.
+
+    LGS has no structural claims (no keys, no pool), so the merge is pure
+    counter addition under the same per-slot window reconciliation.
+    """
+    from .lgs import LGSState
+
+    slot_widx = jnp.max(stacked.slot_widx, axis=0)
+    cur_widx = jnp.max(stacked.cur_widx, axis=0)
+    keep = (stacked.slot_widx == slot_widx[None]).astype(stacked.C.dtype)
+    return LGSState(
+        C=jnp.sum(stacked.C * keep[:, None, None, None, :], axis=0),
+        P=jnp.sum(stacked.P * keep[:, None, None, None, :, None], axis=0),
+        slot_widx=slot_widx,
+        cur_widx=cur_widx,
     )
 
 

@@ -192,3 +192,26 @@ class EdgeBatch:
 
     def __len__(self):
         return int(self.src.shape[0])
+
+    @classmethod
+    def from_arrays(cls, src, dst, src_label=None, dst_label=None,
+                    edge_label=None, weight=None, time=None) -> "EdgeBatch":
+        """Normalize loose arrays into an int32 EdgeBatch: absent labels and
+        times default to 0, absent weights to 1 (the object-API convention
+        shared by every sketch wrapper)."""
+        import numpy as np
+        n = len(np.asarray(src))
+        z = np.zeros(n, np.int32)
+        return cls(
+            src=jnp.asarray(src, jnp.int32),
+            dst=jnp.asarray(dst, jnp.int32),
+            src_label=jnp.asarray(z if src_label is None else src_label,
+                                  jnp.int32),
+            dst_label=jnp.asarray(z if dst_label is None else dst_label,
+                                  jnp.int32),
+            edge_label=jnp.asarray(z if edge_label is None else edge_label,
+                                   jnp.int32),
+            weight=jnp.asarray(np.ones(n, np.int32) if weight is None
+                               else weight, jnp.int32),
+            time=jnp.asarray(z if time is None else time, jnp.int32),
+        )

@@ -95,6 +95,17 @@ class CheckpointManager:
                        and not p.name.endswith(".tmp"))
         return steps[-1] if steps else None
 
+    def manifest(self, step: int | None = None) -> dict:
+        """Manifest of a saved step (tree keys + ``extra`` block) without
+        loading the arrays — callers that stash their own metadata in
+        ``extra`` (e.g. the sketch spec) read it back through this instead
+        of re-deriving the on-disk layout."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        return json.loads(
+            (self.dir / f"step_{step:08d}" / "manifest.json").read_text())
+
     def restore(self, tree_like: Any, step: int | None = None,
                 shardings: Any = None) -> tuple[Any, dict]:
         """Restore into the structure of ``tree_like``; optional shardings

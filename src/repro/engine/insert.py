@@ -113,18 +113,19 @@ def _scan_insert(cfg: LSketchConfig, state: LSketchState, probes, le_idx,
     return state
 
 
-@functools.partial(jax.jit, static_argnums=(0,),
-                   static_argnames=("use_pallas", "interpret"),
-                   donate_argnums=1)
-def _insert_batch_fused(cfg: LSketchConfig, state: LSketchState,
-                        batch: EdgeBatch, n_valid: jax.Array,
-                        use_pallas: bool = False,
-                        interpret: bool = True) -> LSketchState:
+def insert_batch_fused_impl(cfg: LSketchConfig, state: LSketchState,
+                            batch: EdgeBatch, n_valid: jax.Array,
+                            use_pallas: bool = False,
+                            interpret: bool = True) -> LSketchState:
     """One dispatch for a whole time-ordered batch (any #subwindows).
 
     ``n_valid``: traced scalar — rows >= n_valid are padding and are fully
     masked (they claim no keys, no pool slots, add no weight), so the host
     wrapper can bucket batch sizes without changing semantics.
+
+    Plain (unjitted) so the sharded handle layer (``repro.sketch``) can
+    ``vmap`` it over a stacked ``[n_shards, ...]`` state/batch axis;
+    ``_insert_batch_fused`` below is the jitted single-shard entry.
     """
     TRACE_COUNTS["fused"] += 1  # trace-time side effect (compile counter)
     B = batch.src.shape[0]
@@ -175,6 +176,11 @@ def _insert_batch_fused(cfg: LSketchConfig, state: LSketchState,
     one_segment = _segment_count(
         jnp.where(valid, widx, widx[0])) == jnp.int32(1)
     return jax.lax.cond(one_segment, pallas_path, scan_path, state)
+
+
+_insert_batch_fused = functools.partial(
+    jax.jit, static_argnums=(0,), static_argnames=("use_pallas", "interpret"),
+    donate_argnums=1)(insert_batch_fused_impl)
 
 
 # --------------------------------------------------------------------------

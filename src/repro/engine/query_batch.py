@@ -1,131 +1,50 @@
 """Batched query frontend — arrays in, arrays out, across all sketches.
 
-The seed's object APIs answered one query per call and round-tripped every
-answer through ``int(w[0])`` — a host sync per query, three different
-calling conventions across LSketch / LGS / GSS, and a retrace for every new
-ad-hoc batch length. This module is the single serving surface:
-
-  * ``edge_weight_batch`` / ``vertex_weight_batch`` / ``label_aggregate_batch``
-    take int32 arrays (any common length) and return one weight array with
-    no host round-trip inside;
-  * query batches are padded to power-of-two buckets, so a serving loop
-    compiles O(log max_batch) variants instead of one per batch length;
-  * dispatch is by sketch type: LSketch and GSS (a degenerate LSketch)
-    route to the tensorized probe-walk queries in ``core/queries.py``; LGS
-    routes to its count-min queries — one API, three backends.
-
-``core/queries.py`` re-attaches the friendly scalar methods on top of these
-(scalars are length-1 batches), ``launch/serve_sketch.py`` drives them for
-request traffic, and the benchmarks measure them directly.
+Since the ``repro.sketch`` handle layer (DESIGN.md §6) this module is a
+compatibility adapter: it takes the legacy *object* wrappers
+(``LSketch`` / ``LGS`` / ``GSS``), lifts their plain state into a 1-shard
+``ShardedState`` handle, and routes through ``repro.sketch.query`` — one
+implementation of normalization, EMPTY-sentinel bucket padding, per-kind
+jitted dispatch, and the GSS degeneracy rules. The scalar methods attached
+in ``core/queries.py`` sit on top (scalars are length-1 batches);
+``launch/serve_sketch.py`` serves request traffic through the handle layer
+directly.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
-
-from repro.core import queries as _q
-from repro.core.gss import GSS
-from repro.core.lgs import LGS, _lgs_edge_query, _lgs_vertex_query
-
-from .window import bucket_size
-
-
-def _as_i32(x, n: int | None = None) -> jnp.ndarray:
-    """int32 1-D array, broadcast to length ``n`` (scalar labels with array
-    vertices is the common serving shape)."""
-    a = jnp.atleast_1d(jnp.asarray(x, jnp.int32))
-    if n is not None and a.shape[0] != n:
-        a = jnp.broadcast_to(a, (n,))
-    return a
-
-
-def _pad_all(n, *arrays):
-    """Pad every [n] array to the common bucket size (zeros: queries on the
-    pad rows are well-defined and sliced off)."""
-    to = bucket_size(n, floor=32)
-    if to == n:
-        return arrays
-    return tuple(jnp.concatenate([a, jnp.zeros(to - a.shape[0], a.dtype)])
-                 for a in arrays)
-
-
-def _normalize(sketch, la, lb, le, last):
-    """GSS ignores labels and the window — force its degenerate arguments."""
-    if isinstance(sketch, GSS):
-        return jnp.zeros_like(la), jnp.zeros_like(lb), None, None
-    return la, lb, le, last
 
 
 def edge_weight_batch(sketch, src, src_label, dst, dst_label,
-                      edge_label=None, last: int | None = None) -> jnp.ndarray:
+                      edge_label=None, last: int | None = None):
     """Estimated weight of every (src[i], dst[i]) edge. int32 [B] -> [B]."""
-    src, dst = _as_i32(src), _as_i32(dst)
-    n = max(src.shape[0], dst.shape[0])
-    src, dst = _as_i32(src, n), _as_i32(dst, n)
-    la, lb = _as_i32(src_label, n), _as_i32(dst_label, n)
-    le = None if edge_label is None else _as_i32(edge_label, n)
-    la, lb, le, last = _normalize(sketch, la, lb, le, last)
-    with_le = le is not None
-    les = le if with_le else jnp.zeros_like(src)
-    src, dst, la, lb, les = _pad_all(n, src, dst, la, lb, les)
-    if isinstance(sketch, LGS):
-        out = _lgs_edge_query(sketch.cfg.key(), sketch.state, src, dst,
-                              la, lb, les, with_le, last)
-    else:
-        w, wl = _q.edge_query(sketch.cfg, sketch.state, src, dst,
-                              (la, lb, les), with_edge_label=with_le,
-                              last=last)
-        out = wl if with_le else w
-    return out[:n]
+    from repro.sketch import QueryBatch, query
+    # the plain object state is lifted to a 1-shard stack inside the jitted
+    # dispatch — no eager whole-state copy per query
+    return query(sketch.spec, sketch.state, QueryBatch.edges(
+        src, src_label, dst, dst_label, edge_label=edge_label, last=last))
 
 
 def vertex_weight_batch(sketch, vertex, vertex_label, edge_label=None,
-                        direction: str = "out",
-                        last: int | None = None) -> jnp.ndarray:
+                        direction: str = "out", last: int | None = None):
     """Aggregated out/in edge-weight of every vertex[i]. int32 [B] -> [B]."""
-    v = _as_i32(vertex)
-    n = v.shape[0]
-    lv = _as_i32(vertex_label, n)
-    le = None if edge_label is None else _as_i32(edge_label, n)
-    lv, _, le, last = _normalize(sketch, lv, lv, le, last)
-    with_le = le is not None
-    les = le if with_le else jnp.zeros_like(v)
-    v, lv, les = _pad_all(n, v, lv, les)
-    if isinstance(sketch, LGS):
-        out = _lgs_vertex_query(sketch.cfg.key(), sketch.state, v, lv, les,
-                                with_le, direction, last)
-    else:
-        w, wl = _q.vertex_query(sketch.cfg, sketch.state, v, (lv, les),
-                                direction=direction, with_edge_label=with_le,
-                                last=last)
-        out = wl if with_le else w
-    return out[:n]
+    from repro.sketch import QueryBatch, query
+    return query(sketch.spec, sketch.state, QueryBatch.vertices(
+        vertex, vertex_label, edge_label=edge_label, direction=direction,
+        last=last))
 
 
 def label_aggregate_batch(sketch, vertex_label, edge_label=None,
-                          direction: str = "out",
-                          last: int | None = None) -> jnp.ndarray:
+                          direction: str = "out", last: int | None = None):
     """Aggregate weight of all vertices with label lv[i]. int32 [B] -> [B].
 
     LSketch-only: label blocks are the feature LGS lacks (its cells mix all
     labels, so a per-label aggregate is not recoverable from LGS state).
     """
-    if isinstance(sketch, LGS):
-        raise NotImplementedError(
-            "LGS stores no label blocks; label aggregates need LSketch/GSS")
-    lv = _as_i32(vertex_label)
-    n = lv.shape[0]
-    le = None if edge_label is None else _as_i32(edge_label, n)
-    lv, _, le, last = _normalize(sketch, lv, lv, le, last)
-    with_le = le is not None
-    les = le if with_le else jnp.zeros_like(lv)
-    lv, les = _pad_all(n, lv, les)
-    w, wl = _q.vertex_label_aggregate(
-        sketch.cfg, sketch.state, lv, direction=direction,
-        with_edge_label=with_le, last=last,
-        edge_label=les if with_le else None)
-    return (wl if with_le else w)[:n]
+    from repro.sketch import QueryBatch, query
+    return query(sketch.spec, sketch.state, QueryBatch.labels(
+        vertex_label, edge_label=edge_label, direction=direction, last=last))
 
 
 def scalarize(x, scalar_input: bool):

@@ -1,14 +1,13 @@
-"""Sketch serving driver: batched ingest + batched queries over one engine.
+"""Sketch serving driver: batched ingest + batched queries over one handle.
 
-The sketch analog of the decode server in ``serve.py``: a request queue is
-drained into fixed-kind batches and answered through the engine layer —
-``repro.engine.insert.insert_batch`` for ingest (one dispatch per batch, any
-number of subwindow boundaries inside) and ``repro.engine.query_batch`` for
-queries (bucketed array shapes, no per-request host round-trip). The same
-server fronts LSketch, LGS, or GSS because the frontend dispatches on the
-sketch type.
+The sketch analog of the decode server in ``serve.py``, rebuilt on the
+functional ``repro.sketch`` handle layer (DESIGN.md §6): the server owns a
+``(SketchSpec, ShardedState)`` pair; ingest hash-partitions each edge batch
+across ``--shards`` shards in one dispatch, and queries fan through every
+shard and sum contributions — the same server fronts LSketch, LGS, or GSS
+because the handle layer dispatches on ``spec.kind``.
 
-Usage: python -m repro.launch.serve_sketch --sketch lsketch --requests 4096
+Usage: python -m repro.launch.serve_sketch --sketch lsketch --shards 4
    (or python -m repro.launch.serve --mode sketch ...)
 """
 
@@ -21,10 +20,10 @@ from typing import Any, Dict, List
 
 import numpy as np
 
-from repro.core import GSS, LGS, LSketch, LSketchConfig
+from repro import sketch as skt
+from repro.core import LGSConfig, LSketchConfig
+from repro.core.gss import gss_config
 from repro.data.stream import PHONE, edge_batches, generate
-from repro.engine import query_batch as qb
-from repro.engine.insert import insert_batch
 
 
 @dataclasses.dataclass
@@ -37,30 +36,23 @@ class QueryRequest:
 
 
 class SketchServer:
-    """Continuous-batching frontend over one sketch.
+    """Continuous-batching frontend over one sharded sketch handle.
 
     ``submit`` enqueues; ``flush`` answers every pending request with one
     batched dispatch per (kind, edge-label?, last?, direction?) group —
     the static axes of the underlying jitted queries.
     """
 
-    def __init__(self, sketch, max_batch: int = 4096):
-        self.sketch = sketch
+    def __init__(self, spec: "skt.SketchSpec", max_batch: int = 4096,
+                 state: "skt.ShardedState | None" = None):
+        self.spec = spec
+        self.state = state if state is not None else skt.create(spec)
         self.max_batch = max_batch
         self.pending: List[QueryRequest] = []
 
     # ---- ingest ----
     def ingest(self, batch) -> None:
-        if isinstance(self.sketch, (GSS, LGS)):
-            self.sketch.insert(np.asarray(batch.src), np.asarray(batch.dst),
-                               np.asarray(batch.src_label),
-                               np.asarray(batch.dst_label),
-                               np.asarray(batch.edge_label),
-                               np.asarray(batch.weight),
-                               np.asarray(batch.time))
-        else:
-            self.sketch.state = insert_batch(self.sketch.cfg,
-                                             self.sketch.state, batch)
+        self.state = skt.ingest(self.spec, self.state, batch)
 
     # ---- queries ----
     def submit(self, kind: str, **args) -> QueryRequest:
@@ -75,6 +67,8 @@ class SketchServer:
                 r.args.get("direction", "out"))
 
     def flush(self) -> int:
+        if not self.pending:  # nothing queued: no dispatch, no state touch
+            return 0
         done = 0
         groups: Dict[tuple, List[QueryRequest]] = {}
         for r in self.pending:
@@ -84,20 +78,17 @@ class SketchServer:
                  for k in reqs[0].args if _batch_axis(reqs, k)}
             le = a.get("le") if with_le else None
             if kind == "edge":
-                out = qb.edge_weight_batch(self.sketch, a["src"], a["la"],
-                                           a["dst"], a["lb"], edge_label=le,
-                                           last=last)
+                q = skt.QueryBatch.edges(a["src"], a["la"], a["dst"],
+                                         a["lb"], edge_label=le, last=last)
             elif kind == "vertex":
-                out = qb.vertex_weight_batch(self.sketch, a["v"], a["lv"],
-                                             edge_label=le,
-                                             direction=direction, last=last)
+                q = skt.QueryBatch.vertices(a["v"], a["lv"], edge_label=le,
+                                            direction=direction, last=last)
             elif kind == "label":
-                out = qb.label_aggregate_batch(self.sketch, a["lv"],
-                                               edge_label=le,
-                                               direction=direction, last=last)
+                q = skt.QueryBatch.labels(a["lv"], edge_label=le,
+                                          direction=direction, last=last)
             else:
                 raise ValueError(f"unknown query kind {kind!r}")
-            out = np.asarray(out)
+            out = np.asarray(skt.query(self.spec, self.state, q))
             for r, v in zip(reqs, out):
                 r.answer = int(v)
             done += len(reqs)
@@ -111,21 +102,24 @@ def _batch_axis(reqs: List[QueryRequest], k: str) -> bool:
         all(r.args.get(k) is not None for r in reqs)
 
 
-def build_sketch(name: str, window_size: int):
+def build_spec(name: str, window_size: int, n_shards: int = 1) -> "skt.SketchSpec":
     if name == "lgs":
-        return LGS(d=128, copies=3, c=8, k=8, window_size=window_size)
-    if name == "gss":
-        return GSS(d=128)
-    cfg = LSketchConfig(d=128, n_blocks=2, F=1024, r=8, s=8, c=16, k=8,
-                        window_size=window_size, pool_capacity=4096,
-                        pool_probes=16)
-    return LSketch(cfg)
+        cfg = LGSConfig(d=128, copies=3, c=8, k=8, window_size=window_size)
+    elif name == "gss":
+        cfg = gss_config(d=128)
+    else:
+        cfg = LSketchConfig(d=128, n_blocks=2, F=1024, r=8, s=8, c=16, k=8,
+                            window_size=window_size, pool_capacity=4096,
+                            pool_probes=16)
+    return skt.SketchSpec(kind=name, config=cfg, n_shards=n_shards)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--sketch", default="lsketch",
                     choices=["lsketch", "lgs", "gss"])
+    ap.add_argument("--shards", type=int, default=1,
+                    help="hash-partitioned sketch shards (leading state axis)")
     ap.add_argument("--edges", type=int, default=20000)
     ap.add_argument("--requests", type=int, default=4096)
     ap.add_argument("--ingest-batch", type=int, default=2048)
@@ -133,7 +127,8 @@ def main(argv=None):
 
     spec = dataclasses.replace(PHONE, n_edges=args.edges, n_vertices=1000)
     st = generate(spec, seed=0)
-    server = SketchServer(build_sketch(args.sketch, spec.window_size))
+    server = SketchServer(build_spec(args.sketch, spec.window_size,
+                                     n_shards=args.shards))
 
     from repro.engine.insert import TRACE_COUNTS
     traces_before = TRACE_COUNTS["fused"]
@@ -148,7 +143,7 @@ def main(argv=None):
     # contract); expect <= #distinct bucketed batch shapes
     print(f"ingested {len(st)} edges in {dt_ing:.2f}s "
           f"({len(st) / dt_ing:.0f} edges/s, {n_batches} batches, "
-          f"{traces} engine compiles)")
+          f"{args.shards} shards, {traces} engine compiles)")
 
     rng = np.random.default_rng(1)
     idx = rng.integers(0, len(st), args.requests)

@@ -1,0 +1,34 @@
+"""repro.sketch — functional sharded-sketch handles (DESIGN.md §6).
+
+The public serving surface for every sketch in this repo. A sketch is a
+pair (``SketchSpec``, ``ShardedState``): the spec is static and hashable
+(jit-static), the state is one pytree with a leading ``[n_shards]`` axis —
+vmappable, device-placeable, checkpointable. Everything is a pure function:
+
+    spec  = make_spec("lsketch", n_shards=4, d=128, n_blocks=4, ...)
+    state = create(spec)
+    state = ingest(spec, state, edge_batch)          # hash-partitioned
+    w     = query(spec, state, QueryBatch.edges(src, la, dst, lb))
+    plain = merge_all(spec, state)                   # decode to one sketch
+    save(spec, state, ckpt_dir); state = restore(spec, ckpt_dir)
+
+The legacy object wrappers (``repro.core.LSketch``/``LGS``/``GSS``) are
+thin compatibility shims over this layer with ``n_shards=1``.
+"""
+
+from __future__ import annotations
+
+from .spec import KINDS, SketchSpec, make_spec, shard_assignment
+from .state import (ShardedState, create, merge_all, named_shardings, place,
+                    shards_compatible, stack_states, unstack_state)
+from .ingest import ingest, ingest_single
+from .query import QueryBatch, query
+from .checkpoint import restore, save, saved_spec
+
+__all__ = [
+    "KINDS", "SketchSpec", "make_spec", "shard_assignment",
+    "ShardedState", "create", "merge_all", "named_shardings", "place",
+    "shards_compatible", "stack_states", "unstack_state",
+    "ingest", "ingest_single", "QueryBatch", "query",
+    "restore", "save", "saved_spec",
+]

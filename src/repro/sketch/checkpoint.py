@@ -1,0 +1,86 @@
+"""Sketch checkpointing — a sharded sketch saves/restores like a train-state
+leaf (DESIGN.md §6), reusing ``distributed.checkpoint.CheckpointManager``
+manifests (atomic commit, async save, retention, resharding restore).
+
+The spec rides in the manifest's ``extra`` block, so ``restore`` can
+validate that the on-disk sketch is *identity-compatible* with the
+requested one (same kind/config/seed — the exact-merge precondition) while
+allowing a different shard count: restoring an N-shard checkpoint under an
+M-shard spec merges the saved shards (``merge_all``) into shard 0 of a
+fresh M-shard handle. Counters are conserved and every query answer is
+unchanged (queries sum shard contributions); only the *placement* of the
+historical mass differs — fresh ingest hash-partitions across all M shards
+as usual.
+"""
+
+from __future__ import annotations
+
+from repro.distributed.checkpoint import CheckpointManager
+
+from .spec import SketchSpec
+from .state import (ShardedState, _init_one, create, merge_all, place,
+                    shards_compatible, stack_states, unstack_state)
+
+MANIFEST_KEY = "sketch_spec"
+
+
+def save(spec: SketchSpec, state: ShardedState, directory, step: int = 0,
+         keep: int = 3, blocking: bool = True) -> CheckpointManager:
+    """Checkpoint a handle (atomic; async when ``blocking=False``)."""
+    mgr = CheckpointManager(directory, keep=keep)
+    mgr.save(step, state, extra={MANIFEST_KEY: spec.to_json()},
+             blocking=blocking)
+    return mgr
+
+
+def saved_spec(directory, step: int | None = None) -> SketchSpec:
+    """The spec recorded in a sketch checkpoint's manifest."""
+    meta = CheckpointManager(directory).manifest(step)
+    return SketchSpec.from_json(meta["extra"][MANIFEST_KEY])
+
+
+def restore(spec: SketchSpec, directory, step: int | None = None, mesh=None,
+            axis: str = "data") -> ShardedState:
+    """Restore a handle for ``spec`` from a checkpoint directory.
+
+    The saved spec must be identity-compatible (same kind/config). A
+    different ``n_shards`` reshards:
+
+      * growing (M > N): the saved shards are stacked with M-N fresh empty
+        shards — exact for *any* state (queries sum shard contributions,
+        so appending zeros changes nothing);
+      * shrinking (M < N): the saved shards ``merge_all`` into shard 0 —
+        exact only when ``shards_compatible`` holds, so an incompatible
+        (cross-shard-contended) checkpoint raises rather than silently
+        degrading answers; restore it at >= its saved shard count instead.
+
+    With a ``mesh``, leaves are placed under the shard-axis
+    ``NamedSharding``.
+    """
+    mgr = CheckpointManager(directory)
+    step = mgr.latest_step() if step is None else step
+    saved = saved_spec(directory, step)
+    if not spec.compatible(saved):
+        raise ValueError(
+            f"checkpoint holds an incompatible sketch: saved "
+            f"{saved.kind}/{saved.config!r}, requested "
+            f"{spec.kind}/{spec.config!r}")
+    state, _ = mgr.restore(create(saved), step=step)
+    if saved.n_shards != spec.n_shards:
+        base = _init_one(spec)
+        if spec.n_shards > saved.n_shards:
+            olds = [unstack_state(state, i) for i in range(saved.n_shards)]
+            state = stack_states(
+                olds + [base] * (spec.n_shards - saved.n_shards))
+        else:
+            if not bool(shards_compatible(saved, state)):
+                raise ValueError(
+                    f"cannot shrink {saved.n_shards} -> {spec.n_shards} "
+                    "shards: saved shards are not exactly mergeable "
+                    "(cross-shard cell contention); restore with "
+                    f"n_shards >= {saved.n_shards} instead")
+            merged = merge_all(saved, state)
+            state = stack_states([merged] + [base] * (spec.n_shards - 1))
+    if mesh is not None:
+        state = place(spec, state, mesh, axis=axis)
+    return state

@@ -1,0 +1,143 @@
+"""Hash-partitioned sharded ingest (DESIGN.md §6).
+
+``ingest(spec, state, batch)`` is the one write path of the handle layer:
+
+  1. the host partitions the time-ordered batch by the shard hash
+     (``spec.shard_assignment`` of the source endpoint entity), preserving
+     stream order inside each shard — a stable partition of a time-ordered
+     stream is itself time-ordered per shard;
+  2. every shard's sub-batch is padded to one common power-of-two bucket
+     (replicate-last padding keeps ``time`` non-decreasing; a per-shard
+     ``n_valid`` masks the padding completely, including ring bookkeeping,
+     so even an empty shard is a strict no-op);
+  3. one jitted dispatch ``vmap``s the engine's fused insert
+     (``engine.insert.insert_batch_fused_impl``) over the stacked
+     ``[n_shards]`` axis — shard ingest is embarrassingly parallel, so
+     under a ``NamedSharding`` placement (``state.place``) GSPMD keeps each
+     shard's scan local to its device.
+
+``ingest_single`` is the unstacked 1-shard path the object shims
+(``LSketch``/``LGS``/``GSS``) ride: no partition, no stacking copies, and
+for LSketch-layout sketches the full engine path choice (Pallas on TPU).
+The vmapped shard path always uses the fused scan — the Pallas binned
+kernel is a per-shard grid program and is not vmapped across shards.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lgs import _lgs_insert_fused, lgs_insert_impl
+from repro.core.types import EdgeBatch
+from repro.engine import insert as eng_insert
+from repro.engine.window import bucket_size, pad_to_bucket
+
+from .spec import SketchSpec, shard_assignment
+from .state import ShardedState
+
+_FIELDS = ("src", "dst", "src_label", "dst_label", "edge_label", "weight",
+           "time")
+
+
+def _degenerate_batch(batch: EdgeBatch) -> EdgeBatch:
+    """GSS ignores labels and timestamps — normalize them away so the
+    functional path matches the ``GSS`` object semantics exactly."""
+    z = jnp.zeros_like(jnp.asarray(batch.src, jnp.int32))
+    return EdgeBatch(src=batch.src, dst=batch.dst, src_label=z, dst_label=z,
+                     edge_label=z, weight=batch.weight, time=z)
+
+
+# --------------------------------------------------------------------------
+# single-shard (unstacked) path — the compatibility-shim seat
+# --------------------------------------------------------------------------
+
+def ingest_single(spec: SketchSpec, state, batch: EdgeBatch,
+                  path: str = "auto"):
+    """Insert a batch into one plain (unstacked) shard state.
+
+    This is the path ``LSketch``/``LGS``/``GSS`` objects delegate to with
+    their implicit ``n_shards=1`` spec; it preserves the engine's insert-path
+    selection (``path=``) and donation behaviour bit-for-bit.
+    """
+    n = int(batch.src.shape[0])
+    if n == 0:
+        return state
+    if spec.kind == "gss":
+        batch = _degenerate_batch(batch)
+    if spec.kind == "lgs":
+        arrs = [pad_to_bucket(jnp.asarray(getattr(batch, f), jnp.int32))
+                for f in _FIELDS]
+        arrs[5] = arrs[5].at[n:].set(0)  # padded weights are inert
+        return _lgs_insert_fused(spec.config.key(), state, *arrs)
+    return eng_insert.insert_batch(spec.config, state, batch, path=path)
+
+
+# --------------------------------------------------------------------------
+# sharded path
+# --------------------------------------------------------------------------
+
+def _partition_stack(spec: SketchSpec, batch: EdgeBatch):
+    """Host-side stable hash partition -> (stacked EdgeBatch [n_shards, L],
+    n_valid int32 [n_shards])."""
+    fields = {f: np.asarray(getattr(batch, f)) for f in _FIELDS}
+    sid = shard_assignment(spec, fields["src"], fields["src_label"])
+    n_sh = spec.n_shards
+    index = [np.flatnonzero(sid == s) for s in range(n_sh)]
+    counts = np.array([len(ix) for ix in index], np.int32)
+    L = bucket_size(max(int(counts.max()), 1), floor=64)
+    out = {f: np.zeros((n_sh, L), np.int32) for f in _FIELDS}
+    for s, ix in enumerate(index):
+        m = len(ix)
+        if m == 0:
+            continue  # all-zero row, fully masked by n_valid == 0
+        for f in _FIELDS:
+            row = out[f][s]
+            row[:m] = fields[f][ix]
+            row[m:] = row[m - 1]  # replicate-last keeps time non-decreasing
+    stacked = EdgeBatch(**{f: jnp.asarray(out[f]) for f in _FIELDS})
+    return stacked, jnp.asarray(counts)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=1)
+def _ingest_stacked_lsketch(cfg, shards, batch: EdgeBatch, n_valid):
+    def one(st, b, nv):
+        return eng_insert.insert_batch_fused_impl(
+            cfg, st, b, nv, use_pallas=False, interpret=True)
+    return jax.vmap(one)(shards, batch, n_valid)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=1)
+def _ingest_stacked_lgs(key, shards, batch: EdgeBatch, n_valid):
+    def one(st, b, nv):
+        valid = jnp.arange(b.src.shape[0], dtype=jnp.int32) < nv
+        w = b.weight * valid.astype(b.weight.dtype)
+        return lgs_insert_impl(key, st, b.src, b.dst, b.src_label,
+                               b.dst_label, b.edge_label, w, b.time,
+                               valid=valid)
+    return jax.vmap(one)(shards, batch, n_valid)
+
+
+def ingest(spec: SketchSpec, state: ShardedState, batch: EdgeBatch
+           ) -> ShardedState:
+    """Insert a time-ordered batch into a sharded handle; returns the new
+    handle (the input's buffers are donated). Every shard count — including
+    1 — goes through the same stacked vmapped dispatch, so no eager
+    unstack/restack copies; object shims that need the engine's insert-path
+    choice use ``ingest_single`` on their plain state instead."""
+    n = int(batch.src.shape[0])
+    if n == 0:
+        return state
+    if spec.kind == "gss":
+        batch = _degenerate_batch(batch)
+    stacked, n_valid = _partition_stack(spec, batch)
+    if spec.kind == "lgs":
+        shards = _ingest_stacked_lgs(spec.config.key(), state.shards,
+                                     stacked, n_valid)
+    else:
+        shards = _ingest_stacked_lsketch(spec.config, state.shards,
+                                         stacked, n_valid)
+    return ShardedState(shards=shards)

@@ -1,0 +1,232 @@
+"""Batched queries over a sharded handle (DESIGN.md §6).
+
+``query(spec, state, QueryBatch)`` fans one array-shaped query batch
+through every shard and sums the shard contributions in a single jitted
+dispatch: hash partitioning makes shard estimates disjoint (each logical
+edge lives on exactly one shard), so addition is the exact combinator for
+every query kind — edge weights, vertex aggregates, and label aggregates.
+
+Window reconciliation: a shard that saw no recent items still carries the
+ring bookkeeping of the last item it *did* see, so each shard's
+``cur_widx`` is first replaced by the global (max) one — otherwise a
+lagging shard would count ring slots the combined stream already expired.
+
+Padding: query batches are padded to power-of-two buckets so a serving
+loop compiles O(log max_batch) shapes. Pad rows are filled with the
+``EMPTY`` sentinel (-1) rather than vertex id 0 — a real id — so a pad row
+can never alias a live vertex's cell probes; answers for pad rows are
+sliced off before returning either way (regression-tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queries as _q
+from repro.core.lgs import _lgs_edge_query, _lgs_vertex_query
+from repro.core.types import EMPTY
+from repro.engine.window import bucket_size
+
+from .spec import SketchSpec
+from .state import ShardedState
+
+
+@dataclass(frozen=True)
+class QueryBatch:
+    """One homogeneous batch of queries (single kind / window / direction —
+    the static axes of the underlying jitted query programs)."""
+
+    kind: str  # "edge" | "vertex" | "label"
+    src: Any = None
+    src_label: Any = None
+    dst: Any = None
+    dst_label: Any = None
+    vertex: Any = None
+    vertex_label: Any = None
+    edge_label: Any = None
+    direction: str = "out"
+    last: Optional[int] = None
+
+    @classmethod
+    def edges(cls, src, src_label, dst, dst_label, edge_label=None,
+              last=None) -> "QueryBatch":
+        return cls(kind="edge", src=src, src_label=src_label, dst=dst,
+                   dst_label=dst_label, edge_label=edge_label, last=last)
+
+    @classmethod
+    def vertices(cls, vertex, vertex_label, edge_label=None,
+                 direction: str = "out", last=None) -> "QueryBatch":
+        return cls(kind="vertex", vertex=vertex, vertex_label=vertex_label,
+                   edge_label=edge_label, direction=direction, last=last)
+
+    @classmethod
+    def labels(cls, vertex_label, edge_label=None, direction: str = "out",
+               last=None) -> "QueryBatch":
+        return cls(kind="label", vertex_label=vertex_label,
+                   edge_label=edge_label, direction=direction, last=last)
+
+
+# --------------------------------------------------------------------------
+# array normalization + bucket padding (shared with engine.query_batch)
+# --------------------------------------------------------------------------
+
+def as_i32(x, n: int | None = None) -> jnp.ndarray:
+    """int32 1-D array, broadcast to length ``n`` (scalar labels with array
+    vertices is the common serving shape)."""
+    a = jnp.atleast_1d(jnp.asarray(x, jnp.int32))
+    if n is not None and a.shape[0] != n:
+        a = jnp.broadcast_to(a, (n,))
+    return a
+
+
+def pad_all(n: int, *arrays, floor: int = 32):
+    """Pad every [n] array to the common bucket size with the ``EMPTY``
+    sentinel — pad rows address no real vertex/label, and their answers
+    are sliced off by the caller."""
+    to = bucket_size(n, floor=floor)
+    if to == n:
+        return arrays
+    return tuple(
+        jnp.concatenate([a, jnp.full((to - a.shape[0],), EMPTY, a.dtype)])
+        for a in arrays)
+
+
+def _with_global_window(shards):
+    """Every shard queries under the fleet-wide newest subwindow index."""
+    g = jnp.max(shards.cur_widx, axis=0)
+    return dataclasses.replace(
+        shards, cur_widx=jnp.broadcast_to(g, shards.cur_widx.shape))
+
+
+def _lift(shards, stacked: bool):
+    """Inside-jit lift of a plain (unstacked) state to a 1-shard stack —
+    XLA aliases the reshape, so the object-API path (which passes its state
+    un-lifted) never pays an eager whole-state copy per query."""
+    if stacked:
+        return shards
+    return jax.tree.map(lambda x: x[None], shards)
+
+
+# --------------------------------------------------------------------------
+# jitted sharded dispatches (one per kind)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "last", "stacked"))
+def _edge_sharded(spec, shards, src, dst, la, lb, les, *, with_le, last,
+                  stacked=True):
+    shards = _with_global_window(_lift(shards, stacked))
+    if spec.kind == "lgs":
+        per = jax.vmap(lambda st: _lgs_edge_query(
+            spec.config.key(), st, src, dst, la, lb, les, with_le, last))(
+                shards)
+    else:
+        def one(st):
+            w, wl = _q.edge_query(spec.config, st, src, dst, (la, lb, les),
+                                  with_le, last)
+            return wl if with_le else w
+        per = jax.vmap(one)(shards)
+    return jnp.sum(per, axis=0)
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "direction", "last", "stacked"))
+def _vertex_sharded(spec, shards, v, lv, les, *, with_le, direction, last,
+                    stacked=True):
+    shards = _with_global_window(_lift(shards, stacked))
+    if spec.kind == "lgs":
+        per = jax.vmap(lambda st: _lgs_vertex_query(
+            spec.config.key(), st, v, lv, les, with_le, direction, last))(
+                shards)
+    else:
+        def one(st):
+            w, wl = _q.vertex_query(spec.config, st, v, (lv, les),
+                                    direction=direction,
+                                    with_edge_label=with_le, last=last)
+            return wl if with_le else w
+        per = jax.vmap(one)(shards)
+    return jnp.sum(per, axis=0)
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "direction", "last", "stacked"))
+def _label_sharded(spec, shards, lv, les, *, with_le, direction, last,
+                   stacked=True):
+    shards = _with_global_window(_lift(shards, stacked))
+
+    def one(st):
+        w, wl = _q.vertex_label_aggregate(
+            spec.config, st, lv, direction=direction, with_edge_label=with_le,
+            last=last, edge_label=les if with_le else None)
+        return wl if with_le else w
+    return jnp.sum(jax.vmap(one)(shards), axis=0)
+
+
+# --------------------------------------------------------------------------
+# public entry
+# --------------------------------------------------------------------------
+
+def query(spec: SketchSpec, state, q: QueryBatch) -> jnp.ndarray:
+    """Answer a QueryBatch against a sketch. int32 [B] out.
+
+    ``state`` is normally a ``ShardedState`` handle; a plain per-shard state
+    pytree (the object-shim path) is accepted too and lifted to a 1-shard
+    stack *inside* the jitted dispatch (no eager whole-state copy).
+    """
+    stacked = isinstance(state, ShardedState)
+    shards = state.shards if stacked else state
+    if q.kind == "edge":
+        src, dst = as_i32(q.src), as_i32(q.dst)
+        n = max(src.shape[0], dst.shape[0])
+        src, dst = as_i32(src, n), as_i32(dst, n)
+        la, lb = as_i32(q.src_label, n), as_i32(q.dst_label, n)
+        le, last = q.edge_label, q.last
+        if spec.kind == "gss":  # degenerate: no labels, no window
+            la, lb, le, last = jnp.zeros_like(la), jnp.zeros_like(lb), None, None
+        with_le = le is not None
+        les = as_i32(le, n) if with_le else jnp.zeros_like(src)
+        src, dst, la, lb, les = pad_all(n, src, dst, la, lb, les)
+        out = _edge_sharded(spec, shards, src, dst, la, lb, les,
+                            with_le=with_le, last=last, stacked=stacked)
+        return out[:n]
+
+    if q.kind == "vertex":
+        v = as_i32(q.vertex)
+        n = v.shape[0]
+        lv = as_i32(q.vertex_label, n)
+        le, last = q.edge_label, q.last
+        if spec.kind == "gss":
+            lv, le, last = jnp.zeros_like(lv), None, None
+        with_le = le is not None
+        les = as_i32(le, n) if with_le else jnp.zeros_like(v)
+        v, lv, les = pad_all(n, v, lv, les)
+        out = _vertex_sharded(spec, shards, v, lv, les, with_le=with_le,
+                              direction=q.direction, last=last,
+                              stacked=stacked)
+        return out[:n]
+
+    if q.kind == "label":
+        if spec.kind == "lgs":
+            raise NotImplementedError(
+                "LGS stores no label blocks; label aggregates need "
+                "LSketch/GSS")
+        lv = as_i32(q.vertex_label)
+        n = lv.shape[0]
+        le, last = q.edge_label, q.last
+        if spec.kind == "gss":
+            lv, le, last = jnp.zeros_like(lv), None, None
+        with_le = le is not None
+        les = as_i32(le, n) if with_le else jnp.zeros_like(lv)
+        lv, les = pad_all(n, lv, les)
+        out = _label_sharded(spec, shards, lv, les, with_le=with_le,
+                             direction=q.direction, last=last,
+                             stacked=stacked)
+        return out[:n]
+
+    raise ValueError(f"unknown query kind {q.kind!r}")

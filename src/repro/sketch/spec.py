@@ -1,0 +1,151 @@
+"""SketchSpec — the static, hashable identity of a (possibly sharded) sketch.
+
+The functional handle layer (DESIGN.md §6) splits a sketch into two halves:
+
+  * ``SketchSpec`` — everything static: the sketch kind, its config, and the
+    shard count. Frozen, hashable, valid as a jit-static argument; two specs
+    compare equal iff the sketches are interchangeable (same addressing,
+    same windows, exact mergeability).
+  * ``ShardedState`` (``repro.sketch.state``) — everything dynamic: the
+    per-shard state pytrees stacked on a leading ``[n_shards]`` axis.
+
+``shard_assignment`` is the hash partition every ingest uses: an edge is
+routed by its *source endpoint entity* ``(src, src_label)`` — the same pair
+that determines its sketch row — through the seed-keyed ``hash31`` family,
+so the assignment is a pure function of (spec.config.seed, endpoint) and is
+stable across processes, restarts, and re-partitioned replays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gss import gss_config
+from repro.core.lgs import LGSConfig
+from repro.core.types import LSketchConfig
+
+KINDS = ("lsketch", "lgs", "gss")
+
+# seed perturbation for the shard-routing hash — distinct from every other
+# use of the hash family so shard routing is independent of cell addressing
+_SHARD_SALT = 0x51AD
+
+
+@dataclass(frozen=True)
+class SketchSpec:
+    """Static identity of a sharded sketch (hashable -> jit-static).
+
+    kind     : "lsketch" | "lgs" | "gss"
+    config   : LSketchConfig (lsketch/gss) or LGSConfig (lgs)
+    n_shards : number of hash-partitioned shards (leading state axis)
+    """
+
+    kind: str
+    config: Any
+    n_shards: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, got {self.kind!r}")
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        want = LGSConfig if self.kind == "lgs" else LSketchConfig
+        if not isinstance(self.config, want):
+            raise TypeError(
+                f"{self.kind} spec requires a {want.__name__}, "
+                f"got {type(self.config).__name__}")
+
+    @property
+    def seed(self) -> int:
+        return self.config.seed
+
+    def replace(self, **kw) -> "SketchSpec":
+        return dataclasses.replace(self, **kw)
+
+    def compatible(self, other: "SketchSpec") -> bool:
+        """Same sketch identity up to the shard count (states merge exactly
+        and checkpoints restore across such specs)."""
+        return self.kind == other.kind and self.config == other.config
+
+    # ---- JSON round-trip (checkpoint manifests) ---------------------------
+
+    def to_json(self) -> dict:
+        if self.kind == "lgs":
+            cfg = {"d": self.config.d, "copies": self.config.copies,
+                   "c": self.config.c, "k": self.config.k,
+                   "window_size": self.config.window_size,
+                   "seed": self.config.seed}
+        else:
+            cfg = dataclasses.asdict(self.config)
+            cfg["count_dtype"] = jnp.dtype(self.config.count_dtype).name
+            if cfg["block_bounds"] is not None:
+                cfg["block_bounds"] = [list(b) for b in cfg["block_bounds"]]
+        return {"kind": self.kind, "n_shards": self.n_shards, "config": cfg}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SketchSpec":
+        cfg = dict(d["config"])
+        if d["kind"] == "lgs":
+            config = LGSConfig(**cfg)
+        else:
+            # restore the jnp scalar type itself (not np.dtype): configs must
+            # hash identically to freshly-built ones or every restored spec
+            # would key its own jit-cache entry
+            cfg["count_dtype"] = getattr(jnp, cfg["count_dtype"])
+            if cfg.get("block_bounds") is not None:
+                cfg["block_bounds"] = tuple(tuple(b) for b in cfg["block_bounds"])
+            config = LSketchConfig(**cfg)
+        return cls(kind=d["kind"], config=config, n_shards=int(d["n_shards"]))
+
+
+def make_spec(kind: str, n_shards: int = 1, config: Any = None,
+              **config_kw) -> SketchSpec:
+    """Build a spec from a kind plus either a ready config or config kwargs."""
+    if config is None:
+        if kind == "lgs":
+            config = LGSConfig(**config_kw)
+        elif kind == "gss":
+            config = gss_config(**config_kw)
+        else:
+            config = LSketchConfig(**config_kw)
+    elif config_kw:
+        raise ValueError("pass either config= or config kwargs, not both")
+    return SketchSpec(kind=kind, config=config, n_shards=n_shards)
+
+
+def _hash31_np(x: np.ndarray, seed: int) -> np.ndarray:
+    """Host-side twin of ``core.hashing.hash31`` (same murmur3-finalizer
+    constants, bit-identical output) — the partition runs on the host, so
+    it must not round-trip through a device dispatch."""
+    h = x.astype(np.uint32) ^ np.uint32(seed & 0xFFFFFFFF)
+    h ^= h >> np.uint32(16)
+    h *= np.uint32(0x85EBCA6B)
+    h ^= h >> np.uint32(13)
+    h *= np.uint32(0xC2B2AE35)
+    h ^= h >> np.uint32(16)
+    return (h & np.uint32(0x7FFFFFFF)).astype(np.int32)
+
+
+def shard_assignment(spec: SketchSpec, src, src_label=None) -> np.ndarray:
+    """Shard id of every edge: ``hash31(mix(src, src_label)) % n_shards``.
+
+    Routing by the source endpoint entity guarantees all occurrences of one
+    logical edge land on one shard (its pool identity is endpoint-derived),
+    which is what makes ``merge_all`` exact on collision-free streams.
+    Pure numpy (the seed-keyed hash has a host-side twin of ``hash31``), so
+    the ingest-path partition never touches the device.
+    """
+    src = np.asarray(src, np.int64)
+    lab = np.zeros_like(src) if src_label is None else np.asarray(src_label,
+                                                                  np.int64)
+    if spec.n_shards == 1:
+        return np.zeros(src.shape, np.int32)
+    mixed = (src.astype(np.uint32) * np.uint32(2654435761)) ^ \
+        (lab.astype(np.uint32) << np.uint32(9))
+    h = _hash31_np(mixed, spec.seed ^ _SHARD_SALT)
+    return (h % np.int32(spec.n_shards)).astype(np.int32)

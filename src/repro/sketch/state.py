@@ -1,0 +1,126 @@
+"""ShardedState — the dynamic half of a sketch handle (DESIGN.md §6).
+
+A ``ShardedState`` wraps the per-shard sketch states stacked on a leading
+``[n_shards]`` axis of every leaf, so the whole ensemble is one pytree:
+it vmaps, shards with ``NamedSharding``, donates, and checkpoints exactly
+like a train-state leaf. ``create`` builds it, ``place`` lays the shard
+axis over a mesh axis, ``merge_all`` decodes it back to a single plain
+sketch state (exact under ``shards_compatible`` — see ``core/merge.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import merge as _merge
+from repro.core.lgs import lgs_init_state
+from repro.core.types import init_state, pytree_dataclass
+
+from .spec import SketchSpec
+
+
+@pytree_dataclass
+class ShardedState:
+    """Per-shard sketch states stacked on a leading ``[n_shards]`` axis.
+
+    ``shards`` is an LSketchState (kind lsketch/gss) or LGSState (kind lgs)
+    whose every leaf carries the extra leading axis.
+    """
+
+    shards: Any
+
+    @property
+    def n_shards(self) -> int:
+        return int(jax.tree_util.tree_leaves(self.shards)[0].shape[0])
+
+
+def _init_one(spec: SketchSpec):
+    if spec.kind == "lgs":
+        return lgs_init_state(spec.config)
+    return init_state(spec.config)
+
+
+def create(spec: SketchSpec) -> ShardedState:
+    """Fresh all-empty state for every shard (same config/seed per shard —
+    the exact-mergeability precondition)."""
+    base = _init_one(spec)
+    n = spec.n_shards
+    return ShardedState(
+        shards=jax.tree.map(lambda x: jnp.stack([x] * n), base))
+
+
+def stack_states(states) -> ShardedState:
+    """Wrap a list of plain per-shard states into a handle."""
+    return ShardedState(shards=jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *states))
+
+
+def unstack_state(state: ShardedState, shard: int = 0):
+    """Plain (unstacked) state of one shard."""
+    return jax.tree.map(lambda x: x[shard], state.shards)
+
+
+# --------------------------------------------------------------------------
+# device placement
+# --------------------------------------------------------------------------
+
+def named_shardings(spec: SketchSpec, mesh, axis: str = "data"):
+    """A ShardedState-shaped tree of ``NamedSharding``s that lays the shard
+    axis over ``mesh.shape[axis]`` (checkpoint-restore placement tree).
+
+    Mirrors the divisibility guard of ``distributed.sharding_ctx``: when the
+    mesh axis doesn't divide ``n_shards`` the state is replicated rather
+    than erroring, so the same code serves every (n_shards x mesh) cell.
+    """
+    n_dev = int(mesh.shape[axis])
+    spec_axis = axis if spec.n_shards % n_dev == 0 else None
+    target = jax.eval_shape(lambda: create(spec))
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, P(spec_axis, *([None] * (len(leaf.shape) - 1)))),
+        target)
+
+
+def place(spec: SketchSpec, state: ShardedState, mesh,
+          axis: str = "data") -> ShardedState:
+    """Place the handle's shard axis over a mesh axis (``NamedSharding``).
+
+    Subsequent jitted ``ingest``/``query`` calls partition over the shard
+    axis automatically (the vmapped per-shard computation is embarrassingly
+    parallel, so GSPMD keeps every shard's insert local to its device).
+    """
+    return jax.device_put(state, named_shardings(spec, mesh, axis))
+
+
+# --------------------------------------------------------------------------
+# merge / decode
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=0)
+def merge_all(spec: SketchSpec, state: ShardedState):
+    """Reduce the handle to one plain sketch state (counter addition with
+    per-slot window reconciliation).
+
+    Bit-identical to single-sketch ingest of the same stream iff
+    ``shards_compatible(spec, state)``; on a contended partition the decode
+    is best-effort (conflicting cells keep one key, so estimates for the
+    losing keys are no longer one-sided). The sharded ``query`` path does
+    not have this caveat — prefer it whenever a plain state isn't needed.
+    """
+    if spec.kind == "lgs":
+        return _merge.lgs_merge_all(spec.config, state.shards)
+    return _merge.merge_all(spec.config, state.shards)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def shards_compatible(spec: SketchSpec, state: ShardedState) -> jax.Array:
+    """Boolean scalar: the shards are exactly mergeable (no cross-shard cell
+    or pool-slot contention). Always True for LGS — it has no keys."""
+    if spec.kind == "lgs":
+        return jnp.asarray(True)
+    return _merge.shard_keys_compatible(state.shards)

@@ -16,10 +16,13 @@ so every paper query becomes a train-telemetry primitive:
   * label_aggregate(band)                     -> per-band routed volume
   * windowed queries (last=j)                 -> "recent j steps" imbalance
 
-The sketch update runs OFF the critical path (counts are tiny host
-transfers, inserted asynchronously between steps); the capacity-factor
-controller reads windowed expert load to adjust cfg.capacity_factor — the
-beyond-paper integration.
+Since the handle-layer redesign the telemetry sketch is a functional
+``repro.sketch`` pair (spec, ShardedState): ``n_shards > 1`` hash-partitions
+the routing stream (the gSketch scaling recipe) and the state checkpoints
+and reshards like any train-state leaf. The sketch update runs OFF the
+critical path (counts are tiny host transfers, inserted asynchronously
+between steps); the capacity-factor controller reads windowed expert load
+to adjust cfg.capacity_factor — the beyond-paper integration.
 """
 
 from __future__ import annotations
@@ -28,7 +31,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import (EdgeBatch, LSketch, LSketchConfig, insert_batch)
+from repro import sketch as skt
+from repro.core import EdgeBatch, LSketchConfig
 
 import jax.numpy as jnp
 
@@ -42,13 +46,16 @@ class RouterTelemetry:
     window_steps: int = 64  # sliding window = last 64 training steps
     subwindows: int = 8
     d: int = 128
+    n_shards: int = 1  # hash-partitioned sketch shards
 
     def __post_init__(self):
         self.cfg = LSketchConfig(
             d=self.d, n_blocks=4, F=1024, r=4, s=8, c=8, k=self.subwindows,
             window_size=self.window_steps, pool_capacity=4096,
             pool_probes=16, seed=2024)
-        self.sketch = LSketch(self.cfg)
+        self.spec = skt.SketchSpec(kind="lsketch", config=self.cfg,
+                                   n_shards=self.n_shards)
+        self.state = skt.create(self.spec)
         # vertex ids: buckets [0, n_buckets); experts [n_buckets, ...)
         self._expert_base = self.n_buckets
 
@@ -75,25 +82,31 @@ class RouterTelemetry:
             weight=jnp.asarray(w, jnp.int32),
             time=jnp.asarray(np.full(n, step), jnp.int32),
         )
-        self.sketch.state = insert_batch(self.cfg, self.sketch.state, batch)
+        self.state = skt.ingest(self.spec, self.state, batch)
         return self
+
+    def checkpoint(self, directory, step: int = 0, blocking: bool = True):
+        """Persist the telemetry sketch (same manifests as train state)."""
+        return skt.save(self.spec, self.state, directory, step=step,
+                        blocking=blocking)
 
     # ---- queries the controller uses ----
     def expert_load(self, expert: int, last: int | None = None) -> int:
-        return self.sketch.vertex_weight(
-            self._expert_base + expert, 3, direction="in", last=last)
+        q = skt.QueryBatch.vertices([self._expert_base + expert], [3],
+                                    direction="in", last=last)
+        return int(skt.query(self.spec, self.state, q)[0])
 
     def routing_affinity(self, bucket: int, expert: int,
                          last: int | None = None) -> int:
-        return self.sketch.edge_weight(
-            bucket, bucket // 64, self._expert_base + expert, 3, last=last)
+        q = skt.QueryBatch.edges([bucket], [bucket // 64],
+                                 [self._expert_base + expert], [3], last=last)
+        return int(skt.query(self.spec, self.state, q)[0])
 
     def load_vector(self, last: int | None = None) -> np.ndarray:
         """Windowed load of every expert in one batched query dispatch."""
-        from repro.engine import query_batch as qb
         experts = self._expert_base + np.arange(self.n_experts, dtype=np.int32)
-        return np.asarray(qb.vertex_weight_batch(
-            self.sketch, experts, 3, direction="in", last=last))
+        q = skt.QueryBatch.vertices(experts, 3, direction="in", last=last)
+        return np.asarray(skt.query(self.spec, self.state, q))
 
     def imbalance(self, last: int | None = None) -> float:
         """max/mean windowed expert load — the controller signal."""

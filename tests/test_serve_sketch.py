@@ -1,0 +1,88 @@
+"""SketchServer: flush guard, request grouping, sharded end-to-end serving."""
+
+import numpy as np
+import jax
+
+from repro import sketch as skt
+from repro.core import LSketch
+from repro.data.stream import PHONE, edge_batches, generate
+from repro.launch.serve_sketch import SketchServer, build_spec, main
+import dataclasses
+
+
+def _stream(n_edges=3000):
+    spec = dataclasses.replace(PHONE, n_edges=n_edges, n_vertices=300)
+    return spec, generate(spec, seed=0)
+
+
+def test_flush_on_empty_queue_is_noop():
+    spec = build_spec("lsketch", window_size=100, n_shards=2)
+    server = SketchServer(spec)
+    before = jax.tree.leaves(server.state.shards)
+    assert server.flush() == 0
+    after = jax.tree.leaves(server.state.shards)
+    assert all(a is b for a, b in zip(before, after))  # no dispatch at all
+    assert server.pending == []
+
+
+def test_request_grouping_axes():
+    """Requests group by (kind, has-edge-label, last, direction) — the
+    static axes of the jitted queries; batched fields stay per-request."""
+    spec = build_spec("lsketch", window_size=100, n_shards=1)
+    server = SketchServer(spec)
+    server.submit("edge", src=1, la=0, dst=2, lb=0)
+    server.submit("edge", src=3, la=1, dst=4, lb=1)          # same group
+    server.submit("edge", src=1, la=0, dst=2, lb=0, le=5)    # +edge label
+    server.submit("edge", src=1, la=0, dst=2, lb=0, last=2)  # +window
+    server.submit("vertex", v=1, lv=0, direction="in")
+    server.submit("vertex", v=1, lv=0, direction="out")
+    groups = {}
+    for r in server.pending:
+        groups.setdefault(server._group_key(r), []).append(r)
+    assert len(groups) == 5
+    assert len(groups[("edge", False, None, "out")]) == 2
+    assert ("edge", True, None, "out") in groups
+    assert ("edge", False, 2, "out") in groups
+    assert ("vertex", False, None, "in") in groups
+    assert ("vertex", False, None, "out") in groups
+    done = server.flush()
+    assert done == 6 and server.pending == []
+    assert all(r.answer is not None for r in [*sum(groups.values(), [])])
+
+
+def test_sharded_server_answers_match_single_sketch():
+    spec_stream, st = _stream()
+    server = SketchServer(build_spec("lsketch", spec_stream.window_size,
+                                     n_shards=4))
+    ref = LSketch(build_spec("lsketch", spec_stream.window_size).config)
+    for batch in edge_batches(st, 512):
+        server.ingest(batch)
+        ref.insert(np.asarray(batch.src), np.asarray(batch.dst),
+                   np.asarray(batch.src_label), np.asarray(batch.dst_label),
+                   np.asarray(batch.edge_label), np.asarray(batch.weight),
+                   np.asarray(batch.time))
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, len(st), 64)
+    reqs = [server.submit("edge", src=int(st.src[i]), la=int(st.src_label[i]),
+                          dst=int(st.dst[i]), lb=int(st.dst_label[i]))
+            for i in idx]
+    reqs += [server.submit("vertex", v=int(st.src[i]),
+                           lv=int(st.src_label[i]), direction="out")
+             for i in idx[:16]]
+    assert server.flush() == len(reqs)
+    for r, i in zip(reqs[:64], idx):
+        assert r.answer == ref.edge_weight(
+            int(st.src[i]), int(st.src_label[i]),
+            int(st.dst[i]), int(st.dst_label[i]))
+    for r, i in zip(reqs[64:], idx[:16]):
+        assert r.answer == ref.vertex_weight(
+            int(st.src[i]), int(st.src_label[i]), direction="out")
+
+
+def test_serve_sketch_main_smoke_all_kinds(capsys):
+    for kind, shards in (("lsketch", "4"), ("lgs", "2"), ("gss", "2")):
+        main(["--sketch", kind, "--shards", shards, "--edges", "1024",
+              "--requests", "64", "--ingest-batch", "256"])
+        out = capsys.readouterr().out
+        assert "ingested 1024 edges" in out
+        assert "answered 64 edge queries" in out

@@ -40,6 +40,23 @@ def test_windowed_expert_load_expires():
     assert total <= 5 * 256         # and mostly expired from the window
 
 
+def test_sharded_router_telemetry_matches_single():
+    """n_shards > 1 hash-partitions the routing stream; every controller
+    query must agree with the single-shard telemetry on the same counts."""
+    one = RouterTelemetry(n_experts=8, window_steps=16, subwindows=4)
+    four = RouterTelemetry(n_experts=8, window_steps=16, subwindows=4,
+                           n_shards=4)
+    rng = np.random.default_rng(2)
+    for step in (0, 4, 8):
+        counts = rng.integers(0, 4, (256, 8))
+        one.ingest(counts, step)
+        four.ingest(counts, step)
+    assert np.array_equal(one.load_vector(), four.load_vector())
+    assert np.array_equal(one.load_vector(last=1), four.load_vector(last=1))
+    assert one.routing_affinity(5, 2) == four.routing_affinity(5, 2)
+    assert one.imbalance() == four.imbalance()
+
+
 def test_capacity_controller_reacts():
     tele = RouterTelemetry(n_experts=4, window_steps=16, subwindows=4)
     ctrl = CapacityController(tele, lo=1.1, hi=1.5)
