@@ -46,8 +46,9 @@ from .window import WindowRing, pad_to_bucket
 
 # trace-time counters keyed by path name — tests assert single-compile
 # behaviour (one trace per (cfg, batch-shape), zero traces per extra
-# subwindow) by reading these before/after a workload.
-TRACE_COUNTS = {"fused": 0}
+# subwindow) by reading these before/after a workload. "fused" counts the
+# single-shard entry, "stacked" the sharded [n_shards, ...] entry.
+TRACE_COUNTS = {"fused": 0, "stacked": 0}
 
 
 def _segment_count(widx):
@@ -184,6 +185,90 @@ _insert_batch_fused = functools.partial(
 
 
 # --------------------------------------------------------------------------
+# stacked (shard-axis) insertion — the repro.sketch ingest backend
+# --------------------------------------------------------------------------
+
+def insert_stacked_fused_impl(cfg: LSketchConfig, states: LSketchState,
+                              batch: EdgeBatch, n_valid: jax.Array,
+                              use_pallas: bool = False,
+                              interpret: bool = True) -> LSketchState:
+    """One dispatch for a whole ``[n_shards, B]`` hash-partitioned batch.
+
+    ``states``/``batch`` carry a leading ``[n_shards]`` axis on every leaf;
+    ``n_valid`` is int32 [n_shards] (rows >= n_valid[s] are shard ``s``'s
+    padding — fully masked, including ring bookkeeping, so an empty shard
+    is a strict no-op).
+
+    Path choice mirrors the single-shard fused path, lifted to the stack:
+    the ring plan and addressing are computed for all shards vectorized;
+    when **every** shard's valid prefix sits in a single subwindow (the
+    overwhelmingly common serving case — and always true for GSS) the
+    matrix insert is one shard-axis Pallas launch
+    (``matrix_insert_binned_sharded``, grid (n_shards, n_blocks,
+    n_blocks)); otherwise a vmapped ``lax.scan`` replays each shard in
+    stream order. Both live under one ``lax.cond`` in one jitted dispatch.
+
+    Semantics are bit-identical to vmapping ``insert_batch_fused_impl``
+    over the shard axis (property-tested in tests/test_sketch_api.py).
+    """
+    TRACE_COUNTS["stacked"] += 1  # trace-time side effect (compile counter)
+    S, B = batch.src.shape
+    valid = jnp.arange(B, dtype=jnp.int32)[None, :] \
+        < jnp.asarray(n_valid, jnp.int32)[:, None]
+
+    ring = WindowRing.for_config(cfg)
+    widx = (batch.time.astype(jnp.int32)
+            // jnp.int32(cfg.subwindow_size)).astype(jnp.int32)
+    plan = jax.vmap(ring.plan)(states.slot_widx, states.cur_widx, widx, valid)
+
+    # apply the plan per shard: zero re-claimed slot planes, commit ring
+    zero = lambda arr, axis: jax.vmap(
+        lambda a, r: WindowRing.zero_reset_slots(a, axis, r))(arr, plan.reset)
+    states = LSketchState(
+        key=states.key, C=zero(states.C, 3), P=zero(states.P, 3),
+        pool_key=states.pool_key, pool_C=zero(states.pool_C, 1),
+        pool_P=zero(states.pool_P, 1), pool_lost=states.pool_lost,
+        slot_widx=plan.slot_widx, cur_widx=plan.cur_widx)
+
+    # addressing is vectorized over any batch shape — feed [S, B] directly
+    pa = precompute(cfg, batch.src, batch.src_label)
+    pb = precompute(cfg, batch.dst, batch.dst_label)
+    probes = edge_probes(cfg, pa, pb)
+    le_idx = hsh.edge_label_bucket(batch.edge_label, cfg.c, cfg.seed)
+    w = batch.weight.astype(states.C.dtype)
+    w_count = w * plan.count_live.astype(w.dtype)
+    w_key = w * plan.key_live.astype(w.dtype)
+
+    def scan_path(st):
+        return jax.vmap(
+            lambda s_st, s_pr, s_le, s_sl, s_wc, s_wk, s_v: _scan_insert(
+                cfg, s_st, s_pr, s_le, s_sl, s_wc, s_wk, s_v)
+        )(st, probes, le_idx, plan.slot, w_count, w_key, valid)
+
+    if not use_pallas:
+        return scan_path(states)
+
+    from repro.kernels.sketch_insert.ops import matrix_insert_binned_sharded
+
+    def pallas_path(st):
+        return matrix_insert_binned_sharded(
+            cfg, st, probes, le_idx, w_count, plan.slot[:, 0],
+            max_bin=B, interpret=interpret)
+
+    # kernel-eligible iff every shard's valid prefix is one subwindow: then
+    # each shard's items share plan.slot[s, 0] and count_live == key_live —
+    # the sharded kernel's contract, shard by shard.
+    one_segment_all = jnp.all(jax.vmap(
+        lambda wdx, v: _segment_count(jnp.where(v, wdx, wdx[0])))(
+            widx, valid) == jnp.int32(1))
+    return jax.lax.cond(one_segment_all, pallas_path, scan_path, states)
+
+
+# (the stacked impl is jitted by its one frontend, repro.sketch.ingest —
+# jitting here too would just duplicate the cache entry)
+
+
+# --------------------------------------------------------------------------
 # host frontends
 # --------------------------------------------------------------------------
 
@@ -191,6 +276,22 @@ def default_path() -> str:
     """Pallas binned kernel is the default matrix-insert path on TPU;
     the fused scan is the interpreter/CPU fallback."""
     return "pallas" if jax.default_backend() == "tpu" else "scan"
+
+
+def resolve_path(cfg: LSketchConfig, path: str = "auto") -> str:
+    """Normalize a user-facing path name to "scan" | "pallas" | "chunked".
+
+    The one path-selection rule (shared by the single-shard and stacked
+    frontends): "auto" is the backend default; "pallas" silently falls
+    back to "scan" under skewed blocking (the kernel needs uniform tiles).
+    """
+    if path == "auto":
+        path = default_path()
+    if path == "pallas" and cfg.block_bounds is not None:
+        path = "scan"  # kernel requires uniform tiles; silent fallback
+    if path not in ("scan", "pallas", "chunked"):
+        raise ValueError(f"unknown insert path {path!r}")
+    return path
 
 
 def insert_batch(cfg: LSketchConfig, state: LSketchState, batch: EdgeBatch,
@@ -204,14 +305,9 @@ def insert_batch(cfg: LSketchConfig, state: LSketchState, batch: EdgeBatch,
     n = int(batch.src.shape[0])
     if n == 0:
         return state
-    if path == "auto":
-        path = default_path()
-    if path == "pallas" and cfg.block_bounds is not None:
-        path = "scan"  # kernel requires uniform tiles; silent fallback
+    path = resolve_path(cfg, path)
     if path == "chunked":
         return insert_batch_chunked(cfg, state, batch)
-    if path not in ("scan", "pallas"):
-        raise ValueError(f"unknown insert path {path!r}")
     padded = jax.tree.map(pad_to_bucket, batch) if bucket else batch
     interpret = jax.default_backend() != "tpu"
     return _insert_batch_fused(cfg, state, padded, jnp.int32(n),

@@ -13,9 +13,19 @@ TPU mapping of the paper's hot loop (Algorithm 2, lines 10-23):
     the host-side additional-pool path.
   * state tensors are updated in place (input_output_aliases).
 
+``sketch_insert_kernel_sharded`` extends the same body with a leading
+**shard** grid dimension — grid ``(n_shards, n_blocks, n_blocks)`` over
+``[n_shards, ...]``-stacked bins and state planes, so an N-shard ingest is
+one launch instead of N (or a vmapped interpretation). Shards are
+independent by construction (hash-partitioned streams, disjoint state
+tiles), so the extra grid axis carries no cross-program dependence; the
+one kernel body serves both layouts by collapsing whatever leading
+singleton block dims its refs carry.
+
 VMEM budget per grid step (b=128, c=8, int32): key 2*128*128*4 = 128 KiB,
 C plane 128 KiB, P plane 1 MiB, bin arrays O(max_bin*s) — comfortably inside
-the ~16 MiB/core budget; b and max_bin are the tuning knobs.
+the ~16 MiB/core budget; b and max_bin are the tuning knobs (the shard grid
+axis adds no VMEM: each program still sees one shard's one tile).
 
 TPU layout note: the twin axis is kept leading ((2, b, b) tiles) so the
 trailing two dims are lane/sublane-aligned multiples of (8, 128) when b is a
@@ -42,19 +52,26 @@ def _insert_body(rows_ref, cols_ref, keys_ref, le_ref, w_ref,
 
     The state refs are input/output-aliased: ``key_ref``/``c_ref``/``p_ref``
     hold the input tile on entry and are updated in place.
+
+    Works for both grid layouts: the per-block bins/tiles may carry extra
+    leading singleton block dims (the shard grid axis); they are collapsed
+    by the index prefixes below.
     """
     del key_in, c_in, p_in  # same buffers as the out refs
+    bl3 = (0,) * (rows_ref.ndim - 2)  # bins trailing (max_bin, s)
+    bl2 = (0,) * (w_ref.ndim - 1)  # bins trailing (max_bin,)
+    tl = (0,) * (key_ref.ndim - 3)  # tiles trailing (2, b, b)[, c]
 
     def edge(i, _):
-        w = w_ref[0, i]
+        w = w_ref[(*bl2, i)]
         # gather the s*2 candidate slots in paper order (probe-major)
         cand = []
         for pi in range(s):
-            r = rows_ref[0, i, pi]
-            c = cols_ref[0, i, pi]
-            kw = keys_ref[0, i, pi]
+            r = rows_ref[(*bl3, i, pi)]
+            c = cols_ref[(*bl3, i, pi)]
+            kw = keys_ref[(*bl3, i, pi)]
             for tz in range(2):
-                cur = key_ref[tz, r, c]
+                cur = key_ref[(*tl, tz, r, c)]
                 cand.append((cur == kw) | (cur == EMPTY))
         okv = jnp.stack(cand)  # [s*2]
         found = okv.any() & (w > 0)
@@ -68,25 +85,25 @@ def _insert_body(rows_ref, cols_ref, keys_ref, le_ref, w_ref,
         k_sel = jnp.int32(0)
         for pi in range(s):
             hit = pi_sel == pi
-            r_sel = jnp.where(hit, rows_ref[0, i, pi], r_sel)
-            c_sel = jnp.where(hit, cols_ref[0, i, pi], c_sel)
-            k_sel = jnp.where(hit, keys_ref[0, i, pi], k_sel)
+            r_sel = jnp.where(hit, rows_ref[(*bl3, i, pi)], r_sel)
+            c_sel = jnp.where(hit, cols_ref[(*bl3, i, pi)], c_sel)
+            k_sel = jnp.where(hit, keys_ref[(*bl3, i, pi)], k_sel)
 
-        old_key = jnp.where(tz_sel == 0, key_ref[0, r_sel, c_sel],
-                            key_ref[1, r_sel, c_sel])
+        old_key = jnp.where(tz_sel == 0, key_ref[(*tl, 0, r_sel, c_sel)],
+                            key_ref[(*tl, 1, r_sel, c_sel)])
         new_key = jnp.where(found, k_sel, old_key)
         wm = jnp.where(found, w, 0)
-        le = le_ref[0, i]
+        le = le_ref[(*bl2, i)]
 
         for tz in range(2):
             sel = (tz_sel == tz) & found
-            key_ref[tz, r_sel, c_sel] = jnp.where(sel, new_key,
-                                                  key_ref[tz, r_sel, c_sel])
-            c_ref[tz, r_sel, c_sel] = c_ref[tz, r_sel, c_sel] + jnp.where(
-                sel, wm, 0)
-            p_ref[tz, r_sel, c_sel, le] = p_ref[tz, r_sel, c_sel, le] + \
-                jnp.where(sel, wm, 0)
-        ok_ref[0, i] = found
+            key_ref[(*tl, tz, r_sel, c_sel)] = jnp.where(
+                sel, new_key, key_ref[(*tl, tz, r_sel, c_sel)])
+            c_ref[(*tl, tz, r_sel, c_sel)] = \
+                c_ref[(*tl, tz, r_sel, c_sel)] + jnp.where(sel, wm, 0)
+            p_ref[(*tl, tz, r_sel, c_sel, le)] = \
+                p_ref[(*tl, tz, r_sel, c_sel, le)] + jnp.where(sel, wm, 0)
+        ok_ref[(*bl2, i)] = found
         return _
 
     jax.lax.fori_loop(0, max_bin, edge, 0)
@@ -122,6 +139,226 @@ def sketch_insert_kernel(rows, cols, keys, le, w, key, C_plane, P_plane,
             jax.ShapeDtypeStruct(C_plane.shape, C_plane.dtype),
             jax.ShapeDtypeStruct(P_plane.shape, P_plane.dtype),
             jax.ShapeDtypeStruct((n2, max_bin), jnp.bool_),
+        ],
+        input_output_aliases={5: 0, 6: 1, 7: 2},
+        interpret=interpret,
+    )(rows, cols, keys, le, w, key, C_plane, P_plane)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "n_blocks", "b",
+                                             "s", "c", "max_bin"))
+def sketch_insert_tiles_xla(rows, cols, keys, le, w, key, C_plane, P_plane,
+                            limit=None, *, n_shards: int, n_blocks: int,
+                            b: int, s: int, c: int, max_bin: int):
+    """Pure-XLA twin of ``sketch_insert_kernel_sharded`` — same I/O
+    contract, bit-identical results: the executable model of the Pallas
+    kernel (tests assert kernel == twin on identical binned inputs).
+
+    The kernel's grid axes are embarrassingly parallel (all ``s`` probes of
+    an edge live inside one (row-block, col-block) tile, so bins never
+    share a matrix cell); only the walk *within* a bin is sequential. This
+    twin exploits exactly that: one ``lax.while_loop`` over bin positions
+    whose body processes **one edge of every (shard, block) bin
+    simultaneously** (vectorized gathers/scatters over the
+    ``n_shards * n_blocks^2`` tile axis). The production CPU path goes one
+    step further (``sketch_insert_stream_walk`` below: no materialized
+    bins, counters out of the loop); this twin stays shaped exactly like
+    the kernel so the two can be diffed tensor-for-tensor.
+
+    ``limit`` (traced scalar, optional): the largest actual bin fill across
+    all bins. Positions >= the fill of every bin are provable no-ops (the
+    binning pads with weight 0, and zero weight neither claims nor adds),
+    so the walk stops there instead of grinding through ``max_bin``.
+    """
+    S, n2 = n_shards, n_blocks * n_blocks
+    NB = S * n2
+    nb_idx = jnp.arange(NB, dtype=jnp.int32)
+    limit = jnp.int32(max_bin) if limit is None else \
+        jnp.minimum(jnp.asarray(limit, jnp.int32), max_bin)
+
+    def to_tiles(plane):  # [S, 2, d, d(, c)] -> [NB, 2, b, b(, c)]
+        extra = plane.shape[4:]
+        x = plane.reshape((S, 2, n_blocks, b, n_blocks, b) + extra)
+        x = jnp.moveaxis(x, (2, 4), (1, 2))
+        return x.reshape((NB, 2, b, b) + extra)
+
+    def from_tiles(tiles):  # inverse of to_tiles
+        extra = tiles.shape[4:]
+        x = tiles.reshape((S, n_blocks, n_blocks, 2, b, b) + extra)
+        x = jnp.moveaxis(x, (1, 2), (2, 4))
+        d = n_blocks * b
+        return x.reshape((S, 2, d, d) + extra)
+
+    def to_stream(x):  # [S, n2, max_bin, ...] -> [max_bin, NB, ...]
+        flat = x.reshape((NB, max_bin) + x.shape[3:])
+        return jnp.moveaxis(flat, 1, 0)
+
+    xs = tuple(to_stream(v) for v in (rows, cols, keys, le, w))
+
+    def body(state):
+        t, key_t, C_t, P_t, flags = state
+        r, cc, kk, le_t, w_t = (x[t] for x in xs)  # [NB, s] x3, [NB], [NB]
+        # the s*2 candidates in paper order (probe-major, twin-minor)
+        cur = key_t[nb_idx[:, None, None], jnp.arange(2)[None, None, :],
+                    r[:, :, None], cc[:, :, None]]  # [NB, s, 2]
+        ok = ((cur == kk[:, :, None]) | (cur == EMPTY)).reshape(NB, -1)
+        found = ok.any(axis=1) & (w_t > 0)
+        first = jnp.argmax(ok, axis=1)
+        pi, tz = first // 2, first % 2
+        take = lambda a: jnp.take_along_axis(a, pi[:, None], axis=1)[:, 0]
+        r_sel, c_sel, k_sel = take(r), take(cc), take(kk)
+        old = key_t[nb_idx, tz, r_sel, c_sel]
+        wm = jnp.where(found, w_t, 0)
+        key_t = key_t.at[nb_idx, tz, r_sel, c_sel].set(
+            jnp.where(found, k_sel, old))
+        C_t = C_t.at[nb_idx, tz, r_sel, c_sel].add(wm)
+        P_t = P_t.at[nb_idx, tz, r_sel, c_sel, le_t].add(wm)
+        return t + 1, key_t, C_t, P_t, flags.at[t].set(found)
+
+    state = (jnp.int32(0), to_tiles(key), to_tiles(C_plane),
+             to_tiles(P_plane), jnp.zeros((max_bin, NB), jnp.bool_))
+    _, key_t, C_t, P_t, flags = jax.lax.while_loop(
+        lambda st: st[0] < limit, body, state)
+    flags = jnp.moveaxis(flags, 0, 1).reshape(S, n2, max_bin)
+    return from_tiles(key_t), from_tiles(C_t), from_tiles(P_t), flags
+
+
+def sketch_insert_stream_walk(rows, cols, keys, w, order, offs, counts,
+                              key, *, n_shards: int, n_blocks: int, b: int,
+                              max_bin: int | None = None):
+    """The sequential half of the binned insert, alone: walk the key tiles
+    in bin order and *collect* each edge's landing cell instead of
+    updating counter planes.
+
+    Two observations make this the fast XLA lowering of the binned
+    program (``pallas_call`` on CPU only interprets):
+
+      * the first-fit walk reads and writes only ``key`` — the ``C``/``P``
+        counters are write-only scatter-adds, so they need not ride
+        through the sequential loop at all; the caller applies all counter
+        weight in one vectorized scatter-add into the full stacked state
+        (no ring-slot plane gather, no tile reshape, no write-back copy);
+      * bins never need materializing — the loop reads edge ``t`` of every
+        bin straight out of the bin-sorted stream (a gather at
+        ``offs + t``), so the ``[n2, max_bin, ...]`` padding tensors the
+        hardware kernel's BlockSpecs require are never built.
+
+    Inputs: ``rows``/``cols`` ([S, B, s], **tile-relative** probe coords,
+    stream order), ``keys`` [S, B, s], ``w`` [S, B] (weights already
+    carrying every mask — zero weight neither claims nor counts),
+    ``order`` [S, B] (stable bin sort), ``offs``/``counts`` [S, n2] (bin
+    start/fill within each shard's sorted stream), ``key`` [S, 2, d, d].
+
+    Returns ``(new_key [S, 2, d, d], enc [S, B])`` where ``enc`` is per
+    item **in stream order**: 0 = not inserted (pool candidate iff its
+    weight is positive), else ``1 + (tz * b + r_rel) * b + c_rel`` — the
+    landing cell, packed. Walk length is ``min(max(counts), max_bin)``:
+    the true largest bin fill, not the padded batch length — and capped
+    at ``max_bin`` so a tuned bin capacity drops each bin's overflow
+    edges to the pool exactly like the hardware kernel's truncated bins
+    (an un-walked edge keeps ``enc == 0``). Traced (not jitted) —
+    compose inside a jitted caller.
+    """
+    S, n2 = n_shards, n_blocks * n_blocks
+    B = w.shape[1]
+    NB = S * n2
+    nb_idx = jnp.arange(NB, dtype=jnp.int32)
+    limit = jnp.max(counts)
+    if max_bin is not None:
+        limit = jnp.minimum(limit, jnp.int32(max_bin))
+
+    def flat_sorted(x):  # [S, B, ...] -> bin-sorted, shard-flattened
+        idx = order if x.ndim == 2 else order[..., None]
+        return jnp.take_along_axis(x, idx, axis=1).reshape((S * B,)
+                                                           + x.shape[2:])
+
+    rows_s, cols_s, keys_s, w_s = (flat_sorted(v)
+                                   for v in (rows, cols, keys, w))
+    # global sorted position of bin nb's first edge
+    base = (nb_idx // n2) * jnp.int32(B) + offs.reshape(NB)
+    counts_f = counts.reshape(NB)
+
+    def body(state):
+        t, key_t, enc_s = state
+        live = t < counts_f  # [NB]
+        gi = jnp.where(live, base + t, jnp.int32(S * B))  # OOB -> clamp/drop
+        r = rows_s[jnp.minimum(gi, S * B - 1)]  # [NB, s]
+        cc = cols_s[jnp.minimum(gi, S * B - 1)]
+        kk = keys_s[jnp.minimum(gi, S * B - 1)]
+        w_t = jnp.where(live, w_s[jnp.minimum(gi, S * B - 1)], 0)
+        cur = key_t[nb_idx[:, None, None], jnp.arange(2)[None, None, :],
+                    r[:, :, None], cc[:, :, None]]  # [NB, s, 2]
+        ok = ((cur == kk[:, :, None]) | (cur == EMPTY)).reshape(NB, -1)
+        found = ok.any(axis=1) & (w_t > 0)
+        first = jnp.argmax(ok, axis=1)
+        pi, tz = first // 2, first % 2
+        take = lambda a: jnp.take_along_axis(a, pi[:, None], axis=1)[:, 0]
+        r_sel, c_sel, k_sel = take(r), take(cc), take(kk)
+        old = key_t[nb_idx, tz, r_sel, c_sel]
+        key_t = key_t.at[nb_idx, tz, r_sel, c_sel].set(
+            jnp.where(found, k_sel, old))
+        # packed collect write: 0 = not inserted, else 1 + cell id
+        enc = jnp.where(found, 1 + (tz * b + r_sel) * b + c_sel, 0)
+        return t + 1, key_t, enc_s.at[gi].set(enc, mode="drop")
+
+    key_t = jnp.moveaxis(key.reshape(S, 2, n_blocks, b, n_blocks, b),
+                         (2, 4), (1, 2)).reshape(NB, 2, b, b)
+    state = (jnp.int32(0), key_t, jnp.zeros((S * B,), jnp.int32))
+    _, key_t, enc_s = jax.lax.while_loop(lambda st: st[0] < limit, body,
+                                         state)
+
+    x = key_t.reshape(S, n_blocks, n_blocks, 2, b, b)
+    new_key = jnp.moveaxis(x, (1, 2), (2, 4)).reshape(S, 2, n_blocks * b,
+                                                      n_blocks * b)
+    # un-sort the collect array back to stream order
+    enc = jnp.zeros((S, B), jnp.int32).at[
+        jnp.arange(S, dtype=jnp.int32)[:, None], order].set(
+            enc_s.reshape(S, B))
+    return new_key, enc
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "n_blocks", "b",
+                                             "s", "c", "max_bin",
+                                             "interpret"))
+def sketch_insert_kernel_sharded(rows, cols, keys, le, w, key, C_plane,
+                                 P_plane, *, n_shards: int, n_blocks: int,
+                                 b: int, s: int, c: int, max_bin: int,
+                                 interpret: bool = True):
+    """Shard-axis variant: one launch over every shard's every block.
+
+    rows/cols/keys: [n_shards, n^2, max_bin, s]; le/w: [n_shards, n^2,
+    max_bin]; key/C_plane: [n_shards, 2, d, d]; P_plane: [n_shards, 2, d,
+    d, c] (each shard's current-slot planes, gathered at its own ring
+    slot by the caller).
+
+    Returns (key, C_plane, P_plane, inserted_flags[n_shards, n^2,
+    max_bin]). Grid ``(n_shards, n_blocks, n_blocks)`` — the shard axis is
+    the outermost (slowest) grid dimension, so each shard's tiles stream
+    through VMEM contiguously, exactly like n_shards back-to-back launches
+    of ``sketch_insert_kernel`` but with one dispatch and one pipeline.
+    """
+    n2 = n_blocks * n_blocks
+    grid = (n_shards, n_blocks, n_blocks)
+
+    bin_spec4 = pl.BlockSpec((1, 1, max_bin, s),
+                             lambda h, i, j: (h, i * n_blocks + j, 0, 0))
+    bin_spec3 = pl.BlockSpec((1, 1, max_bin),
+                             lambda h, i, j: (h, i * n_blocks + j, 0))
+    tile = pl.BlockSpec((1, 2, b, b), lambda h, i, j: (h, 0, i, j))
+    tile_p = pl.BlockSpec((1, 2, b, b, c), lambda h, i, j: (h, 0, i, j, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_insert_body, s=s, max_bin=max_bin),
+        grid=grid,
+        in_specs=[bin_spec4, bin_spec4, bin_spec4, bin_spec3, bin_spec3,
+                  tile, tile, tile_p],
+        out_specs=[tile, tile, tile_p, bin_spec3],
+        out_shape=[
+            jax.ShapeDtypeStruct(key.shape, key.dtype),
+            jax.ShapeDtypeStruct(C_plane.shape, C_plane.dtype),
+            jax.ShapeDtypeStruct(P_plane.shape, P_plane.dtype),
+            jax.ShapeDtypeStruct((n_shards, n2, max_bin), jnp.bool_),
         ],
         input_output_aliases={5: 0, 6: 1, 7: 2},
         interpret=interpret,

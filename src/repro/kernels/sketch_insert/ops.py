@@ -12,8 +12,12 @@ Pipeline (DESIGN.md §2 "binned batch insertion"):
 
 ``matrix_insert_binned`` is the composable middle: it takes pre-addressed
 probes plus the (single) target ring slot and is what the engine's fused
-single-dispatch path routes through; ``insert_window_batch_pallas`` is the
-standalone per-subwindow drop-in kept for tests and direct use.
+single-dispatch path routes through; ``matrix_insert_binned_sharded`` is
+its shard-axis twin — the same binning per shard, one
+``(n_shards, n_blocks, n_blocks)``-grid launch, a vmapped pool pass — used
+by the engine's stacked insert for the ``repro.sketch`` handle layer;
+``insert_window_batch_pallas`` is the standalone per-subwindow drop-in
+kept for tests and direct use.
 
 Restrictions: uniform blocking only (equal tiles — skewed blocking falls
 back to `repro.core.insert_window_batch`, the fori-loop path).
@@ -31,17 +35,28 @@ from repro.core.lsketch import (EdgeProbes, advance_window, edge_probes,
                                 precompute)
 from repro.core.types import EdgeBatch, LSketchConfig, LSketchState
 
-from .kernel import sketch_insert_kernel
+from .kernel import (sketch_insert_kernel, sketch_insert_kernel_sharded,
+                     sketch_insert_stream_walk)
 
 
 def _pool_pass(cfg: LSketchConfig, state: LSketchState, slot, probes, le_idx,
                weight, failed) -> LSketchState:
-    """Additional-pool insertion for edges the matrix rejected (stream order)."""
+    """Additional-pool insertion for edges the matrix rejected (stream order).
+
+    The walk visits only the failed items: a stable sort puts them first
+    (stream order preserved among them — non-failed items are provable
+    no-ops, so skipping them is bit-identical) and a ``while_loop`` stops
+    after the last one. Pool overflow is the rare path, so this is O(few)
+    instead of O(batch).
+    """
     pool_slots = hsh.pool_slot_seq(probes.pid_src, probes.pid_dst,
                                    cfg.pool_capacity, cfg.pool_probes, cfg.seed)
-    n = weight.shape[0]
+    order = jnp.argsort(~failed, stable=True)  # failed first, stream order
+    n_failed = jnp.sum(failed.astype(jnp.int32))
 
-    def body(i, st: LSketchState) -> LSketchState:
+    def body(carry):
+        idx, st = carry
+        i = order[idx]
         w = jnp.where(failed[i], weight[i], 0)
         ps = pool_slots[i]
         pk = st.pool_key[ps]
@@ -59,11 +74,73 @@ def _pool_pass(cfg: LSketchConfig, state: LSketchState, slot, probes, le_idx,
         pool_C = st.pool_C.at[pslot, slot].add(pw)
         pool_P = st.pool_P.at[pslot, slot, le_idx[i]].add(pw)
         lost = st.pool_lost + jnp.where((w > 0) & ~pok.any(), w, 0)
-        return LSketchState(key=st.key, C=st.C, P=st.P, pool_key=pool_key,
-                            pool_C=pool_C, pool_P=pool_P, pool_lost=lost,
-                            slot_widx=st.slot_widx, cur_widx=st.cur_widx)
+        return idx + 1, LSketchState(
+            key=st.key, C=st.C, P=st.P, pool_key=pool_key,
+            pool_C=pool_C, pool_P=pool_P, pool_lost=lost,
+            slot_widx=st.slot_widx, cur_widx=st.cur_widx)
 
-    return jax.lax.fori_loop(0, n, body, state)
+    _, state = jax.lax.while_loop(lambda c: c[0] < n_failed, body,
+                                  (jnp.int32(0), state))
+    return state
+
+
+def _bin_plan(cfg: LSketchConfig, probes: EdgeProbes, weight):
+    """The one stable binning rule every lowering shares: per-edge block
+    id (uniform tiles: block = row // b; all ``s`` probes of an edge stay
+    in one block, so probe 0 decides), sort order, per-bin fills and
+    start offsets.
+
+    Zero-weight rows (bucket padding, expired items) are no-ops in the
+    matrix walk — they are routed to a virtual one-past-last bin so they
+    never occupy bin slots (replicate-last padding would otherwise pile a
+    whole row's padding into one real bin and stretch the walk by its
+    length). Returns ``(bid0, bid, order, counts, offs)`` where ``bid0``
+    is the raw (unrouted) block id. One shard (1-D); vmap over a leading
+    shard axis."""
+    n, b = cfg.n_blocks, cfg.b
+    bid0 = (probes.rows[:, 0] // jnp.int32(b)) * jnp.int32(n) \
+        + (probes.cols[:, 0] // jnp.int32(b))
+    bid = jnp.where(weight > 0, bid0, jnp.int32(n * n))
+    order = jnp.argsort(bid, stable=True)
+    counts = jnp.bincount(bid, length=n * n)  # OOB (dead) rows drop out
+    offs = jnp.cumsum(counts) - counts
+    return bid0, bid, order, counts, offs
+
+
+def _bin_batch(cfg: LSketchConfig, probes: EdgeProbes, le_idx, weight,
+               max_bin: int):
+    """Stable binning of one shard's pre-addressed batch by destination
+    block (uniform tiles: block = row // b). Returns the binned tensors
+    plus the (order, bid_s, pos, ok_pos) permutation needed to un-bin the
+    kernel's inserted flags back to stream order, plus per-bin fill
+    counts. Batch-rank-agnostic in the sense that it vmaps cleanly over a
+    leading shard axis."""
+    n, b = cfg.n_blocks, cfg.b
+    B = probes.rows.shape[0]
+    _, bid, order, counts, offs = _bin_plan(cfg, probes, weight)
+    bid_s = bid[order]
+    pos = jnp.arange(B, dtype=jnp.int32) - \
+        offs[jnp.minimum(bid_s, n * n - 1)].astype(jnp.int32)
+    ok_pos = (pos < max_bin) & (bid_s < jnp.int32(n * n))
+
+    def to_bins(x, fill=0):
+        shape = (n * n, max_bin) + x.shape[1:]
+        out = jnp.full(shape, fill, x.dtype)
+        return out.at[bid_s, pos].set(x[order], mode="drop")
+
+    rows_b = to_bins(probes.rows % jnp.int32(b))
+    cols_b = to_bins(probes.cols % jnp.int32(b))
+    keys_b = to_bins(probes.keys)
+    le_b = to_bins(le_idx)
+    w_b = to_bins(weight)
+    return (rows_b, cols_b, keys_b, le_b, w_b), (order, bid_s, pos, ok_pos), \
+        counts
+
+
+def _unbin_flags(flags, order, bid_s, pos, ok_pos, B):
+    """Inserted flags [n^2, max_bin] -> stream order [B]."""
+    flags_sorted = flags[bid_s, pos] & ok_pos
+    return jnp.zeros((B,), jnp.bool_).at[order].set(flags_sorted)
 
 
 def matrix_insert_binned(cfg: LSketchConfig, state: LSketchState,
@@ -83,26 +160,16 @@ def matrix_insert_binned(cfg: LSketchConfig, state: LSketchState,
     max_bin = B if max_bin is None else max_bin
     del valid  # zero-weight rows (padding or expired) are inert already
 
-    # --- stable binning by destination block (uniform tiles: block = row//b)
-    bid = (probes.rows[:, 0] // jnp.int32(b)) * jnp.int32(n) \
-        + (probes.cols[:, 0] // jnp.int32(b))
-    order = jnp.argsort(bid, stable=True)
-    bid_s = bid[order]
-    counts = jnp.bincount(bid, length=n * n)
-    offs = jnp.cumsum(counts) - counts
-    pos = jnp.arange(B, dtype=jnp.int32) - offs[bid_s].astype(jnp.int32)
-    ok_pos = pos < max_bin  # static max_bin >= B makes this all-true
+    if interpret:  # bin-parallel XLA lowering (1-shard stack): the CPU path
+        lifted = jax.tree.map(lambda x: x[None], state)
+        out = matrix_insert_binned_sharded(
+            cfg, lifted, jax.tree.map(lambda x: x[None], probes),
+            le_idx[None], weight[None], slot[None], max_bin=max_bin,
+            interpret=True)
+        return jax.tree.map(lambda x: x[0], out)
 
-    def to_bins(x, fill=0):
-        shape = (n * n, max_bin) + x.shape[1:]
-        out = jnp.full(shape, fill, x.dtype)
-        return out.at[bid_s, pos].set(x[order], mode="drop")
-
-    rows_b = to_bins(probes.rows % jnp.int32(b))
-    cols_b = to_bins(probes.cols % jnp.int32(b))
-    keys_b = to_bins(probes.keys)
-    le_b = to_bins(le_idx)
-    w_b = to_bins(weight)
+    (rows_b, cols_b, keys_b, le_b, w_b), (order, bid_s, pos, ok_pos), \
+        counts = _bin_batch(cfg, probes, le_idx, weight, max_bin)
 
     # --- current-slot planes, twin-leading layout ---
     key_t = jnp.moveaxis(state.key, 2, 0)  # [2, d, d]
@@ -112,7 +179,7 @@ def matrix_insert_binned(cfg: LSketchConfig, state: LSketchState,
     key_t, C_t, P_t, flags = sketch_insert_kernel(
         rows_b, cols_b, keys_b, le_b, w_b, key_t, C_t, P_t,
         n_blocks=n, b=b, s=cfg.s, c=cfg.c, max_bin=max_bin,
-        interpret=interpret)
+        interpret=False)
 
     new_key = jnp.moveaxis(key_t, 0, 2)
     new_C = state.C.at[..., slot].set(jnp.moveaxis(C_t, 0, 2))
@@ -123,10 +190,95 @@ def matrix_insert_binned(cfg: LSketchConfig, state: LSketchState,
                          slot_widx=state.slot_widx, cur_widx=state.cur_widx)
 
     # --- un-bin the inserted flags back to stream order; pool pass ---
-    flags_sorted = flags[bid_s, pos] & ok_pos
-    inserted = jnp.zeros((B,), jnp.bool_).at[order].set(flags_sorted)
+    inserted = _unbin_flags(flags, order, bid_s, pos, ok_pos, B)
     failed = (~inserted) & (weight > 0)
     return _pool_pass(cfg, state, slot, probes, le_idx, weight, failed)
+
+
+def matrix_insert_binned_sharded(cfg: LSketchConfig, state: LSketchState,
+                                 probes: EdgeProbes, le_idx, weight, slot,
+                                 max_bin: int | None = None,
+                                 interpret: bool = True,
+                                 _kernel_interpret: bool = False
+                                 ) -> LSketchState:
+    """Shard-axis twin of ``matrix_insert_binned``: one Pallas launch over
+    the whole ``[n_shards, ...]`` stack.
+
+    ``state`` carries a leading ``[n_shards]`` axis on every leaf; probe
+    tensors are ``[n_shards, B, s]``, ``le_idx``/``weight`` are
+    ``[n_shards, B]`` and ``slot`` is ``[n_shards]`` — each shard's own
+    (traced) ring slot. ``weight`` must already carry the per-shard
+    window-liveness **and** ``n_valid`` padding mask (zero-weight rows
+    insert nothing and claim nothing — an all-zero row is how an empty
+    shard stays a strict no-op). Traced (not jitted) — compose inside a
+    jitted caller.
+
+    ``_kernel_interpret`` (tests only): with ``interpret=False``, run the
+    hardware-kernel branch but in Pallas interpret mode — the only way to
+    exercise that branch end-to-end on CPU (lowering-parity tests).
+    """
+    if cfg.block_bounds is not None:
+        raise ValueError("Pallas path supports uniform blocking only")
+    S, B = probes.rows.shape[:2]
+    max_bin = B if max_bin is None else max_bin
+
+    n, b = cfg.n_blocks, cfg.b
+    key_t = jnp.moveaxis(state.key, 3, 1)  # [S, 2, d, d]
+
+    if interpret:
+        # XLA lowering (sketch_insert_stream_walk): no bin tensors, the
+        # walk reads the bin-sorted stream directly; the counters
+        # (write-only in the walk) land in one scatter-add on the full
+        # stacked C/P — no per-slot plane gather or write-back.
+        bid0, _, order, counts, offs = jax.vmap(
+            lambda p, w: _bin_plan(cfg, p, w))(probes, weight)
+        new_key_t, enc = sketch_insert_stream_walk(
+            probes.rows % jnp.int32(b), probes.cols % jnp.int32(b),
+            probes.keys, weight, order, offs, counts, key_t,
+            n_shards=S, n_blocks=n, b=b, max_bin=max_bin)
+        inserted = enc > 0  # [S, B], stream order
+        v = jnp.maximum(enc - 1, 0)
+        tzs = v // (b * b)
+        rs = (bid0 // jnp.int32(n)) * jnp.int32(b) + (v // b) % b
+        cs = (bid0 % jnp.int32(n)) * jnp.int32(b) + v % b
+        wm = jnp.where(inserted, weight, 0)
+        s_idx = jnp.arange(S, dtype=jnp.int32)[:, None]
+        slot_b = slot[:, None]
+        new_C = state.C.at[s_idx, rs, cs, tzs, slot_b].add(wm)
+        new_P = state.P.at[s_idx, rs, cs, tzs, slot_b, le_idx].add(wm)
+    else:
+        # hardware kernel: materialized bins (BlockSpec row-select) over
+        # per-shard current-slot planes, twin-leading layout
+        bins, unbin, _ = jax.vmap(
+            lambda p, le, w: _bin_batch(cfg, p, le, w, max_bin))(
+                probes, le_idx, weight)
+        rows_b, cols_b, keys_b, le_b, w_b = bins
+        C_t = jax.vmap(lambda Cs, sl: jnp.moveaxis(Cs[..., sl], 2, 0))(
+            state.C, slot)  # [S, 2, d, d]
+        P_t = jax.vmap(lambda Ps, sl: jnp.moveaxis(Ps[..., sl, :], 2, 0))(
+            state.P, slot)  # [S, 2, d, d, c]
+        new_key_t, C_t, P_t, flags = sketch_insert_kernel_sharded(
+            rows_b, cols_b, keys_b, le_b, w_b, key_t, C_t, P_t,
+            n_shards=S, n_blocks=cfg.n_blocks, b=cfg.b, s=cfg.s, c=cfg.c,
+            max_bin=max_bin, interpret=_kernel_interpret)
+        new_C = jax.vmap(lambda Cs, Ct, sl: Cs.at[..., sl].set(
+            jnp.moveaxis(Ct, 0, 2)))(state.C, C_t, slot)
+        new_P = jax.vmap(lambda Ps, Pt, sl: Ps.at[..., sl, :].set(
+            jnp.moveaxis(Pt, 0, 2)))(state.P, P_t, slot)
+        inserted = jax.vmap(
+            lambda fl, ub: _unbin_flags(fl, *ub, B))(flags, unbin)
+
+    state = LSketchState(key=jnp.moveaxis(new_key_t, 1, 3), C=new_C,
+                         P=new_P, pool_key=state.pool_key,
+                         pool_C=state.pool_C, pool_P=state.pool_P,
+                         pool_lost=state.pool_lost,
+                         slot_widx=state.slot_widx, cur_widx=state.cur_widx)
+
+    # --- vmapped stream-order pool pass over the matrix rejects ---
+    failed = (~inserted) & (weight > 0)
+    return jax.vmap(
+        lambda st, sl, pr, le, w, fl: _pool_pass(cfg, st, sl, pr, le, w, fl)
+    )(state, slot, probes, le_idx, weight, failed)
 
 
 @functools.partial(jax.jit, static_argnums=(0,), static_argnames=("max_bin", "interpret"),

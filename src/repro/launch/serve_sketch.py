@@ -1,11 +1,16 @@
 """Sketch serving driver: batched ingest + batched queries over one handle.
 
 The sketch analog of the decode server in ``serve.py``, rebuilt on the
-functional ``repro.sketch`` handle layer (DESIGN.md §6): the server owns a
-``(SketchSpec, ShardedState)`` pair; ingest hash-partitions each edge batch
-across ``--shards`` shards in one dispatch, and queries fan through every
-shard and sum contributions — the same server fronts LSketch, LGS, or GSS
-because the handle layer dispatches on ``spec.kind``.
+functional ``repro.sketch`` handle layer (DESIGN.md §6/§7): the server
+owns a ``(SketchSpec, AsyncIngestor)`` pair; ingest hash-partitions each
+edge batch across ``--shards`` shards in one stacked dispatch (shard-axis
+Pallas kernel on TPU, fused scan elsewhere) and is **pipelined** — the
+host partition of batch N+1 overlaps batch N's in-flight dispatch
+(``--no-pipeline`` dispatches eagerly instead). Queries fan through every
+shard and sum contributions; the query path flushes the ingest pipeline
+first, so answers always reflect every batch submitted before them. The
+same server fronts LSketch, LGS, or GSS because the handle layer
+dispatches on ``spec.kind``.
 
 Usage: python -m repro.launch.serve_sketch --sketch lsketch --shards 4
    (or python -m repro.launch.serve --mode sketch ...)
@@ -18,6 +23,7 @@ import dataclasses
 import time
 from typing import Any, Dict, List
 
+import jax
 import numpy as np
 
 from repro import sketch as skt
@@ -41,18 +47,32 @@ class SketchServer:
     ``submit`` enqueues; ``flush`` answers every pending request with one
     batched dispatch per (kind, edge-label?, last?, direction?) group —
     the static axes of the underlying jitted queries.
+
+    Ingest rides a ``skt.AsyncIngestor`` (``pipeline=True``, the default):
+    the host hash-partition of each batch overlaps the previous batch's
+    device dispatch, and the query path flushes the pipeline before
+    answering — submitted batches are always visible to later queries.
     """
 
     def __init__(self, spec: "skt.SketchSpec", max_batch: int = 4096,
-                 state: "skt.ShardedState | None" = None):
+                 state: "skt.ShardedState | None" = None,
+                 pipeline: bool = True):
         self.spec = spec
-        self.state = state if state is not None else skt.create(spec)
+        self.pipeline = pipeline
+        self._ingestor = skt.AsyncIngestor(spec, state=state)
         self.max_batch = max_batch
         self.pending: List[QueryRequest] = []
 
+    @property
+    def state(self) -> "skt.ShardedState":
+        """The handle with every ingested batch applied (flushes)."""
+        return self._ingestor.state
+
     # ---- ingest ----
     def ingest(self, batch) -> None:
-        self.state = skt.ingest(self.spec, self.state, batch)
+        self._ingestor.submit(batch)
+        if not self.pipeline:
+            self._ingestor.flush()
 
     # ---- queries ----
     def submit(self, kind: str, **args) -> QueryRequest:
@@ -123,24 +143,30 @@ def main(argv=None):
     ap.add_argument("--edges", type=int, default=20000)
     ap.add_argument("--requests", type=int, default=4096)
     ap.add_argument("--ingest-batch", type=int, default=2048)
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="dispatch each batch eagerly instead of "
+                         "overlapping partition and device compute")
     args = ap.parse_args(argv)
 
     spec = dataclasses.replace(PHONE, n_edges=args.edges, n_vertices=1000)
     st = generate(spec, seed=0)
     server = SketchServer(build_spec(args.sketch, spec.window_size,
-                                     n_shards=args.shards))
+                                     n_shards=args.shards),
+                          pipeline=not args.no_pipeline)
 
     from repro.engine.insert import TRACE_COUNTS
-    traces_before = TRACE_COUNTS["fused"]
+    traces_before = TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]
     t0 = time.time()
     n_batches = 0
     for batch in edge_batches(st, args.ingest_batch):
         server.ingest(batch)
         n_batches += 1
+    jax.block_until_ready(jax.tree.leaves(server.state.shards))  # drain pipe
     dt_ing = time.time() - t0
-    traces = TRACE_COUNTS["fused"] - traces_before  # measured, not derived:
-    # subwindow boundaries inside batches must not add compiles (engine
-    # contract); expect <= #distinct bucketed batch shapes
+    traces = (TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]
+              - traces_before)  # measured, not derived: subwindow
+    # boundaries inside batches must not add compiles (engine contract);
+    # expect <= #distinct bucketed batch shapes
     print(f"ingested {len(st)} edges in {dt_ing:.2f}s "
           f"({len(st) / dt_ing:.0f} edges/s, {n_batches} batches, "
           f"{args.shards} shards, {traces} engine compiles)")

@@ -21,7 +21,7 @@ from __future__ import annotations
 from .spec import KINDS, SketchSpec, make_spec, shard_assignment
 from .state import (ShardedState, create, merge_all, named_shardings, place,
                     shards_compatible, stack_states, unstack_state)
-from .ingest import ingest, ingest_single
+from .ingest import AsyncIngestor, ingest, ingest_single
 from .query import QueryBatch, query
 from .checkpoint import restore, save, saved_spec
 
@@ -29,6 +29,6 @@ __all__ = [
     "KINDS", "SketchSpec", "make_spec", "shard_assignment",
     "ShardedState", "create", "merge_all", "named_shardings", "place",
     "shards_compatible", "stack_states", "unstack_state",
-    "ingest", "ingest_single", "QueryBatch", "query",
+    "AsyncIngestor", "ingest", "ingest_single", "QueryBatch", "query",
     "restore", "save", "saved_spec",
 ]

@@ -1,4 +1,4 @@
-"""Hash-partitioned sharded ingest (DESIGN.md §6).
+"""Hash-partitioned sharded ingest (DESIGN.md §6/§7).
 
 ``ingest(spec, state, batch)`` is the one write path of the handle layer:
 
@@ -10,17 +10,24 @@
      (replicate-last padding keeps ``time`` non-decreasing; a per-shard
      ``n_valid`` masks the padding completely, including ring bookkeeping,
      so even an empty shard is a strict no-op);
-  3. one jitted dispatch ``vmap``s the engine's fused insert
-     (``engine.insert.insert_batch_fused_impl``) over the stacked
-     ``[n_shards]`` axis — shard ingest is embarrassingly parallel, so
-     under a ``NamedSharding`` placement (``state.place``) GSPMD keeps each
-     shard's scan local to its device.
+  3. one jitted dispatch runs the engine's **stacked** fused insert
+     (``engine.insert.insert_stacked_fused_impl``) over the whole
+     ``[n_shards, ...]`` stack: on the Pallas path every single-subwindow
+     batch is one shard-axis kernel launch (grid ``(n_shards, n_blocks,
+     n_blocks)``); the vmapped ``lax.scan`` is the multi-subwindow/CPU
+     fallback inside the same dispatch. The insert path follows the
+     engine's selection rule (``engine.insert.resolve_path``): Pallas by
+     default on TPU, compiled scan elsewhere.
 
 ``ingest_single`` is the unstacked 1-shard path the object shims
 (``LSketch``/``LGS``/``GSS``) ride: no partition, no stacking copies, and
-for LSketch-layout sketches the full engine path choice (Pallas on TPU).
-The vmapped shard path always uses the fused scan — the Pallas binned
-kernel is a per-shard grid program and is not vmapped across shards.
+the full engine path choice on the plain state.
+
+``AsyncIngestor`` double-buffers the host half against the device half:
+the numpy hash-partition of batch N+1 runs while batch N's dispatch is in
+flight (JAX async dispatch returns control as soon as the work is
+enqueued). ``flush()`` is the synchronization point — after it, ``state``
+reflects every submitted batch, in submission order (DESIGN.md §7.3).
 """
 
 from __future__ import annotations
@@ -34,10 +41,10 @@ import numpy as np
 from repro.core.lgs import _lgs_insert_fused, lgs_insert_impl
 from repro.core.types import EdgeBatch
 from repro.engine import insert as eng_insert
-from repro.engine.window import bucket_size, pad_to_bucket
+from repro.engine.window import pad_to_bucket
 
 from .spec import SketchSpec, shard_assignment
-from .state import ShardedState
+from .state import ShardedState, create
 
 _FIELDS = ("src", "dst", "src_label", "dst_label", "edge_label", "weight",
            "time")
@@ -80,15 +87,30 @@ def ingest_single(spec: SketchSpec, state, batch: EdgeBatch,
 # sharded path
 # --------------------------------------------------------------------------
 
+def _shard_bucket(n: int, floor: int = 64) -> int:
+    """Per-shard row-length bucket: powers of two plus the 1.5x midpoints
+    (64, 96, 128, 192, 256, ...). The hash partition leaves every shard
+    just above/below n/n_shards, so pure doubling would pad rows by up to
+    2x — worst exactly in the common balanced case; the midpoints cap
+    padding at 33% for ~2x the (still O(log max_batch)) compile count."""
+    b = floor
+    while b < n:
+        if n <= b + b // 2:
+            return b + b // 2
+        b *= 2
+    return b
+
+
 def _partition_stack(spec: SketchSpec, batch: EdgeBatch):
     """Host-side stable hash partition -> (stacked EdgeBatch [n_shards, L],
-    n_valid int32 [n_shards])."""
+    n_valid int32 [n_shards]). Pure numpy — this is the half the
+    ``AsyncIngestor`` overlaps with the in-flight device dispatch."""
     fields = {f: np.asarray(getattr(batch, f)) for f in _FIELDS}
     sid = shard_assignment(spec, fields["src"], fields["src_label"])
     n_sh = spec.n_shards
     index = [np.flatnonzero(sid == s) for s in range(n_sh)]
     counts = np.array([len(ix) for ix in index], np.int32)
-    L = bucket_size(max(int(counts.max()), 1), floor=64)
+    L = _shard_bucket(max(int(counts.max()), 1), floor=64)
     out = {f: np.zeros((n_sh, L), np.int32) for f in _FIELDS}
     for s, ix in enumerate(index):
         m = len(ix)
@@ -102,12 +124,14 @@ def _partition_stack(spec: SketchSpec, batch: EdgeBatch):
     return stacked, jnp.asarray(counts)
 
 
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=1)
-def _ingest_stacked_lsketch(cfg, shards, batch: EdgeBatch, n_valid):
-    def one(st, b, nv):
-        return eng_insert.insert_batch_fused_impl(
-            cfg, st, b, nv, use_pallas=False, interpret=True)
-    return jax.vmap(one)(shards, batch, n_valid)
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("use_pallas", "interpret"),
+                   donate_argnums=1)
+def _ingest_stacked_lsketch(cfg, shards, batch: EdgeBatch, n_valid,
+                            use_pallas=False, interpret=False):
+    return eng_insert.insert_stacked_fused_impl(
+        cfg, shards, batch, n_valid, use_pallas=use_pallas,
+        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=1)
@@ -121,23 +145,111 @@ def _ingest_stacked_lgs(key, shards, batch: EdgeBatch, n_valid):
     return jax.vmap(one)(shards, batch, n_valid)
 
 
-def ingest(spec: SketchSpec, state: ShardedState, batch: EdgeBatch
-           ) -> ShardedState:
+def _dispatch_stacked(spec: SketchSpec, state: ShardedState, stacked,
+                      n_valid, path: str) -> ShardedState:
+    """One jitted dispatch for a pre-partitioned stack (shared by
+    ``ingest`` and ``AsyncIngestor``); donates the input handle."""
+    if spec.kind == "lgs":
+        shards = _ingest_stacked_lgs(spec.config.key(), state.shards,
+                                     stacked, n_valid)
+    else:
+        path = eng_insert.resolve_path(spec.config, path)
+        if path == "chunked":
+            raise ValueError("the stacked ingest has no chunked path")
+        # interpret only matters on the Pallas branch: interpret-mode off
+        # TPU so CPU CI exercises the kernel logic, compiled on TPU
+        shards = _ingest_stacked_lsketch(
+            spec.config, state.shards, stacked, n_valid,
+            use_pallas=path == "pallas",
+            interpret=jax.default_backend() != "tpu")
+    return ShardedState(shards=shards)
+
+
+def ingest(spec: SketchSpec, state: ShardedState, batch: EdgeBatch,
+           path: str = "auto") -> ShardedState:
     """Insert a time-ordered batch into a sharded handle; returns the new
     handle (the input's buffers are donated). Every shard count — including
-    1 — goes through the same stacked vmapped dispatch, so no eager
-    unstack/restack copies; object shims that need the engine's insert-path
-    choice use ``ingest_single`` on their plain state instead."""
+    1 — goes through the same stacked dispatch, so no eager unstack/restack
+    copies; ``path`` follows the engine's selection rule ("auto" = Pallas
+    kernel on TPU, fused scan elsewhere). Object shims that need the
+    engine's unstacked entry use ``ingest_single`` instead."""
     n = int(batch.src.shape[0])
     if n == 0:
         return state
     if spec.kind == "gss":
         batch = _degenerate_batch(batch)
     stacked, n_valid = _partition_stack(spec, batch)
-    if spec.kind == "lgs":
-        shards = _ingest_stacked_lgs(spec.config.key(), state.shards,
-                                     stacked, n_valid)
-    else:
-        shards = _ingest_stacked_lsketch(spec.config, state.shards,
-                                         stacked, n_valid)
-    return ShardedState(shards=shards)
+    return _dispatch_stacked(spec, state, stacked, n_valid, path)
+
+
+# --------------------------------------------------------------------------
+# pipelined ingest
+# --------------------------------------------------------------------------
+
+class AsyncIngestor:
+    """Double-buffered pipelined ingest over one sharded handle.
+
+    The sharded write path has a host half (the numpy hash partition) and
+    a device half (the stacked jitted insert). Called naively they
+    serialize: partition batch N, dispatch batch N, partition batch N+1,
+    ... This class staggers them by one batch:
+
+      * ``submit(batch)`` first issues the *previously staged* batch's
+        device dispatch (async — returns as soon as it is enqueued), then
+        hash-partitions this batch on the host while that dispatch runs;
+      * ``flush()`` dispatches whatever is staged and returns the handle —
+        the synchronization point. After ``flush()``, the state reflects
+        every submitted batch, in exact submission order (dispatches are
+        issued in order and each consumes the previous handle, so no
+        reordering is possible across subwindow boundaries).
+
+    ``state`` flushes implicitly — reading it always gives the synchronous
+    semantics; the pipeline only ever defers work, never reorders it.
+
+    Donation caveat: like ``ingest``, every dispatch donates the previous
+    handle's buffers — the handle ``flush()``/``state`` returns is the
+    *live* one and is consumed by the next dispatched batch. Query it
+    before the next ``submit``, or snapshot it first
+    (``jax.tree.map(jnp.copy, st.shards)``) if it must outlive the
+    pipeline.
+    """
+
+    def __init__(self, spec: SketchSpec, state: ShardedState | None = None,
+                 path: str = "auto"):
+        self.spec = spec
+        self.path = path
+        self._state = state if state is not None else create(spec)
+        self._staged = None  # (stacked EdgeBatch, n_valid) awaiting dispatch
+
+    def submit(self, batch: EdgeBatch) -> None:
+        """Enqueue a time-ordered batch (partition now, dispatch on the
+        next ``submit``/``flush``)."""
+        if int(batch.src.shape[0]) == 0:
+            return
+        if self.spec.kind == "gss":
+            batch = _degenerate_batch(batch)
+        self._dispatch_staged()  # async: device chews batch N ...
+        self._staged = _partition_stack(self.spec, batch)  # ... host N+1
+
+    def flush(self) -> ShardedState:
+        """Dispatch any staged batch; returns the fully-applied handle."""
+        self._dispatch_staged()
+        return self._state
+
+    @property
+    def state(self) -> ShardedState:
+        """The handle with every submitted batch applied (implicit flush)."""
+        return self.flush()
+
+    @property
+    def pending(self) -> int:
+        """Number of staged-but-not-dispatched batches (0 or 1)."""
+        return int(self._staged is not None)
+
+    def _dispatch_staged(self) -> None:
+        if self._staged is None:
+            return
+        stacked, n_valid = self._staged
+        self._staged = None
+        self._state = _dispatch_stacked(self.spec, self._state, stacked,
+                                        n_valid, self.path)

@@ -342,6 +342,261 @@ def test_query_pad_rows_use_empty_sentinel():
     assert bool(jnp.all(padded[5:] == EMPTY))  # not vertex id 0
 
 
+# --------------------------------------------------------------------------
+# shard-axis Pallas fast path: bit-identity with the vmapped scan
+# --------------------------------------------------------------------------
+
+OVERFLOW_CFG = LSketchConfig(d=8, n_blocks=2, F=256, r=2, s=2, c=4, k=4,
+                             window_size=400, pool_capacity=8, pool_probes=2)
+
+
+def _parity_case(cfg, arrays, n_shards):
+    """Ingest one stream through both stacked insert paths; assert the
+    final handles are bit-identical (state-for-state, incl. pool)."""
+    batch = _batch(arrays)
+    spec = skt.make_spec("lsketch", n_shards=n_shards, config=cfg)
+    scan = skt.ingest(spec, skt.create(spec), batch, path="scan")
+    pal = skt.ingest(spec, skt.create(spec), batch, path="pallas")
+    assert _states_equal(scan.shards, pal.shards)
+    return pal
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+@pytest.mark.parametrize("span", ["single", "multi"])
+def test_sharded_pallas_matches_scan(n_shards, span):
+    """The shard-axis kernel path (single-subwindow launch + in-dispatch
+    scan fallback) is bit-identical to the vmapped fused scan on the same
+    partition — incl. ring wraparound and pool machinery."""
+    rng = np.random.default_rng(20)
+    n = 400
+    src = rng.integers(0, 300, n).astype(np.int32)
+    dst = rng.integers(0, 300, n).astype(np.int32)
+    t = (np.full(n, 7, np.int32) if span == "single"
+         else np.sort(rng.integers(0, 2500, n)).astype(np.int32))
+    arrays = (src, dst, src % 3, dst % 3,
+              rng.integers(0, 5, n).astype(np.int32),
+              rng.integers(1, 4, n).astype(np.int32), t)
+    _parity_case(CFG, arrays, n_shards)
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_sharded_pallas_matches_scan_under_pool_overflow(n_shards):
+    rng = np.random.default_rng(21)
+    n = 500
+    src = rng.integers(0, 400, n).astype(np.int32)
+    dst = rng.integers(0, 400, n).astype(np.int32)
+    arrays = (src, dst, src % 3, dst % 3,
+              rng.integers(0, 4, n).astype(np.int32),
+              rng.integers(1, 4, n).astype(np.int32),
+              np.full(n, 3, np.int32))
+    pal = _parity_case(OVERFLOW_CFG, arrays, n_shards)
+    assert int(jnp.sum(pal.shards.pool_lost)) > 0, \
+        "stream must saturate the pool"
+
+
+def test_sharded_pallas_empty_shard_rows_are_noops():
+    """All edges share one source entity -> every other shard's row is
+    pure replicate-last padding with n_valid == 0; the kernel path must
+    treat those rows as strict no-ops (bit-identical to scan, and the
+    untouched shards stay exactly at their initial state)."""
+    n = 300
+    rng = np.random.default_rng(22)
+    arrays = (np.full(n, 5, np.int32), rng.integers(0, 300, n),
+              np.full(n, 2, np.int32), rng.integers(0, 3, n),
+              rng.integers(0, 5, n), rng.integers(1, 4, n),
+              np.full(n, 7, np.int32))
+    arrays = tuple(np.asarray(a, np.int32) for a in arrays)
+    pal = _parity_case(CFG, arrays, 4)
+    spec = skt.make_spec("lsketch", n_shards=4, config=CFG)
+    sid = int(skt.shard_assignment(spec, [5], [2])[0])
+    fresh = skt.create(spec)
+    for s in range(4):
+        if s == sid:
+            continue
+        assert _states_equal(skt.unstack_state(pal, s),
+                             skt.unstack_state(fresh, s))
+
+
+def test_sharded_pallas_scan_parity_property():
+    """Hypothesis sweep of the bit-identity: random streams (time-ordered,
+    arbitrary subwindow spans, repeated edges), random shard counts —
+    kernel path == scan path, always. Includes the replicate-last padding
+    and the n_valid=0 empty-shard row by construction (tiny vertex pools
+    leave shards empty under the endpoint hash)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 200),
+           n_vertices=st.sampled_from([2, 10, 200]),
+           tmax=st.sampled_from([1, 300, 3000]),
+           n_shards=st.sampled_from([1, 2, 4, 5]))
+    def check(seed, n, n_vertices, tmax, n_shards):
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, n_vertices, n).astype(np.int32)
+        dst = rng.integers(0, n_vertices, n).astype(np.int32)
+        arrays = (src, dst, src % 3, dst % 3,
+                  rng.integers(0, 5, n).astype(np.int32),
+                  rng.integers(1, 4, n).astype(np.int32),
+                  np.sort(rng.integers(0, tmax, n)).astype(np.int32))
+        _parity_case(CFG, arrays, n_shards)
+
+    check()
+
+
+def test_pallas_kernel_bit_identical_to_xla_twin():
+    """The Pallas grid kernel (interpret mode) and its pure-XLA model
+    (``sketch_insert_tiles_xla``) agree tensor-for-tensor on identical
+    binned inputs — the anchor that ties the TPU program to the compiled
+    path the CPU runs."""
+    from repro.core import hashing as hsh
+    from repro.core.lsketch import edge_probes, precompute
+    from repro.kernels.sketch_insert.kernel import (
+        sketch_insert_kernel_sharded, sketch_insert_tiles_xla)
+    from repro.kernels.sketch_insert.ops import _bin_batch
+
+    cfg = CFG
+    rng = np.random.default_rng(23)
+    S, B = 2, 128
+    src = jnp.asarray(rng.integers(0, 300, (S, B)), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, 300, (S, B)), jnp.int32)
+    le = jnp.asarray(rng.integers(0, 5, (S, B)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 3, (S, B)), jnp.int32)  # incl. zeros
+    probes = edge_probes(cfg, precompute(cfg, src, src % 3),
+                         precompute(cfg, dst, dst % 3))
+    lei = hsh.edge_label_bucket(le, cfg.c, cfg.seed)
+    bins, _, counts = jax.vmap(
+        lambda p, l, ww: _bin_batch(cfg, p, l, ww, B))(probes, lei, w)
+    key = jnp.full((S, 2, cfg.d, cfg.d), EMPTY, jnp.int32)
+    C = jnp.zeros((S, 2, cfg.d, cfg.d), jnp.int32)
+    P = jnp.zeros((S, 2, cfg.d, cfg.d, cfg.c), jnp.int32)
+    kw = dict(n_shards=S, n_blocks=cfg.n_blocks, b=cfg.b, s=cfg.s,
+              c=cfg.c, max_bin=B)
+    kernel_out = sketch_insert_kernel_sharded(*bins, key, C, P, **kw,
+                                              interpret=True)
+    twin_out = sketch_insert_tiles_xla(*bins, key, C, P,
+                                       jnp.max(counts), **kw)
+    for a, b in zip(kernel_out, twin_out):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_small_max_bin_drops_overflow_to_pool_on_both_lowerings():
+    """``max_bin`` is a tuning knob: a bin's overflow edges are marked
+    not-inserted and fall to the additional pool. The CPU stream-walk
+    lowering must reproduce the kernel's truncated-bin semantics —
+    regression for an interpret-path divergence where the walk ignored
+    ``max_bin`` and inserted overflow into the matrix instead. Both sides
+    run the *production* ``matrix_insert_binned_sharded`` branches (the
+    kernel branch via its interpret-mode test hook)."""
+    import functools
+    from repro.core import hashing as hsh
+    from repro.core.lsketch import edge_probes, precompute
+    from repro.kernels.sketch_insert.ops import matrix_insert_binned_sharded
+
+    cfg = CFG
+    rng = np.random.default_rng(24)
+    S, B, MB = 2, 96, 4  # MB far below the per-bin fill
+    src = jnp.asarray(rng.integers(0, 50, (S, B)), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, 50, (S, B)), jnp.int32)
+    le = jnp.asarray(rng.integers(0, 5, (S, B)), jnp.int32)
+    w = jnp.asarray(rng.integers(1, 3, (S, B)), jnp.int32)
+    probes = edge_probes(cfg, precompute(cfg, src, src % 3),
+                         precompute(cfg, dst, dst % 3))
+    lei = hsh.edge_label_bucket(le, cfg.c, cfg.seed)
+    base = jax.tree.map(lambda x: jnp.stack([x] * S), init_state(cfg))
+    slot = jnp.zeros((S,), jnp.int32)
+
+    run = functools.partial(matrix_insert_binned_sharded, cfg)
+    got = jax.jit(lambda st: run(st, probes, lei, w, slot, max_bin=MB,
+                                 interpret=True))(base)
+    ref = jax.jit(lambda st: run(st, probes, lei, w, slot, max_bin=MB,
+                                 interpret=False, _kernel_interpret=True)
+                  )(base)
+    assert _states_equal(got, ref)
+    # the cap must actually bite: some edges landed in the pool
+    assert int(jnp.sum(ref.pool_key[..., 0] != EMPTY)) > 0
+
+
+# --------------------------------------------------------------------------
+# AsyncIngestor: pipelined == synchronous, flush contract
+# --------------------------------------------------------------------------
+
+def test_async_ingestor_matches_sync_with_interleaved_queries():
+    """Double-buffered pipelined ingest of a chunked stream — with queries
+    interleaved between submissions — ends bit-identical to eager
+    synchronous ingest of the same chunks (flush semantics: every query
+    sees every batch submitted before it; no reordering across subwindow
+    boundaries)."""
+    arrays = _overflow_stream(CFG, seed=30, n_hot=300, n_cold=900)
+    batch = _batch(arrays)
+    spec = skt.make_spec("lsketch", n_shards=4, config=CFG)
+    ing = skt.AsyncIngestor(spec)
+    sync = skt.create(spec)
+    n = len(arrays[0])
+    q = skt.QueryBatch.edges(arrays[0][:16], arrays[2][:16],
+                             arrays[1][:16], arrays[3][:16])
+    for i, a in enumerate(range(0, n, 256)):
+        chunk = jax.tree.map(lambda x: x[a:a + 256], batch)
+        ing.submit(chunk)
+        sync = skt.ingest(spec, sync, chunk)
+        if i % 2 == 1:  # interleaved query: must flush, must agree
+            assert np.array_equal(skt.query(spec, ing.state, q),
+                                  skt.query(spec, sync, q))
+            assert ing.pending == 0  # reading .state flushed the pipe
+    assert _states_equal(ing.flush().shards, sync.shards)
+
+
+def test_async_ingestor_flush_contract():
+    spec = skt.make_spec("lsketch", n_shards=2, config=CFG)
+    ing = skt.AsyncIngestor(spec)
+    st0 = ing.flush()
+    assert ing.flush() is st0  # idempotent, no staged work
+    ing.submit(jax.tree.map(lambda x: x[:0], _batch(
+        _overflow_stream(CFG, seed=31))))  # empty batch: no-op
+    assert ing.pending == 0 and ing.flush() is st0
+    arrays = tuple(x[:64] for x in _overflow_stream(CFG, seed=31))
+    ing.submit(_batch(arrays))
+    assert ing.pending == 1  # staged, not yet dispatched
+    st1 = ing.flush()
+    assert ing.pending == 0 and st1 is not st0
+    assert ing.flush() is st1
+    # pipelined AsyncIngestor == one-shot ingest of the same batch
+    ref = skt.ingest(spec, skt.create(spec), _batch(arrays))
+    assert _states_equal(st1.shards, ref.shards)
+
+
+# --------------------------------------------------------------------------
+# stacked-ingest jit: compiled (non-interpreted) scan + compile count
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", ["scan", "pallas"])
+def test_stacked_ingest_single_trace_across_batches(path):
+    """Compile-count regression for the stacked ingest jit: one trace per
+    (spec, bucketed shape, path), zero further traces however many
+    subwindow boundaries (or empty shards) later batches contain."""
+    spec = skt.make_spec("lsketch", n_shards=4,
+                         config=CFG.replace(seed=4242))  # fresh jit keys
+    rng = np.random.default_rng(33)
+
+    def some_batch(tmax):
+        n = 160  # per-shard counts stay inside one 64-bucket
+        src = rng.integers(0, 300, n).astype(np.int32)
+        dst = rng.integers(0, 300, n).astype(np.int32)
+        return _batch((src, dst, src % 3, dst % 3,
+                       rng.integers(0, 5, n).astype(np.int32),
+                       np.ones(n, np.int32),
+                       np.sort(rng.integers(0, tmax, n)).astype(np.int32)))
+
+    state = skt.create(spec)
+    before = eng_insert.TRACE_COUNTS["stacked"]
+    state = skt.ingest(spec, state, some_batch(50), path=path)
+    assert eng_insert.TRACE_COUNTS["stacked"] - before == 1
+    state = skt.ingest(spec, state, some_batch(200), path=path)
+    state = skt.ingest(spec, state, some_batch(3000), path=path)
+    assert eng_insert.TRACE_COUNTS["stacked"] - before == 1, \
+        "extra subwindows must not add traces or dispatches"
+
+
 def test_query_padding_does_not_change_answers():
     """Answers at every batch size (hence padding amount) match the scalar
     path — pad rows can't alias real probes whatever fills them."""
