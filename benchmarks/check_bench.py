@@ -1,0 +1,68 @@
+"""In-run A/B gate over ``BENCH_engine.json`` (CI step).
+
+The box CI runs on is noisy enough that cross-run absolute thresholds are
+meaningless; every comparison here is **within one bench run** whose
+variants alternated inside each timing iteration (``_timed_medians`` in
+``kernel_bench.py``), which is the only regression signal that survives
+the noise. Checks:
+
+  * the pallas query path (plane-cached — the steady serving state) beats
+    the dense vmapped scan reference at 4 shards;
+  * the plane-cached row beats the cold row at 4 shards (the cache must
+    actually pay for itself).
+
+``python -m benchmarks.check_bench [path-to-json]`` — exits nonzero with
+a diagnostic when a gate fails or the rows are missing.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+GATES = [
+    # (faster_row, slower_row) — faster must strictly beat slower
+    ("query_pallas_cached_x4", "query_scan_x4"),
+    ("query_pallas_cached_x4", "query_pallas_cold_x4"),
+]
+
+METRIC = "total_s"
+
+
+def check(bench: dict) -> list[str]:
+    failures = []
+    for fast, slow in GATES:
+        if fast not in bench or slow not in bench:
+            failures.append(f"missing bench rows for gate {fast} < {slow} "
+                            f"(have: {sorted(bench)})")
+            continue
+        tf, ts = bench[fast][METRIC], bench[slow][METRIC]
+        if not tf < ts:
+            failures.append(
+                f"{fast} ({tf * 1e3:.2f} ms) did not beat "
+                f"{slow} ({ts * 1e3:.2f} ms) in the same-run A/B")
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = Path(argv[0]) if argv else \
+        Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+    if not path.exists():
+        print(f"check_bench: {path} not found (run "
+              f"`python -m benchmarks.kernel_bench --quick` first)")
+        return 1
+    bench = json.loads(path.read_text())
+    failures = check(bench)
+    for f in failures:
+        print(f"check_bench: FAIL: {f}")
+    if not failures:
+        for fast, slow in GATES:
+            print(f"check_bench: OK: {fast} ({bench[fast][METRIC] * 1e3:.2f} "
+                  f"ms) < {slow} ({bench[slow][METRIC] * 1e3:.2f} ms)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

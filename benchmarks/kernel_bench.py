@@ -259,6 +259,78 @@ def pipelined_ingest_throughput(n=16384, n_batches=8, n_shards=4):
     return rows
 
 
+def query_path_throughput(n=16384, q=2048, shard_counts=(1, 4)):
+    """Query-path comparison through the ``repro.sketch`` handle layer
+    (DESIGN.md §8): the same label-restricted vertex-aggregate batch (the
+    telemetry ``load_vector`` shape, the serving-hot read) answered by
+
+      * ``query_scan_x{N}``          — dense vmapped reference (re-reduces
+                                       the [d,d,2,k,c] planes per call);
+      * ``query_pallas_cold_x{N}``   — kernel path, window-plane cache
+                                       cleared before every call (pays the
+                                       reduction once per call);
+      * ``query_pallas_cached_x{N}`` — kernel path, planes cached (the
+                                       steady serving state between ingest
+                                       flushes).
+
+    Timed with ``_timed_medians`` (variants alternate within each
+    iteration — the only honest comparison on this box); rows merge into
+    ``BENCH_engine.json`` and ``benchmarks/check_bench.py`` gates the
+    same-run A/B in CI.
+    """
+    from repro import sketch as skt
+    from repro.sketch.query import clear_plane_cache
+
+    # smaller pool than the ingest rows: the [B, Q] pool scan is identical
+    # work on every path and would only dilute the path comparison
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=1024)
+    rng = np.random.default_rng(0)
+    batch = _batch(rng, n, n_vlabels=32)
+    t = np.full(n, 3, np.int32)
+    batch = EdgeBatch(batch.src, batch.dst, batch.src_label, batch.dst_label,
+                      batch.edge_label, batch.weight, jnp.asarray(t))
+    vs = jnp.asarray(rng.integers(0, 500, q), jnp.int32)
+    lvs = (vs % 32).astype(jnp.int32)
+    les = jnp.asarray(rng.integers(0, 6, q), jnp.int32)
+    qb = skt.QueryBatch.vertices(vs, lvs, edge_label=les, direction="out")
+
+    rows, result = [], {}
+    for ns in shard_counts:
+        spec = skt.make_spec("lsketch", n_shards=ns, config=cfg)
+        state = skt.ingest(spec, skt.create(spec), batch, path="scan")
+        jax.block_until_ready(state.shards.C)
+
+        def run(path, cold):
+            if cold:
+                clear_plane_cache(state)
+            out = skt.query(spec, state, qb, path=path)
+            jax.block_until_ready(out)
+            return out
+
+        variants = [
+            ("query_scan", lambda: run("scan", False)),
+            ("query_pallas_cold", lambda: run("pallas", True)),
+            # cached must run right after cold within each iteration: the
+            # cold call rebuilds (and leaves) the plane cache, so this row
+            # always times a warm cache regardless of list edits elsewhere
+            ("query_pallas_cached", lambda: run("pallas", False)),
+        ]
+        run("pallas", False)  # explicit pre-warm (compile + planes)
+        medians = _timed_medians(variants, warmup=1, iters=7)
+        for tag, _ in variants:
+            dt = medians[tag]
+            rows.append([f"{tag}_x{ns}", q, ns,
+                         f"{dt / q * 1e6:.3f}", f"{dt:.4f}"])
+            result[f"{tag}_x{ns}"] = {
+                "queries": q, "shards": ns, "ingested_edges": n,
+                "us_per_query": dt / q * 1e6, "total_s": dt}
+    write_csv("query_path_throughput",
+              ["impl", "queries", "shards", "us_per_query", "total_s"], rows)
+    _merge_bench(result)
+    return rows
+
+
 def query_throughput(n=20000, q=4096):
     cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
                         window_size=100, pool_capacity=8192)
@@ -287,10 +359,20 @@ def main(argv=None):
                     help="CI smoke sizes (seconds, not minutes)")
     ap.add_argument("--no-pallas", action="store_true",
                     help="skip the interpret-mode Pallas comparison")
+    ap.add_argument("--only-query", action="store_true",
+                    help="run only the query-path rows (the conformance "
+                         "job's bench: feeds check_bench + the artifact "
+                         "without re-paying the ingest benches)")
     args = ap.parse_args(argv)
     # power-of-two sizes: the fused path buckets batch shapes, so an
     # aligned n measures the paths on identical item counts
     n = 2048 if args.quick else 16384
+    if args.only_query:
+        qrows = query_path_throughput(n=n, q=1024 if args.quick else 2048)
+        print("impl,queries,shards,us_per_query,total_s")
+        for r in qrows:
+            print(",".join(str(x) for x in r))
+        return
     rows = engine_insert_throughput(n=n, subwindows_spanned=4,
                                     include_pallas=not args.no_pallas)
     print("impl,edges,subwindows,us_per_edge,total_s")
@@ -304,6 +386,10 @@ def main(argv=None):
     prows = pipelined_ingest_throughput(n=n)
     print("impl,edges,batches,shards,us_per_edge,total_s")
     for r in prows:
+        print(",".join(str(x) for x in r))
+    qrows = query_path_throughput(n=n, q=1024 if args.quick else 2048)
+    print("impl,queries,shards,us_per_query,total_s")
+    for r in qrows:
         print(",".join(str(x) for x in r))
     if not args.quick:
         insert_throughput(n=n)

@@ -226,10 +226,11 @@ class LSketch:
     """
 
     def __init__(self, cfg: LSketchConfig, state: LSketchState | None = None,
-                 insert_path: str = "auto"):
+                 insert_path: str = "auto", query_path: str = "auto"):
         self.cfg = cfg
         self.state = state if state is not None else init_state(cfg)
         self.insert_path = insert_path
+        self.query_path = query_path
 
     @property
     def spec(self):

@@ -30,7 +30,57 @@ import numpy as np
 from . import hashing as hsh
 from .lsketch import (LSketch, VertexAddressing, edge_probes, precompute,
                       valid_slot_mask)
-from .types import EMPTY, LSketchConfig, LSketchState
+from .types import EMPTY, LSketchConfig, LSketchState, pytree_dataclass
+
+
+# --------------------------------------------------------------------------
+# window-reduced query planes (DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+@pytree_dataclass
+class QueryPlanes:
+    """Window-reduced planes of a (stacked) LSketch state — everything a
+    plane-based query needs, with the subwindow axis already reduced under
+    one validity mask. A pure function of ``(state, last)``: the kernel
+    query path computes these once per state (the ``repro.sketch`` layer
+    caches them between ingest flushes) instead of re-reducing the
+    ``[d, d, 2, k(, c)]`` counter planes on every dispatch.
+
+    key     : [S, 2, d, d]     packed keys, twin-leading (kernel layout)
+    cw      : [S, 2, d, d]     sum of C over in-window ring slots
+    pw      : [S, 2, d, d, c]  sum of P over in-window ring slots
+    pool_key: [S, Q, 2]        overflow-table keys (pass-through)
+    pool_cw : [S, Q]           window-reduced pool totals
+    pool_pw : [S, Q, c]
+    """
+
+    key: jax.Array
+    cw: jax.Array
+    pw: jax.Array
+    pool_key: jax.Array
+    pool_cw: jax.Array
+    pool_pw: jax.Array
+
+
+def build_query_planes(cfg: LSketchConfig, state: LSketchState,
+                       last: int | None = None) -> QueryPlanes:
+    """Reduce a shard-stacked state (leading ``[S]`` on every leaf) to its
+    window-reduced query planes. ``cur_widx`` must already carry the
+    fleet-global window (the caller's reconciliation); ``last`` is the
+    static time restriction, exactly as in every query entry point.
+    Traced (not jitted) — compose inside a jitted caller."""
+    mask = jax.vmap(lambda st: valid_slot_mask(cfg, st, last))(state)  # [S, k]
+    mC = mask.astype(state.C.dtype)
+    return QueryPlanes(
+        key=jnp.moveaxis(state.key, 3, 1),
+        cw=jnp.moveaxis(jnp.sum(state.C * mC[:, None, None, None, :], -1),
+                        3, 1),
+        pw=jnp.moveaxis(jnp.sum(state.P * mC[:, None, None, None, :, None],
+                                -2), 3, 1),
+        pool_key=state.pool_key,
+        pool_cw=jnp.sum(state.pool_C * mC[:, None, :], -1),
+        pool_pw=jnp.sum(state.pool_P * mC[:, None, :, None], -2),
+    )
 
 
 def _win_weights(cfg: LSketchConfig, state: LSketchState, C_slots, P_slots,
@@ -411,21 +461,24 @@ def subgraph_query(cfg: LSketchConfig, state: LSketchState, edges,
 
 def _edge_weight(self: LSketch, a, la, b, lb, le=None, last=None):
     from repro.engine import query_batch as qb
-    out = qb.edge_weight_batch(self, a, la, b, lb, edge_label=le, last=last)
+    out = qb.edge_weight_batch(self, a, la, b, lb, edge_label=le, last=last,
+                               path=getattr(self, "query_path", "auto"))
     return qb.scalarize(out, np.ndim(a) == 0)
 
 
 def _vertex_weight(self: LSketch, v, lv, le=None, direction="out", last=None):
     from repro.engine import query_batch as qb
     out = qb.vertex_weight_batch(self, v, lv, edge_label=le,
-                                 direction=direction, last=last)
+                                 direction=direction, last=last,
+                                 path=getattr(self, "query_path", "auto"))
     return qb.scalarize(out, np.ndim(v) == 0)
 
 
 def _label_aggregate(self: LSketch, lv, le=None, direction="out", last=None):
     from repro.engine import query_batch as qb
     out = qb.label_aggregate_batch(self, lv, edge_label=le,
-                                   direction=direction, last=last)
+                                   direction=direction, last=last,
+                                   path=getattr(self, "query_path", "auto"))
     return qb.scalarize(out, np.ndim(lv) == 0)
 
 

@@ -5,7 +5,8 @@ compatibility adapter: it takes the legacy *object* wrappers
 (``LSketch`` / ``LGS`` / ``GSS``), lifts their plain state into a 1-shard
 ``ShardedState`` handle, and routes through ``repro.sketch.query`` — one
 implementation of normalization, EMPTY-sentinel bucket padding, per-kind
-jitted dispatch, and the GSS degeneracy rules. The scalar methods attached
+jitted dispatch, path selection (``path="scan"|"pallas"|"auto"``, see
+DESIGN.md §8) and the GSS degeneracy rules. The scalar methods attached
 in ``core/queries.py`` sit on top (scalars are length-1 batches);
 ``launch/serve_sketch.py`` serves request traffic through the handle layer
 directly.
@@ -17,26 +18,30 @@ import numpy as np
 
 
 def edge_weight_batch(sketch, src, src_label, dst, dst_label,
-                      edge_label=None, last: int | None = None):
+                      edge_label=None, last: int | None = None,
+                      path: str = "auto"):
     """Estimated weight of every (src[i], dst[i]) edge. int32 [B] -> [B]."""
     from repro.sketch import QueryBatch, query
     # the plain object state is lifted to a 1-shard stack inside the jitted
     # dispatch — no eager whole-state copy per query
     return query(sketch.spec, sketch.state, QueryBatch.edges(
-        src, src_label, dst, dst_label, edge_label=edge_label, last=last))
+        src, src_label, dst, dst_label, edge_label=edge_label, last=last),
+        path=path)
 
 
 def vertex_weight_batch(sketch, vertex, vertex_label, edge_label=None,
-                        direction: str = "out", last: int | None = None):
+                        direction: str = "out", last: int | None = None,
+                        path: str = "auto"):
     """Aggregated out/in edge-weight of every vertex[i]. int32 [B] -> [B]."""
     from repro.sketch import QueryBatch, query
     return query(sketch.spec, sketch.state, QueryBatch.vertices(
         vertex, vertex_label, edge_label=edge_label, direction=direction,
-        last=last))
+        last=last), path=path)
 
 
 def label_aggregate_batch(sketch, vertex_label, edge_label=None,
-                          direction: str = "out", last: int | None = None):
+                          direction: str = "out", last: int | None = None,
+                          path: str = "auto"):
     """Aggregate weight of all vertices with label lv[i]. int32 [B] -> [B].
 
     LSketch-only: label blocks are the feature LGS lacks (its cells mix all
@@ -44,7 +49,8 @@ def label_aggregate_batch(sketch, vertex_label, edge_label=None,
     """
     from repro.sketch import QueryBatch, query
     return query(sketch.spec, sketch.state, QueryBatch.labels(
-        vertex_label, edge_label=edge_label, direction=direction, last=last))
+        vertex_label, edge_label=edge_label, direction=direction, last=last),
+        path=path)
 
 
 def scalarize(x, scalar_input: bool):

@@ -11,11 +11,16 @@ Kernels:
                     cell (mA, mB) owns the (b, b) tile of the storage matrix,
                     streams its bin of edges through VMEM, first-fit probes
                     twin cells exactly like the sequential algorithm.
-  sketch_query    — batched edge-weight queries on window-reduced planes.
-  vertex_scan     — batched vertex aggregate queries (r-row masked reduction).
+  sketch_query    — batched edge-weight queries on window-reduced planes
+                    (shard-axis grid (n_shards, query_chunks) + compiled
+                    XLA lowering; DESIGN.md §8).
+  vertex_scan     — batched vertex/label aggregate queries (r-row masked
+                    reduction; same shard-axis grid + XLA lowering).
   flash_attention — blockwise-softmax causal attention for the LM substrate.
 
 This container is CPU-only: kernels are *validated* with interpret=True
 (Python execution of the kernel body) against ref.py across shape/dtype
-sweeps; TPU is the compile target.
+sweeps and against their compiled XLA lowerings (the production CPU
+routes — the insert/query "pallas" paths never interpret in production);
+TPU is the compile target.
 """

@@ -9,6 +9,20 @@ Per query the kernel replays the insertion walk: s probe cells x 2 twins in
 order, stopping at the first key match (weight found) or first empty slot
 (edge provably absent from the matrix). The all-occupied-mismatch case sets
 ``go_pool`` and is resolved by the wrapper with a vectorized pool lookup.
+
+``sketch_query_kernel_sharded`` extends the same body with a leading
+**shard** grid dimension — grid ``(n_shards, query_chunks)`` over
+``[n_shards, ...]``-stacked planes: every query is answered against every
+shard's planes (query blocks are broadcast along the shard axis; the
+per-shard partials are summed by the wrapper — the handle layer's exact
+combinator). The one body serves both layouts by collapsing whatever
+leading singleton block dims its refs carry, exactly like
+``sketch_insert``.
+
+``sketch_query_xla`` is the compiled pure-XLA lowering of the same walk
+(``pallas_call`` on CPU only interprets): the stop-at-first-(match|empty)
+walk is a static ``s*2`` argmax, vectorized over shards x queries — the
+production CPU route of the "pallas" query path.
 """
 
 from __future__ import annotations
@@ -25,28 +39,39 @@ EMPTY = -1
 def _query_body(rows_ref, cols_ref, keys_ref, le_ref,
                 key_ref, cw_ref, pw_ref,
                 w_ref, wl_ref, pool_ref, *, s: int, chunk: int):
+    """One query chunk against one shard's planes.
+
+    Works for both grid layouts: the query/output blocks and the plane
+    tiles may carry extra leading singleton block dims (the shard grid
+    axis); they are collapsed by the index prefixes below.
+    """
+    q3 = (0,) * (rows_ref.ndim - 2)  # query blocks trailing (chunk, s)
+    q1 = (0,) * (le_ref.ndim - 1)  # per-query in blocks trailing (chunk,)
+    o1 = (0,) * (w_ref.ndim - 1)  # out blocks trailing (chunk,)
+    tl = (0,) * (key_ref.ndim - 3)  # plane tiles trailing (2, d, d)[, c]
+
     def one(q, _):
         # ordered probe walk, stop at first (match | empty)
         done = jnp.bool_(False)
         hit = jnp.bool_(False)
         w = jnp.int32(0)
         wl = jnp.int32(0)
-        le = le_ref[0, q]
+        le = le_ref[(*q1, q)]
         for pi in range(s):
-            r = rows_ref[0, q, pi]
-            c = cols_ref[0, q, pi]
-            kw = keys_ref[0, q, pi]
+            r = rows_ref[(*q3, q, pi)]
+            c = cols_ref[(*q3, q, pi)]
+            kw = keys_ref[(*q3, q, pi)]
             for tz in range(2):
-                cur = key_ref[tz, r, c]
+                cur = key_ref[(*tl, tz, r, c)]
                 is_m = (cur == kw) & ~done
                 is_e = (cur == EMPTY) & ~done
-                w = jnp.where(is_m, cw_ref[tz, r, c], w)
-                wl = jnp.where(is_m, pw_ref[tz, r, c, le], wl)
+                w = jnp.where(is_m, cw_ref[(*tl, tz, r, c)], w)
+                wl = jnp.where(is_m, pw_ref[(*tl, tz, r, c, le)], wl)
                 hit = hit | is_m
                 done = done | is_m | is_e
-        w_ref[0, q] = w
-        wl_ref[0, q] = wl
-        pool_ref[0, q] = ~done  # every slot occupied-mismatch -> ask the pool
+        w_ref[(*o1, q)] = w
+        wl_ref[(*o1, q)] = wl
+        pool_ref[(*o1, q)] = ~done  # every slot occupied-mismatch -> pool
         return _
 
     jax.lax.fori_loop(0, chunk, one, 0)
@@ -81,3 +106,87 @@ def sketch_query_kernel(rows, cols, keys, le, key_plane, cw, pw,
       keys.reshape(nq // chunk, chunk, s), le.reshape(nq // chunk, chunk),
       key_plane, cw, pw)
     return w.reshape(nq), wl.reshape(nq), go_pool.reshape(nq)
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "d", "s", "c",
+                                             "chunk", "interpret"))
+def sketch_query_kernel_sharded(rows, cols, keys, le, key_plane, cw, pw,
+                                *, n_shards: int, d: int, s: int, c: int,
+                                chunk: int = 128, interpret: bool = True):
+    """Shard-axis variant: every query against every shard's planes.
+
+    rows/cols/keys: [nq, s]; le: [nq] (shared across shards — the handle
+    layer fans one query batch through all shards);
+    key_plane/cw: [n_shards, 2, d, d]; pw: [n_shards, 2, d, d, c].
+    Returns (w, w_label, go_pool), each [n_shards, nq].
+
+    Grid ``(n_shards, nq // chunk)`` — shard axis outermost, so each
+    shard's planes stay VMEM-resident while its query chunks stream
+    through, exactly like n_shards back-to-back launches of
+    ``sketch_query_kernel`` with one dispatch and one pipeline.
+    """
+    nq = rows.shape[0]
+    assert nq % chunk == 0, "pad queries to a chunk multiple"
+    nch = nq // chunk
+    grid = (n_shards, nch)
+    qs3 = pl.BlockSpec((1, chunk, s), lambda h, i: (i, 0, 0))
+    qs2 = pl.BlockSpec((1, chunk), lambda h, i: (i, 0))
+    out2 = pl.BlockSpec((1, 1, chunk), lambda h, i: (h, i, 0))
+    plane3 = pl.BlockSpec((1,) + key_plane.shape[1:], lambda h, i: (h, 0, 0, 0))
+    plane4 = pl.BlockSpec((1,) + pw.shape[1:], lambda h, i: (h, 0, 0, 0, 0))
+    w, wl, go_pool = pl.pallas_call(
+        functools.partial(_query_body, s=s, chunk=chunk),
+        grid=grid,
+        in_specs=[qs3, qs3, qs3, qs2, plane3, plane3, plane4],
+        out_specs=[out2, out2, out2],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_shards, nch, chunk), cw.dtype),
+            jax.ShapeDtypeStruct((n_shards, nch, chunk), pw.dtype),
+            jax.ShapeDtypeStruct((n_shards, nch, chunk), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(rows.reshape(nch, chunk, s), cols.reshape(nch, chunk, s),
+      keys.reshape(nch, chunk, s), le.reshape(nch, chunk),
+      key_plane, cw, pw)
+    return (w.reshape(n_shards, nq), wl.reshape(n_shards, nq),
+            go_pool.reshape(n_shards, nq))
+
+
+def sketch_query_xla(rows, cols, keys, le_idx, key_plane, cw, pw):
+    """Compiled pure-XLA twin of ``sketch_query_kernel_sharded`` — same
+    I/O contract, bit-identical results (integer adds/selects only).
+
+    rows/cols/keys: [nq, s]; le_idx: [nq] or None (skip the label plane);
+    key_plane/cw: [S, 2, d, d]; pw: [S, 2, d, d, c].
+    Returns (w [S, nq], w_label [S, nq], go_pool [S, nq]).
+
+    The walk needs no loop at all: per query the s*2 candidates are
+    gathered in paper order (probe-major, twin-minor) and the first
+    (match | empty) is a static argmax — the same formulation as the
+    dense reference, but on window-reduced planes (no ``k`` axis rides
+    the gathers). Traced (not jitted) — compose inside a jitted caller.
+    """
+    S = key_plane.shape[0]
+    nq, s = rows.shape
+    # [S, nq, s, 2] candidates in paper order
+    cur = key_plane[:, :, rows, cols]  # [S, 2, nq, s]
+    cur = jnp.moveaxis(cur, 1, -1)  # [S, nq, s, 2]
+    is_m = (cur == keys[None, :, :, None]).reshape(S, nq, s * 2)
+    is_e = (cur == EMPTY).reshape(S, nq, s * 2)
+    stop = is_m | is_e
+    any_stop = stop.any(-1)
+    first = jnp.argmax(stop, -1)  # [S, nq]
+    hit = jnp.take_along_axis(is_m, first[..., None], -1)[..., 0] & any_stop
+    pi, tz = first // 2, first % 2
+    rr = jnp.take_along_axis(jnp.broadcast_to(rows, (S, nq, s)),
+                             pi[..., None], -1)[..., 0]
+    cc = jnp.take_along_axis(jnp.broadcast_to(cols, (S, nq, s)),
+                             pi[..., None], -1)[..., 0]
+    s_idx = jnp.arange(S, dtype=jnp.int32)[:, None]
+    w = jnp.where(hit, cw[s_idx, tz, rr, cc], 0)
+    if le_idx is None:
+        wl = jnp.zeros_like(w)
+    else:
+        wl = jnp.where(hit, pw[s_idx, tz, rr, cc,
+                               le_idx[None, :].astype(jnp.int32)], 0)
+    return w, wl, ~any_stop

@@ -1,4 +1,14 @@
-"""Wrapper for the batched edge-query kernel: window reduction, pool path."""
+"""Wrappers for the batched edge-query kernel: planes walk + pool path.
+
+``edge_query_planes`` is the composable middle of the "pallas" query path
+(DESIGN.md §8): it takes pre-reduced ``QueryPlanes`` (shard-stacked) plus
+a query batch and answers every query against every shard — the matrix
+probe walk on the kernel (TPU) or its compiled XLA lowering (everywhere
+else; the pallas path never interprets), plus the vectorized pool lookup
+for all-occupied-mismatch queries. ``repro.sketch.query`` routes through
+it; ``edge_query_pallas`` is the standalone single-sketch drop-in kept
+for tests and direct use.
+"""
 
 from __future__ import annotations
 
@@ -8,10 +18,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hashing as hsh
-from repro.core.lsketch import edge_probes, precompute, valid_slot_mask
+from repro.core.lsketch import edge_probes, precompute
+from repro.core.queries import QueryPlanes, build_query_planes
 from repro.core.types import LSketchConfig, LSketchState
 
-from .kernel import sketch_query_kernel
+from .kernel import (sketch_query_kernel, sketch_query_kernel_sharded,
+                     sketch_query_xla)
+
+__all__ = ["edge_query_planes", "edge_query_pallas", "sketch_query_kernel"]
 
 
 def _pad_to(x, mult, fill=0):
@@ -23,42 +37,88 @@ def _pad_to(x, mult, fill=0):
     return jnp.pad(x, padding, constant_values=fill), n
 
 
-@functools.partial(jax.jit, static_argnums=(0, 5), static_argnames=("interpret",))
-def edge_query_pallas(cfg: LSketchConfig, state: LSketchState, src, dst,
-                      labels, last: int | None = None, interpret: bool = True):
-    """Kernel-backed equivalent of ``repro.core.edge_query`` (both outputs)."""
+def edge_query_planes(cfg: LSketchConfig, planes: QueryPlanes, src, dst,
+                      labels, with_le: bool = True, interpret: bool = True,
+                      _kernel_interpret: bool = False):
+    """Batched edge queries on window-reduced planes, all shards at once.
+
+    src/dst: int32 [B]; labels: (lA, lB, le) int32 [B] each (``le`` is
+    ignored when ``with_le`` is False). Returns (w, w_label), each
+    [S, B] — per-shard partials; the caller sums over the shard axis
+    (hash partitioning makes shard estimates disjoint).
+
+    ``interpret=True`` (the non-TPU setting) routes the matrix walk to
+    the compiled XLA lowering — bit-identical, never interpreted.
+    ``_kernel_interpret`` (tests only): run the hardware-kernel branch in
+    Pallas interpret mode — the only way to exercise it on CPU.
+    Traced (not jitted) — compose inside a jitted caller.
+    """
     la, lb, le = labels
     pa = precompute(cfg, src, la)
     pb = precompute(cfg, dst, lb)
     pr = edge_probes(cfg, pa, pb)
-    le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed)
-    mask = valid_slot_mask(cfg, state, last).astype(state.C.dtype)
+    le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed) if with_le else None
+    S = planes.cw.shape[0]
 
-    key_plane = jnp.moveaxis(state.key, 2, 0)
-    cw = jnp.moveaxis(jnp.sum(state.C * mask, -1), 2, 0)
-    pw = jnp.moveaxis(jnp.sum(state.P * mask[:, None], -2), 2, 0)
+    if interpret and not _kernel_interpret:
+        w, wl, go_pool = sketch_query_xla(pr.rows, pr.cols, pr.keys, le_idx,
+                                          planes.key, planes.cw, planes.pw)
+    else:
+        rows, n = _pad_to(pr.rows, 128)
+        cols, _ = _pad_to(pr.cols, 128)
+        keys, _ = _pad_to(pr.keys, 128, fill=-2)  # never matches, never EMPTY
+        lei, _ = _pad_to(le_idx if le_idx is not None
+                         else jnp.zeros_like(pr.rows[:, 0]), 128)
+        w, wl, go_pool = sketch_query_kernel_sharded(
+            rows, cols, keys, lei, planes.key, planes.cw, planes.pw,
+            n_shards=S, d=cfg.d, s=cfg.s, c=cfg.c,
+            interpret=_kernel_interpret)
+        w, wl, go_pool = w[:, :n], wl[:, :n], go_pool[:, :n]
+        if le_idx is None:
+            wl = jnp.zeros_like(w)
 
-    rows, n = _pad_to(pr.rows, 128)
-    cols, _ = _pad_to(pr.cols, 128)
-    keys, _ = _pad_to(pr.keys, 128, fill=-2)  # -2 never matches, never EMPTY
-    lei, _ = _pad_to(le_idx, 128)
-    w, wl, go_pool = sketch_query_kernel(
-        rows, cols, keys, lei, key_plane, cw, pw,
-        d=cfg.d, s=cfg.s, c=cfg.c, interpret=interpret)
-    w, wl, go_pool = w[:n], wl[:n], go_pool[:n]
-
-    # pool lookup for all-occupied-mismatch queries (vectorized)
+    # pool lookup for all-occupied-mismatch queries (vectorized, per shard)
     ps = hsh.pool_slot_seq(pr.pid_src, pr.pid_dst, cfg.pool_capacity,
-                           cfg.pool_probes, cfg.seed)
-    pk = state.pool_key[ps]
-    pmatch = (pk[..., 0] == pr.pid_src[:, None]) & (pk[..., 1] == pr.pid_dst[:, None])
-    pany = pmatch.any(-1)
+                           cfg.pool_probes, cfg.seed)  # [B, probes]
+    pk = planes.pool_key[:, ps]  # [S, B, probes, 2]
+    pmatch = (pk[..., 0] == pr.pid_src[None, :, None]) & \
+        (pk[..., 1] == pr.pid_dst[None, :, None])
+    pany = pmatch.any(-1)  # [S, B]
     pfirst = jnp.argmax(pmatch, -1)
-    pslot = jnp.take_along_axis(ps, pfirst[:, None], -1)[:, 0]
-    maskk = valid_slot_mask(cfg, state, last).astype(state.pool_C.dtype)
-    w_p = jnp.sum(state.pool_C[pslot] * maskk, -1)
-    wl_p = jnp.take_along_axis(
-        jnp.sum(state.pool_P[pslot] * maskk[:, None], -2),
-        le_idx[:, None].astype(jnp.int32), -1)[:, 0]
+    pslot = jnp.take_along_axis(jnp.broadcast_to(ps, (S,) + ps.shape),
+                                pfirst[..., None], -1)[..., 0]  # [S, B]
+    s_idx = jnp.arange(S, dtype=jnp.int32)[:, None]
     sel = go_pool & pany
-    return w + jnp.where(sel, w_p, 0), wl + jnp.where(sel, wl_p, 0)
+    w = w + jnp.where(sel, planes.pool_cw[s_idx, pslot], 0)
+    if le_idx is not None:
+        wl_p = planes.pool_pw[s_idx, pslot, le_idx[None, :].astype(jnp.int32)]
+        wl = wl + jnp.where(sel, wl_p, 0)
+    return w, wl
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5),
+                   static_argnames=("interpret",))
+def _edge_query_pallas(cfg: LSketchConfig, state: LSketchState, src, dst,
+                       labels, last: int | None = None, *,
+                       interpret: bool = True):
+    lifted = jax.tree.map(lambda x: x[None], state)
+    planes = build_query_planes(cfg, lifted, last)
+    w, wl = edge_query_planes(cfg, planes, src, dst, labels, with_le=True,
+                              interpret=interpret)
+    return w[0], wl[0]
+
+
+def edge_query_pallas(cfg: LSketchConfig, state: LSketchState, src, dst,
+                      labels, last: int | None = None,
+                      interpret: bool | None = None):
+    """Kernel-backed equivalent of ``repro.core.edge_query`` (both outputs).
+
+    ``interpret`` is backend-derived by default (True off TPU, same rule
+    as the insert kernels) and only meaningful on the real Pallas branch:
+    with ``interpret=True`` the walk runs as the compiled XLA lowering —
+    the pallas query path never interprets.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _edge_query_pallas(cfg, state, src, dst, labels, last,
+                              interpret=interpret)

@@ -6,6 +6,18 @@ straight onto the VPU (row loads are contiguous lane vectors; the key-field
 decode is integer element-wise math; the label select is a one-hot dot).
 
 Grid = query chunks; state planes VMEM-resident as in sketch_query.
+``vertex_scan_kernel_sharded`` adds the leading shard grid dimension
+(grid ``(n_shards, query_chunks)``, query blocks broadcast along the
+shard axis) with the same body — leading singleton block dims are
+collapsed, exactly like ``sketch_insert``/``sketch_query``.
+
+``vertex_scan_xla`` is the compiled pure-XLA lowering of the same scan
+(the production CPU route of the "pallas" query path): one static unroll
+over the r candidate rows, each iteration gathering one row (or column —
+``direction="in"`` decodes the destination key fields instead of
+transposing planes) of the window-reduced planes for all shards x
+queries. Peak intermediate is [S, 2, B, d(, c)] — the label axis never
+multiplies the r axis.
 """
 
 from __future__ import annotations
@@ -22,24 +34,32 @@ IDX_RADIX = 16
 
 def _scan_body(lines_ref, f_ref, le_ref, key_ref, cw_ref, pw_ref,
                w_ref, wl_ref, *, r: int, F: int, c: int, chunk: int):
+    q2 = (0,) * (lines_ref.ndim - 2)  # query blocks trailing (chunk, r)
+    q1 = (0,) * (f_ref.ndim - 1)  # per-query in blocks trailing (chunk,)
+    o1 = (0,) * (w_ref.ndim - 1)  # out blocks trailing (chunk,)
+    tl = (0,) * (key_ref.ndim - 3)  # plane tiles trailing (2, d, d)[, c]
+
     def one(q, _):
-        f = f_ref[0, q]
-        le = le_ref[0, q]
+        f = f_ref[(*q1, q)]
+        le = le_ref[(*q1, q)]
         w = jnp.int32(0)
         wl = jnp.int32(0)
         for i in range(r):  # static unroll over candidate rows
-            row = lines_ref[0, q, i]
-            krow = key_ref[:, row, :]  # [2, d] contiguous lane vector
+            row = lines_ref[(*q2, q, i)]
+            krow = key_ref[(*tl, slice(None), row, slice(None))]  # [2, d]
             rest = krow // jnp.int32(F)
             fa = rest % jnp.int32(F)
             ia = (rest // jnp.int32(F)) // jnp.int32(IDX_RADIX)
             match = (krow != EMPTY) & (ia == i) & (fa == f)
-            w = w + jnp.sum(jnp.where(match, cw_ref[:, row, :], 0))
+            w = w + jnp.sum(jnp.where(
+                match, cw_ref[(*tl, slice(None), row, slice(None))], 0))
             onehot = (jnp.arange(c, dtype=jnp.int32) == le).astype(jnp.int32)
-            prow = jnp.sum(pw_ref[:, row, :, :] * onehot, axis=-1)  # [2, d]
+            prow = jnp.sum(
+                pw_ref[(*tl, slice(None), row, slice(None), slice(None))]
+                * onehot, axis=-1)  # [2, d]
             wl = wl + jnp.sum(jnp.where(match, prow, 0))
-        w_ref[0, q] = w
-        wl_ref[0, q] = wl
+        w_ref[(*o1, q)] = w
+        wl_ref[(*o1, q)] = wl
         return _
 
     jax.lax.fori_loop(0, chunk, one, 0)
@@ -72,3 +92,83 @@ def vertex_scan_kernel(lines, f, le, key_plane, cw, pw,
     )(lines.reshape(nq // chunk, chunk, r), f.reshape(nq // chunk, chunk),
       le.reshape(nq // chunk, chunk), key_plane, cw, pw)
     return w.reshape(nq), wl.reshape(nq)
+
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "r", "F", "c",
+                                             "chunk", "interpret"))
+def vertex_scan_kernel_sharded(lines, f, le, key_plane, cw, pw,
+                               *, n_shards: int, r: int, F: int, c: int,
+                               chunk: int = 128, interpret: bool = True):
+    """Shard-axis variant: every query scanned on every shard's planes.
+
+    lines: [nq, r]; f/le: [nq] (shared across shards);
+    key_plane/cw: [n_shards, 2, d, d]; pw: [n_shards, 2, d, d, c].
+    Returns (w, w_label), each [n_shards, nq]. Grid
+    ``(n_shards, nq // chunk)`` — shard planes VMEM-resident while their
+    query chunks stream through.
+    """
+    nq = lines.shape[0]
+    assert nq % chunk == 0
+    nch = nq // chunk
+    grid = (n_shards, nch)
+    qs2 = pl.BlockSpec((1, chunk, r), lambda h, i: (i, 0, 0))
+    qs1 = pl.BlockSpec((1, chunk), lambda h, i: (i, 0))
+    out2 = pl.BlockSpec((1, 1, chunk), lambda h, i: (h, i, 0))
+    plane3 = pl.BlockSpec((1,) + key_plane.shape[1:], lambda h, i: (h, 0, 0, 0))
+    plane4 = pl.BlockSpec((1,) + pw.shape[1:], lambda h, i: (h, 0, 0, 0, 0))
+    w, wl = pl.pallas_call(
+        functools.partial(_scan_body, r=r, F=F, c=c, chunk=chunk),
+        grid=grid,
+        in_specs=[qs2, qs1, qs1, plane3, plane3, plane4],
+        out_specs=[out2, out2],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_shards, nch, chunk), cw.dtype),
+            jax.ShapeDtypeStruct((n_shards, nch, chunk), pw.dtype),
+        ],
+        interpret=interpret,
+    )(lines.reshape(nch, chunk, r), f.reshape(nch, chunk),
+      le.reshape(nch, chunk), key_plane, cw, pw)
+    return w.reshape(n_shards, nq), wl.reshape(n_shards, nq)
+
+
+def vertex_scan_xla(lines, f, le_idx, key_plane, cw, pw, *, r: int, F: int,
+                    direction: str = "out"):
+    """Compiled pure-XLA twin of ``vertex_scan_kernel_sharded`` — same
+    results bit-identically (integer adds only), plus the "in" direction
+    natively: instead of transposing the planes and swapping packed key
+    fields, it gathers candidate *columns* and decodes the destination
+    fields (i_B, f_B) directly.
+
+    lines: [nq, r] absolute candidate rows (out) / cols (in); f/le_idx:
+    [nq] (le_idx None skips the label plane); key_plane/cw: [S, 2, d, d];
+    pw: [S, 2, d, d, c]. Returns (w [S, nq], w_label [S, nq]).
+    Traced (not jitted) — compose inside a jitted caller.
+    """
+    from repro.core import hashing as hsh
+
+    S = key_plane.shape[0]
+    nq = lines.shape[0]
+    w = jnp.zeros((S, nq), cw.dtype)
+    wl = jnp.zeros((S, nq), pw.dtype)
+    for i in range(r):  # static unroll: peak transient [S, 2, nq, d(, c)]
+        li = lines[:, i]  # [nq]
+        if direction == "out":
+            kg = key_plane[:, :, li]  # [S, 2, nq, d]
+            cg = cw[:, :, li]
+        else:
+            kg = jnp.moveaxis(key_plane[:, :, :, li], 3, 2)  # -> [S, 2, nq, d]
+            cg = jnp.moveaxis(cw[:, :, :, li], 3, 2)
+        ia, ib, fa, fb = hsh.unpack_key(kg, F)
+        idx, fp = (ia, fa) if direction == "out" else (ib, fb)
+        match = (kg != EMPTY) & (idx == i) & (fp == f[None, :, None])
+        w = w + jnp.sum(jnp.where(match, cg, 0), axis=(1, 3))
+        if le_idx is not None:
+            if direction == "out":
+                pg = pw[:, :, li]  # [S, 2, nq, d, c]
+            else:
+                pg = jnp.moveaxis(pw[:, :, :, li], 3, 2)
+            pl_sel = jnp.take_along_axis(
+                pg, le_idx[None, None, :, None, None].astype(jnp.int32),
+                -1)[..., 0]  # [S, 2, nq, d]
+            wl = wl + jnp.sum(jnp.where(match, pl_sel, 0), axis=(1, 3))
+    return w, wl

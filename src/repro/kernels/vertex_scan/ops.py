@@ -1,4 +1,18 @@
-"""Wrapper for the vertex aggregate query kernel (out/in, pool included)."""
+"""Wrappers for the vertex/label aggregate query kernels (out/in, pool).
+
+``vertex_query_planes`` and ``label_aggregate_planes`` are the vertex-side
+middles of the "pallas" query path (DESIGN.md §8), operating on pre-reduced
+shard-stacked ``QueryPlanes``:
+
+  * vertex aggregates run the r-row masked scan — the shard-axis Pallas
+    kernel on TPU, its compiled XLA lowering elsewhere (never interpreted);
+  * label aggregates are a dense masked reduction over the planes (matmul-
+    shaped already — there is no per-query walk to kernelize, so both
+    backends share the one XLA formulation; the plane cache is the win).
+
+``vertex_query_pallas`` is the standalone single-sketch drop-in kept for
+tests and direct use.
+"""
 
 from __future__ import annotations
 
@@ -8,69 +22,150 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hashing as hsh
-from repro.core.lsketch import precompute, valid_slot_mask
-from repro.core.types import LSketchConfig, LSketchState
+from repro.core.lsketch import precompute
+from repro.core.queries import QueryPlanes, build_query_planes
+from repro.core.types import EMPTY, LSketchConfig, LSketchState
 
-from .kernel import vertex_scan_kernel
+from repro.kernels.sketch_query.ops import _pad_to
+
+from .kernel import (vertex_scan_kernel, vertex_scan_kernel_sharded,
+                     vertex_scan_xla)
+
+__all__ = ["vertex_query_planes", "label_aggregate_planes",
+           "vertex_query_pallas", "vertex_scan_kernel"]
+
+
+def vertex_query_planes(cfg: LSketchConfig, planes: QueryPlanes, vertex,
+                        labels, direction: str = "out", with_le: bool = True,
+                        interpret: bool = True,
+                        _kernel_interpret: bool = False):
+    """Batched vertex aggregate queries on window-reduced planes.
+
+    vertex: int32 [B]; labels: (lv, le) int32 [B] each (``le`` ignored when
+    ``with_le`` is False). Returns (w, w_label), each [S, B] per-shard
+    partials. ``interpret``/``_kernel_interpret`` as in
+    ``edge_query_planes``. Traced — compose inside a jitted caller.
+    """
+    lv, le = labels
+    pre = precompute(cfg, vertex, lv)
+    le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed) if with_le else None
+    pos = (pre.s[:, None] + pre.offs) % pre.width[:, None]
+    lines = pre.start[:, None] + pos  # [B, r] absolute row (or col) index
+    S = planes.cw.shape[0]
+
+    if interpret and not _kernel_interpret:
+        w, wl = vertex_scan_xla(lines, pre.f, le_idx, planes.key, planes.cw,
+                                planes.pw, r=cfg.r, F=cfg.F,
+                                direction=direction)
+    else:
+        key_plane, cw, pw = planes.key, planes.cw, planes.pw
+        if direction == "in":  # scan columns: transpose planes and swap the
+            # (ia, fa) <-> (ib, fb) packed-key fields so the kernel's
+            # "row-owner" decode reads the destination fields
+            key_plane = jnp.swapaxes(key_plane, 2, 3)
+            cw = jnp.swapaxes(cw, 2, 3)
+            pw = jnp.swapaxes(pw, 2, 3)
+            occupied = key_plane != EMPTY
+            ia, ib, fa, fb = hsh.unpack_key(key_plane, cfg.F)
+            key_plane = jnp.where(occupied,
+                                  hsh.pack_key(ib, ia, fb, fa, cfg.F),
+                                  key_plane)
+        linesP, n = _pad_to(lines, 128)
+        fP, _ = _pad_to(pre.f, 128, fill=-3)  # never matches a fingerprint
+        leP, _ = _pad_to(le_idx if le_idx is not None
+                         else jnp.zeros_like(pre.f), 128)
+        w, wl = vertex_scan_kernel_sharded(
+            linesP, fP, leP, key_plane, cw, pw, n_shards=S, r=cfg.r,
+            F=cfg.F, c=cfg.c, interpret=_kernel_interpret)
+        w, wl = w[:, :n], wl[:, :n]
+        if le_idx is None:
+            wl = jnp.zeros_like(w)
+
+    # pool contribution: match the stored endpoint id, per shard
+    col = 0 if direction == "out" else 1
+    pm = planes.pool_key[:, :, col][:, None, :] == pre.vid[None, :, None]
+    w = w + jnp.sum(jnp.where(pm, planes.pool_cw[:, None, :], 0), -1)
+    if le_idx is not None:
+        B = pre.vid.shape[0]
+        lw = jnp.take_along_axis(
+            jnp.broadcast_to(planes.pool_pw[:, None],
+                             (S, B) + planes.pool_pw.shape[1:]),
+            le_idx[None, :, None, None].astype(jnp.int32), -1)[..., 0]
+        wl = wl + jnp.sum(jnp.where(pm, lw, 0), -1)
+    return w, wl
+
+
+def label_aggregate_planes(cfg: LSketchConfig, planes: QueryPlanes, vlabel,
+                           edge_label=None, direction: str = "out",
+                           with_le: bool = False):
+    """Vertex-label aggregates on window-reduced planes (Alg. 4 lines
+    10-14): sum every occupied cell in the label's block rows (out) /
+    columns (in) plus matching pool entries. Returns (w, w_label) [S, B].
+    """
+    vlabel = jnp.asarray(vlabel, jnp.int32)
+    B = vlabel.shape[0]
+    S = planes.cw.shape[0]
+    le_idx = hsh.edge_label_bucket(edge_label, cfg.c, cfg.seed) \
+        if with_le else None
+    starts, widths = cfg.block_start_width()
+    m = hsh.vertex_label_block(vlabel, cfg.n_blocks, cfg.seed)
+    rows = jnp.arange(cfg.d, dtype=jnp.int32)
+    in_block = (rows[None, :] >= starts[m][:, None]) & (
+        rows[None, :] < (starts[m] + widths[m])[:, None])  # [B, d]
+    occ = planes.key != EMPTY  # [S, 2, d, d]
+    cell_tot = planes.cw * occ
+    axis_tot = cell_tot.sum(axis=(1, 3)) if direction == "out" \
+        else cell_tot.sum(axis=(1, 2))  # [S, d]
+    w = jnp.sum(in_block[None] * axis_tot[:, None, :], -1)  # [S, B]
+    wl = jnp.zeros_like(w)
+    if with_le:
+        Pc = planes.pw * occ[..., None]
+        per_lbl = Pc.sum(axis=(1, 3)) if direction == "out" \
+            else Pc.sum(axis=(1, 2))  # [S, d, c]
+        lw = jnp.take_along_axis(
+            jnp.broadcast_to(per_lbl[:, None], (S, B) + per_lbl.shape[1:]),
+            le_idx[None, :, None, None].astype(jnp.int32), -1)[..., 0]
+        wl = jnp.sum(in_block[None] * lw, -1)
+    # pool: endpoint block id stored inside the packed vid
+    col = 0 if direction == "out" else 1
+    pcol = planes.pool_key[:, :, col]  # [S, Q]
+    pm_blocks, _, _ = hsh.unpack_vertex_id(pcol, cfg.F)
+    pmatch = (pcol != EMPTY)[:, None, :] & \
+        (pm_blocks[:, None, :] == m[None, :, None])  # [S, B, Q]
+    w = w + jnp.sum(jnp.where(pmatch, planes.pool_cw[:, None, :], 0), -1)
+    if with_le:
+        plw = jnp.take_along_axis(
+            jnp.broadcast_to(planes.pool_pw[:, None],
+                             (S, B) + planes.pool_pw.shape[1:]),
+            le_idx[None, :, None, None].astype(jnp.int32), -1)[..., 0]
+        wl = wl + jnp.sum(jnp.where(pmatch, plw, 0), -1)
+    return w, wl
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4, 5),
                    static_argnames=("interpret",))
+def _vertex_query_pallas(cfg: LSketchConfig, state: LSketchState, vertex,
+                         labels, direction: str = "out",
+                         last: int | None = None, *, interpret: bool = True):
+    lifted = jax.tree.map(lambda x: x[None], state)
+    planes = build_query_planes(cfg, lifted, last)
+    w, wl = vertex_query_planes(cfg, planes, vertex, labels,
+                                direction=direction, with_le=True,
+                                interpret=interpret)
+    return w[0], wl[0]
+
+
 def vertex_query_pallas(cfg: LSketchConfig, state: LSketchState, vertex,
                         labels, direction: str = "out",
-                        last: int | None = None, interpret: bool = True):
-    """Kernel-backed equivalent of ``repro.core.vertex_query``."""
-    lv, le = labels
-    pre = precompute(cfg, vertex, lv)
-    le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed)
-    mask = valid_slot_mask(cfg, state, last).astype(state.C.dtype)
+                        last: int | None = None,
+                        interpret: bool | None = None):
+    """Kernel-backed equivalent of ``repro.core.vertex_query``.
 
-    key_plane = jnp.moveaxis(state.key, 2, 0)
-    cw = jnp.moveaxis(jnp.sum(state.C * mask, -1), 2, 0)
-    pw = jnp.moveaxis(jnp.sum(state.P * mask[:, None], -2), 2, 0)
-    if direction == "in":  # scan columns: transpose planes, swap key fields
-        key_plane = jnp.swapaxes(key_plane, 1, 2)
-        cw = jnp.swapaxes(cw, 1, 2)
-        pw = jnp.swapaxes(pw, 1, 2)
-        # swap (ia, fa) <-> (ib, fb) inside packed keys so the kernel's
-        # "row-owner" decode reads the destination fields
-        occupied = key_plane != -1
-        F = jnp.int32(cfg.F)
-        fb = key_plane % F
-        rest = key_plane // F
-        fa = rest % F
-        idx = rest // F
-        ia, ib = idx // 16, idx % 16
-        swapped = ((ib * 16 + ia) * F + fb) * F + fa
-        key_plane = jnp.where(occupied, swapped, key_plane)
-
-    pos = (pre.s[:, None] + pre.offs) % pre.width[:, None]
-    lines = pre.start[:, None] + pos  # [B, r]
-
-    def pad(x, fill=0):
-        n = x.shape[0]
-        p = (-n) % 128
-        if p == 0:
-            return x, n
-        return jnp.pad(x, [(0, p)] + [(0, 0)] * (x.ndim - 1),
-                       constant_values=fill), n
-
-    linesP, n = pad(lines)
-    fP, _ = pad(pre.f, fill=-3)  # never matches a real fingerprint
-    leP, _ = pad(le_idx)
-    w, wl = vertex_scan_kernel(linesP, fP, leP, key_plane, cw, pw,
-                               r=cfg.r, F=cfg.F, c=cfg.c, interpret=interpret)
-    w, wl = w[:n], wl[:n]
-
-    # pool contribution
-    col = 0 if direction == "out" else 1
-    pm = state.pool_key[:, col][None, :] == pre.vid[:, None]
-    maskk = valid_slot_mask(cfg, state, last).astype(state.pool_C.dtype)
-    ptot = jnp.sum(state.pool_C * maskk, -1)
-    w = w + jnp.sum(jnp.where(pm, ptot[None, :], 0), -1)
-    plw = jnp.sum(state.pool_P * maskk[None, :, None], axis=1)  # [Q, c]
-    lw = jnp.take_along_axis(
-        jnp.broadcast_to(plw[None], (pre.vid.shape[0],) + plw.shape),
-        le_idx[:, None, None].astype(jnp.int32), -1)[..., 0]
-    wl = wl + jnp.sum(jnp.where(pm, lw, 0), -1)
-    return w, wl
+    ``interpret`` is backend-derived by default (True off TPU, same rule
+    as the insert kernels): the compiled XLA lowering runs everywhere the
+    real Pallas kernel can't — the pallas query path never interprets.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _vertex_query_pallas(cfg, state, vertex, labels, direction, last,
+                                interpret=interpret)

@@ -8,9 +8,13 @@ Pallas kernel on TPU, fused scan elsewhere) and is **pipelined** — the
 host partition of batch N+1 overlaps batch N's in-flight dispatch
 (``--no-pipeline`` dispatches eagerly instead). Queries fan through every
 shard and sum contributions; the query path flushes the ingest pipeline
-first, so answers always reflect every batch submitted before them. The
-same server fronts LSketch, LGS, or GSS because the handle layer
-dispatches on ``spec.kind``.
+first, so answers always reflect every batch submitted before them.
+``--query-path`` picks the read path (DESIGN.md §8): the dense vmapped
+scan reference or the shard-axis kernel path over cached window-reduced
+planes — the plane cache is built on the first query after a flush and
+reused for every request group until the next ingest. The same server
+fronts LSketch, LGS, or GSS because the handle layer dispatches on
+``spec.kind``.
 
 Usage: python -m repro.launch.serve_sketch --sketch lsketch --shards 4
    (or python -m repro.launch.serve --mode sketch ...)
@@ -56,9 +60,10 @@ class SketchServer:
 
     def __init__(self, spec: "skt.SketchSpec", max_batch: int = 4096,
                  state: "skt.ShardedState | None" = None,
-                 pipeline: bool = True):
+                 pipeline: bool = True, query_path: str = "auto"):
         self.spec = spec
         self.pipeline = pipeline
+        self.query_path = query_path
         self._ingestor = skt.AsyncIngestor(spec, state=state)
         self.max_batch = max_batch
         self.pending: List[QueryRequest] = []
@@ -108,7 +113,8 @@ class SketchServer:
                                           direction=direction, last=last)
             else:
                 raise ValueError(f"unknown query kind {kind!r}")
-            out = np.asarray(skt.query(self.spec, self.state, q))
+            out = np.asarray(skt.query(self.spec, self.state, q,
+                                       path=self.query_path))
             for r, v in zip(reqs, out):
                 r.answer = int(v)
             done += len(reqs)
@@ -146,13 +152,18 @@ def main(argv=None):
     ap.add_argument("--no-pipeline", action="store_true",
                     help="dispatch each batch eagerly instead of "
                          "overlapping partition and device compute")
+    ap.add_argument("--query-path", default="auto",
+                    choices=["auto", "scan", "pallas"],
+                    help="read path: dense vmapped scan vs shard-axis "
+                         "kernels over cached window-reduced planes")
     args = ap.parse_args(argv)
 
     spec = dataclasses.replace(PHONE, n_edges=args.edges, n_vertices=1000)
     st = generate(spec, seed=0)
     server = SketchServer(build_spec(args.sketch, spec.window_size,
                                      n_shards=args.shards),
-                          pipeline=not args.no_pipeline)
+                          pipeline=not args.no_pipeline,
+                          query_path=args.query_path)
 
     from repro.engine.insert import TRACE_COUNTS
     traces_before = TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]

@@ -22,7 +22,8 @@ from .spec import KINDS, SketchSpec, make_spec, shard_assignment
 from .state import (ShardedState, create, merge_all, named_shardings, place,
                     shards_compatible, stack_states, unstack_state)
 from .ingest import AsyncIngestor, ingest, ingest_single
-from .query import QueryBatch, query
+from .query import (QueryBatch, clear_plane_cache, default_query_path, query,
+                    query_planes, resolve_query_path)
 from .checkpoint import restore, save, saved_spec
 
 __all__ = [
@@ -30,5 +31,6 @@ __all__ = [
     "ShardedState", "create", "merge_all", "named_shardings", "place",
     "shards_compatible", "stack_states", "unstack_state",
     "AsyncIngestor", "ingest", "ingest_single", "QueryBatch", "query",
-    "restore", "save", "saved_spec",
+    "query_planes", "clear_plane_cache", "resolve_query_path",
+    "default_query_path", "restore", "save", "saved_spec",
 ]

@@ -28,6 +28,11 @@ the numpy hash-partition of batch N+1 runs while batch N's dispatch is in
 flight (JAX async dispatch returns control as soon as the work is
 enqueued). ``flush()`` is the synchronization point — after it, ``state``
 reflects every submitted batch, in submission order (DESIGN.md §7.3).
+
+Every write path here returns a **new** handle object; the kernel query
+path's window-plane cache (DESIGN.md §8) memoizes on handle identity, so
+any ingest — including the pipelined dispatches — invalidates it by
+construction: a query after an ingest can never observe stale planes.
 """
 
 from __future__ import annotations

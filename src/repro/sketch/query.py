@@ -1,15 +1,39 @@
-"""Batched queries over a sharded handle (DESIGN.md §6).
+"""Batched queries over a sharded handle (DESIGN.md §6/§8).
 
-``query(spec, state, QueryBatch)`` fans one array-shaped query batch
-through every shard and sums the shard contributions in a single jitted
-dispatch: hash partitioning makes shard estimates disjoint (each logical
-edge lives on exactly one shard), so addition is the exact combinator for
-every query kind — edge weights, vertex aggregates, and label aggregates.
+``query(spec, state, QueryBatch, path=...)`` fans one array-shaped query
+batch through every shard and sums the shard contributions in a single
+jitted dispatch: hash partitioning makes shard estimates disjoint (each
+logical edge lives on exactly one shard), so addition is the exact
+combinator for every query kind — edge weights, vertex aggregates, and
+label aggregates.
+
+Two read paths answer the same queries bit-identically (DESIGN.md §8):
+
+  * ``path="scan"`` — the dense reference: ``core/queries.py`` vmapped
+    over shards, re-reducing the ``[d, d, 2, k(, c)]`` counter planes
+    under the window mask on every dispatch. The conformance baseline.
+  * ``path="pallas"`` — the kernel path: queries run against cached
+    **window-reduced planes** (``core.queries.QueryPlanes``) via the
+    shard-axis ``sketch_query``/``vertex_scan`` kernels on TPU, or their
+    compiled XLA lowerings elsewhere (the pallas path never interprets).
+    The planes are a pure function of ``(state, last)``: they are built
+    lazily on the first kernel-path query of a handle and memoized on the
+    handle object itself, so a serving loop answering many queries
+    between ingest flushes pays the dense reduction once, not per call.
+    Every state-producing operation (``ingest``, ``restore``,
+    ``merge_all``, the AsyncIngestor's dispatches) returns a *new*
+    immutable handle, which is exactly the cache invalidation: stale
+    planes cannot be served because the old handle is never queried
+    again (regression-tested in tests/test_query_path.py).
+
+``path="auto"`` mirrors the ingest rule: pallas on TPU, scan elsewhere.
+LGS always takes scan (count-min cells — no keyed walk, no planes).
 
 Window reconciliation: a shard that saw no recent items still carries the
 ring bookkeeping of the last item it *did* see, so each shard's
 ``cur_widx`` is first replaced by the global (max) one — otherwise a
 lagging shard would count ring slots the combined stream already expired.
+The plane builder applies the same reconciliation before reducing.
 
 Padding: query batches are padded to power-of-two buckets so a serving
 loop compiles O(log max_batch) shapes. Pad rows are filled with the
@@ -35,6 +59,20 @@ from repro.engine.window import bucket_size
 
 from .spec import SketchSpec
 from .state import ShardedState
+
+# trace-time counters keyed by (kind, path) — tests assert one jitted
+# program per (kind, bucket, path) by reading these before/after a
+# workload; ("planes", "build") counts plane-builder traces and
+# PLANES_BUILD_COUNTS["build"] counts host-side cache misses (builds).
+QUERY_TRACE_COUNTS: dict = {}
+PLANES_BUILD_COUNTS = {"build": 0}
+
+_PLANES_ATTR = "_query_planes_cache"
+
+
+def _count(kind: str, path: str) -> None:
+    QUERY_TRACE_COUNTS[(kind, path)] = QUERY_TRACE_COUNTS.get(
+        (kind, path), 0) + 1
 
 
 @dataclass(frozen=True)
@@ -70,6 +108,33 @@ class QueryBatch:
                last=None) -> "QueryBatch":
         return cls(kind="label", vertex_label=vertex_label,
                    edge_label=edge_label, direction=direction, last=last)
+
+
+# --------------------------------------------------------------------------
+# path selection (mirrors engine.insert.resolve_path)
+# --------------------------------------------------------------------------
+
+def default_query_path() -> str:
+    """Kernel planes path is the default on TPU; the dense vmapped scan is
+    the reference/CPU default (same rule as ingest)."""
+    return "pallas" if jax.default_backend() == "tpu" else "scan"
+
+
+def resolve_query_path(spec: SketchSpec, path: str = "auto") -> str:
+    """Normalize a user-facing query path name to "scan" | "pallas".
+
+    "auto" is the backend default; LGS silently takes "scan" (count-min
+    cells store no keys — there is no probe walk or plane reduction to
+    kernelize). Unlike ingest, skewed blocking needs no fallback: the
+    query kernels address absolute rows/cols, not uniform tiles.
+    """
+    if path == "auto":
+        path = default_query_path()
+    if path == "pallas" and spec.kind == "lgs":
+        path = "scan"
+    if path not in ("scan", "pallas"):
+        raise ValueError(f"unknown query path {path!r}")
+    return path
 
 
 # --------------------------------------------------------------------------
@@ -114,13 +179,57 @@ def _lift(shards, stacked: bool):
 
 
 # --------------------------------------------------------------------------
-# jitted sharded dispatches (one per kind)
+# window-plane cache (the "pallas" path's reduction memo)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("horizon", "stacked"))
+def _build_planes(spec, shards, *, horizon, stacked=True):
+    _count("planes", "build")
+    shards = _with_global_window(_lift(shards, stacked))
+    return _q.build_query_planes(spec.config, shards, horizon)
+
+
+def query_planes(spec: SketchSpec, state, last=None):
+    """The window-reduced ``QueryPlanes`` for ``(state, last)``, memoized
+    on the state object (handles are immutable — every ingest/restore/
+    merge returns a new one, so a hit is always exact). Horizons that
+    alias the same validity mask (``last=None`` vs ``last>=k``) share one
+    entry. Public so serving loops can pre-warm the cache after a flush.
+    """
+    k = spec.config.effective_k
+    horizon = k if last is None else min(int(last), k)
+    cache = getattr(state, _PLANES_ATTR, None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(state, _PLANES_ATTR, cache)
+    if horizon not in cache:
+        PLANES_BUILD_COUNTS["build"] += 1
+        stacked = isinstance(state, ShardedState)
+        shards = state.shards if stacked else state
+        cache[horizon] = _build_planes(spec, shards, horizon=horizon,
+                                       stacked=stacked)
+    return cache[horizon]
+
+
+def clear_plane_cache(state) -> None:
+    """Drop any memoized ``QueryPlanes`` from a handle. Never needed for
+    correctness (state-producing ops return fresh handles); benchmarks use
+    it to time the cold path, and it frees plane memory on a handle that
+    will only be checkpointed."""
+    if getattr(state, _PLANES_ATTR, None):
+        object.__setattr__(state, _PLANES_ATTR, {})
+
+
+# --------------------------------------------------------------------------
+# jitted sharded dispatches (one per kind x path)
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=(0,),
                    static_argnames=("with_le", "last", "stacked"))
 def _edge_sharded(spec, shards, src, dst, la, lb, les, *, with_le, last,
                   stacked=True):
+    _count("edge", "scan")
     shards = _with_global_window(_lift(shards, stacked))
     if spec.kind == "lgs":
         per = jax.vmap(lambda st: _lgs_edge_query(
@@ -139,6 +248,7 @@ def _edge_sharded(spec, shards, src, dst, la, lb, les, *, with_le, last,
                    static_argnames=("with_le", "direction", "last", "stacked"))
 def _vertex_sharded(spec, shards, v, lv, les, *, with_le, direction, last,
                     stacked=True):
+    _count("vertex", "scan")
     shards = _with_global_window(_lift(shards, stacked))
     if spec.kind == "lgs":
         per = jax.vmap(lambda st: _lgs_vertex_query(
@@ -158,6 +268,7 @@ def _vertex_sharded(spec, shards, v, lv, les, *, with_le, direction, last,
                    static_argnames=("with_le", "direction", "last", "stacked"))
 def _label_sharded(spec, shards, lv, les, *, with_le, direction, last,
                    stacked=True):
+    _count("label", "scan")
     shards = _with_global_window(_lift(shards, stacked))
 
     def one(st):
@@ -168,19 +279,60 @@ def _label_sharded(spec, shards, lv, les, *, with_le, direction, last,
     return jnp.sum(jax.vmap(one)(shards), axis=0)
 
 
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "interpret"))
+def _edge_pallas(spec, planes, src, dst, la, lb, les, *, with_le, interpret):
+    _count("edge", "pallas")
+    from repro.kernels.sketch_query.ops import edge_query_planes
+    w, wl = edge_query_planes(spec.config, planes, src, dst, (la, lb, les),
+                              with_le=with_le, interpret=interpret)
+    return jnp.sum(wl if with_le else w, axis=0)
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "direction", "interpret"))
+def _vertex_pallas(spec, planes, v, lv, les, *, with_le, direction,
+                   interpret):
+    _count("vertex", "pallas")
+    from repro.kernels.vertex_scan.ops import vertex_query_planes
+    w, wl = vertex_query_planes(spec.config, planes, v, (lv, les),
+                                direction=direction, with_le=with_le,
+                                interpret=interpret)
+    return jnp.sum(wl if with_le else w, axis=0)
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "direction"))
+def _label_pallas(spec, planes, lv, les, *, with_le, direction):
+    _count("label", "pallas")
+    from repro.kernels.vertex_scan.ops import label_aggregate_planes
+    w, wl = label_aggregate_planes(spec.config, planes, lv, edge_label=les,
+                                   direction=direction, with_le=with_le)
+    return jnp.sum(wl if with_le else w, axis=0)
+
+
 # --------------------------------------------------------------------------
 # public entry
 # --------------------------------------------------------------------------
 
-def query(spec: SketchSpec, state, q: QueryBatch) -> jnp.ndarray:
+def query(spec: SketchSpec, state, q: QueryBatch,
+          path: str = "auto") -> jnp.ndarray:
     """Answer a QueryBatch against a sketch. int32 [B] out.
 
     ``state`` is normally a ``ShardedState`` handle; a plain per-shard state
     pytree (the object-shim path) is accepted too and lifted to a 1-shard
     stack *inside* the jitted dispatch (no eager whole-state copy).
+
+    ``path``: "auto" (backend default), "scan" (dense vmapped reference)
+    or "pallas" (shard-axis kernels / compiled lowerings over cached
+    window-reduced planes). Both answer bit-identically (pinned in
+    tests/test_query_path.py).
     """
+    path = resolve_query_path(spec, path)
     stacked = isinstance(state, ShardedState)
     shards = state.shards if stacked else state
+    interpret = jax.default_backend() != "tpu"
+
     if q.kind == "edge":
         src, dst = as_i32(q.src), as_i32(q.dst)
         n = max(src.shape[0], dst.shape[0])
@@ -192,8 +344,13 @@ def query(spec: SketchSpec, state, q: QueryBatch) -> jnp.ndarray:
         with_le = le is not None
         les = as_i32(le, n) if with_le else jnp.zeros_like(src)
         src, dst, la, lb, les = pad_all(n, src, dst, la, lb, les)
-        out = _edge_sharded(spec, shards, src, dst, la, lb, les,
-                            with_le=with_le, last=last, stacked=stacked)
+        if path == "pallas":
+            planes = query_planes(spec, state, last)
+            out = _edge_pallas(spec, planes, src, dst, la, lb, les,
+                               with_le=with_le, interpret=interpret)
+        else:
+            out = _edge_sharded(spec, shards, src, dst, la, lb, les,
+                                with_le=with_le, last=last, stacked=stacked)
         return out[:n]
 
     if q.kind == "vertex":
@@ -206,9 +363,14 @@ def query(spec: SketchSpec, state, q: QueryBatch) -> jnp.ndarray:
         with_le = le is not None
         les = as_i32(le, n) if with_le else jnp.zeros_like(v)
         v, lv, les = pad_all(n, v, lv, les)
-        out = _vertex_sharded(spec, shards, v, lv, les, with_le=with_le,
-                              direction=q.direction, last=last,
-                              stacked=stacked)
+        if path == "pallas":
+            planes = query_planes(spec, state, last)
+            out = _vertex_pallas(spec, planes, v, lv, les, with_le=with_le,
+                                 direction=q.direction, interpret=interpret)
+        else:
+            out = _vertex_sharded(spec, shards, v, lv, les, with_le=with_le,
+                                  direction=q.direction, last=last,
+                                  stacked=stacked)
         return out[:n]
 
     if q.kind == "label":
@@ -224,9 +386,14 @@ def query(spec: SketchSpec, state, q: QueryBatch) -> jnp.ndarray:
         with_le = le is not None
         les = as_i32(le, n) if with_le else jnp.zeros_like(lv)
         lv, les = pad_all(n, lv, les)
-        out = _label_sharded(spec, shards, lv, les, with_le=with_le,
-                             direction=q.direction, last=last,
-                             stacked=stacked)
+        if path == "pallas":
+            planes = query_planes(spec, state, last)
+            out = _label_pallas(spec, planes, lv, les, with_le=with_le,
+                                direction=q.direction)
+        else:
+            out = _label_sharded(spec, shards, lv, les, with_le=with_le,
+                                 direction=q.direction, last=last,
+                                 stacked=stacked)
         return out[:n]
 
     raise ValueError(f"unknown query kind {q.kind!r}")

@@ -6,6 +6,14 @@ it vmaps, shards with ``NamedSharding``, donates, and checkpoints exactly
 like a train-state leaf. ``create`` builds it, ``place`` lays the shard
 axis over a mesh axis, ``merge_all`` decodes it back to a single plain
 sketch state (exact under ``shards_compatible`` — see ``core/merge.py``).
+
+Handles are immutable: every producer here (``create``, ``place``,
+``merge_all``, ``stack_states``, the ingest paths) returns a fresh
+object. The kernel query path's window-plane cache (DESIGN.md §8) hangs
+off the handle *object* (not the pytree — it never traverses jit,
+checkpointing, or placement), which makes handle identity the cache's
+version counter: a new handle starts cold, and no operation can leave
+stale planes behind.
 """
 
 from __future__ import annotations

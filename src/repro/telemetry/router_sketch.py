@@ -47,6 +47,7 @@ class RouterTelemetry:
     subwindows: int = 8
     d: int = 128
     n_shards: int = 1  # hash-partitioned sketch shards
+    query_path: str = "auto"  # "scan" | "pallas" | backend default
 
     def __post_init__(self):
         self.cfg = LSketchConfig(
@@ -94,19 +95,27 @@ class RouterTelemetry:
     def expert_load(self, expert: int, last: int | None = None) -> int:
         q = skt.QueryBatch.vertices([self._expert_base + expert], [3],
                                     direction="in", last=last)
-        return int(skt.query(self.spec, self.state, q)[0])
+        return int(skt.query(self.spec, self.state, q,
+                             path=self.query_path)[0])
 
     def routing_affinity(self, bucket: int, expert: int,
                          last: int | None = None) -> int:
         q = skt.QueryBatch.edges([bucket], [bucket // 64],
                                  [self._expert_base + expert], [3], last=last)
-        return int(skt.query(self.spec, self.state, q)[0])
+        return int(skt.query(self.spec, self.state, q,
+                             path=self.query_path)[0])
 
     def load_vector(self, last: int | None = None) -> np.ndarray:
-        """Windowed load of every expert in one batched query dispatch."""
+        """Windowed load of every expert in one batched query dispatch.
+
+        Rides the selected query path: on the kernel path the controller's
+        per-step read reuses the window-reduced plane cache between
+        telemetry ingests (one reduction per step, not per query).
+        """
         experts = self._expert_base + np.arange(self.n_experts, dtype=np.int32)
         q = skt.QueryBatch.vertices(experts, 3, direction="in", last=last)
-        return np.asarray(skt.query(self.spec, self.state, q))
+        return np.asarray(skt.query(self.spec, self.state, q,
+                                    path=self.query_path))
 
     def imbalance(self, last: int | None = None) -> float:
         """max/mean windowed expert load — the controller signal."""

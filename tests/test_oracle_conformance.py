@@ -18,11 +18,15 @@ per-label weights, the paper's eager window semantics):
   * under pool saturation the bound honestly weakens to
     ``est >= truth - pool_lost`` with ``pool_lost > 0`` reported.
 
-Parametrized over ``n_shards in {1, 4}`` and the insert path
-``{scan, pallas}`` (the shard-axis kernel in interpret/XLA-twin mode on
-CPU). Every run's error statistics are appended to
-``oracle_error_stats.json`` at the repo root — the CI conformance
-artifact (mean/max relative error, exact-hit fraction per run).
+Parametrized over ``n_shards in {1, 4}`` and the path ``{scan, pallas}``
+— which selects **both** the insert path (shard-axis insert kernel in
+XLA-lowering mode on CPU) and the query path (shard-axis query kernels
+over cached window-reduced planes, DESIGN.md §8), so the one-sidedness
+and no-false-negative guarantees are pinned end-to-end on the kernel
+read path too, across window wraparound and pool overflow. Every run's
+error statistics are appended to ``oracle_error_stats.json`` at the repo
+root — the CI conformance artifact (mean/max relative error, exact-hit
+fraction per run).
 
 Marked ``slow``: the CI fast tier runs ``-m "not slow"``; this file rides
 the conformance job.
@@ -230,7 +234,7 @@ def test_edge_estimates_overestimate_only(kind, ns, path):
         for last in lasts:
             est = np.asarray(skt.query(
                 spec, state, skt.QueryBatch.edges(qs, qla, qd, qlb,
-                                                  last=last)))
+                                                  last=last), path=path))
             for i, e in enumerate(edges):
                 truth = oracle.edge_weight(*e, last=last)
                 assert est[i] >= truth, (
@@ -259,7 +263,7 @@ def test_edge_label_restricted_estimates_overestimate_only(kind, ns, path):
             np.array([e[2] for e in edges], np.int32),
             np.array([e[3] for e in edges], np.int32),
             edge_label=np.full(len(edges), le, np.int32))
-        est = np.asarray(skt.query(spec, state, q))
+        est = np.asarray(skt.query(spec, state, q, path=path))
         for i, e in enumerate(edges):
             truth = oracle.edge_weight(*e, le=le)
             assert est[i] >= truth
@@ -281,7 +285,8 @@ def test_vertex_estimates_overestimate_only(kind, ns, path):
     for direction in ("out", "in"):
         est = np.asarray(skt.query(
             spec, state,
-            skt.QueryBatch.vertices(vs, lvs, direction=direction)))
+            skt.QueryBatch.vertices(vs, lvs, direction=direction),
+            path=path))
         for i in range(len(vs)):
             truth = oracle.vertex_weight(int(vs[i]), int(lvs[i]),
                                          direction=direction)
@@ -316,7 +321,7 @@ def test_wraparound_expires_old_weight_exactly(ns, path):
         np.array([e[0] for e in present], np.int32),
         np.array([e[1] for e in present], np.int32),
         np.array([e[2] for e in present], np.int32),
-        np.array([e[3] for e in present], np.int32))))
+        np.array([e[3] for e in present], np.int32)), path=path))
     for i, e in enumerate(present):
         truth = oracle.edge_weight(*e)
         assert est[i] >= truth
@@ -371,6 +376,6 @@ def test_pool_overflow_keeps_honest_bound(ns, path):
         np.array([e[0] for e in present], np.int32),
         np.array([e[1] for e in present], np.int32),
         np.array([e[2] for e in present], np.int32),
-        np.array([e[3] for e in present], np.int32))))
+        np.array([e[3] for e in present], np.int32)), path=path))
     for i, e in enumerate(present):
         assert est[i] >= oracle.edge_weight(*e) - lost
