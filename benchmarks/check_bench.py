@@ -9,7 +9,11 @@ the noise. Checks:
   * the pallas query path (plane-cached — the steady serving state) beats
     the dense vmapped scan reference at 4 shards;
   * the plane-cached row beats the cold row at 4 shards (the cache must
-    actually pay for itself).
+    actually pay for itself);
+  * the mesh-resident collective path (device plane cache + psum of
+    answers) beats the host fan-out on the same placed 8-shard state —
+    the DESIGN.md §9 acceptance A/B, measured in the fake-device child
+    (``kernel_bench --mesh-child``) within one run like every other gate.
 
 ``python -m benchmarks.check_bench [path-to-json]`` — exits nonzero with
 a diagnostic when a gate fails or the rows are missing.
@@ -25,6 +29,8 @@ GATES = [
     # (faster_row, slower_row) — faster must strictly beat slower
     ("query_pallas_cached_x4", "query_scan_x4"),
     ("query_pallas_cached_x4", "query_pallas_cold_x4"),
+    ("query_collective_cached_x8", "query_scan_mesh_x8"),
+    ("query_collective_cached_x8", "query_collective_cold_x8"),
 ]
 
 METRIC = "total_s"

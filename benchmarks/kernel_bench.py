@@ -1,16 +1,24 @@
 """Kernel micro-benchmarks: batched-vectorized vs scalar-sequential insert,
 engine insert-path comparison (fori-loop vs scan-fused vs Pallas-binned),
-and batched query throughput — the systems-side speedup story on CPU
-(TPU perf is structural, via the dry-run roofline).
+batched query throughput, and the mesh-resident rows — the systems-side
+speedup story on CPU (TPU perf is structural, via the dry-run roofline).
 
 ``python -m benchmarks.kernel_bench [--quick]`` runs everything and emits
-``BENCH_engine.json`` at the repo root (the CI smoke artifact).
+``BENCH_engine.json`` at the repo root (the CI smoke artifact). The
+mesh-resident rows (collective query vs host fan-out; the
+telemetry-at-scale handle-vs-psum decision) run in a child process under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the same
+fake-device recipe as tests/test_multidevice.py — because device count is
+fixed at backend init (``--no-mesh`` skips them).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 from pathlib import Path
 
 import numpy as np
@@ -331,6 +339,159 @@ def query_path_throughput(n=16384, q=2048, shard_counts=(1, 4)):
     return rows
 
 
+def collective_query_throughput(n=2048, q=1024, n_shards=8):
+    """Mesh-resident query comparison on the fake-device mesh (run inside
+    the ``--mesh-child`` process): the same label-restricted vertex batch
+    answered by
+
+      * ``query_scan_mesh_x{S}``        — host fan-out reference on the
+                                          *placed* state (vmap + sum; the
+                                          pre-§9 serving path);
+      * ``query_collective_cold_x{S}``  — shard_map path, device plane
+                                          cache cleared every call;
+      * ``query_collective_cached_x{S}``— shard_map path, device-resident
+                                          planes cached (steady serving
+                                          state between flushes).
+
+    Same ``_timed_medians`` in-run A/B discipline as every other row;
+    ``check_bench.py`` gates cached-collective < scan-mesh.
+    """
+    import jax.numpy as jnp
+    from repro import sketch as skt
+    from repro.sketch.query import clear_plane_cache
+
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=1024)
+    rng = np.random.default_rng(0)
+    batch = _batch(rng, n, n_vlabels=32)
+    t = np.full(n, 3, np.int32)
+    batch = EdgeBatch(batch.src, batch.dst, batch.src_label, batch.dst_label,
+                      batch.edge_label, batch.weight, jnp.asarray(t))
+    vs = jnp.asarray(rng.integers(0, 500, q), jnp.int32)
+    qb = skt.QueryBatch.vertices(vs, (vs % 32).astype(jnp.int32),
+                                 edge_label=jnp.asarray(
+                                     rng.integers(0, 6, q), jnp.int32),
+                                 direction="out")
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_shards]), ("data",))
+    spec = skt.make_spec("lsketch", n_shards=n_shards, config=cfg)
+    state = skt.place(spec, skt.create(spec), mesh)
+    state = skt.ingest(spec, state, batch, path="scan")
+    jax.block_until_ready(state.shards.C)
+
+    def run(path, cold=False):
+        if cold:
+            clear_plane_cache(state)
+        out = skt.query(spec, state, qb, path=path)
+        jax.block_until_ready(out)
+        return out
+
+    variants = [
+        ("query_scan_mesh", lambda: run("scan")),
+        ("query_collective_cold", lambda: run("collective", cold=True)),
+        # cached times right after cold within each iteration (cold leaves
+        # the cache warm), mirroring the query_path_throughput ordering
+        ("query_collective_cached", lambda: run("collective")),
+    ]
+    run("collective")  # pre-warm: shard_map compile + device planes
+    medians = _timed_medians(variants, warmup=1, iters=7)
+    rows, result = [], {}
+    for tag, _ in variants:
+        dt = medians[tag]
+        rows.append([f"{tag}_x{n_shards}", q, n_shards,
+                     f"{dt / q * 1e6:.3f}", f"{dt:.4f}"])
+        result[f"{tag}_x{n_shards}"] = {
+            "queries": q, "shards": n_shards, "devices": n_shards,
+            "ingested_edges": n, "us_per_query": dt / q * 1e6, "total_s": dt}
+    write_csv("collective_query_throughput",
+              ["impl", "queries", "shards", "us_per_query", "total_s"], rows)
+    _merge_bench(result)
+    return rows
+
+
+def telemetry_mesh_throughput(steps=4, n_experts=64, n_shards=8):
+    """Telemetry-at-scale decision rows (run inside ``--mesh-child``): the
+    controller's ``load_vector`` read on an 8-fake-device mesh via
+
+      * ``telemetry_handle_x{S}`` — the sharded handle, mesh-resident,
+        collective query path (device plane cache + psum of answers);
+      * ``telemetry_psum_x{S}``   — ``core/merge.psum_sketch``: all-reduce
+        the full per-device counter planes, then query the reduced state
+        (every device re-runs the query on the merged sketch).
+
+    The handle path wins by an order of magnitude (the psum moves the
+    whole [d, d, 2, k, c] state per read); ``RouterTelemetry`` defaults
+    its mesh-resident reads accordingly (telemetry/router_sketch.py).
+    """
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core import merge as _merge
+    from repro.core.queries import vertex_query
+    from repro.telemetry.router_sketch import RouterTelemetry
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_shards]), ("data",))
+    tel = RouterTelemetry(n_experts=n_experts, n_shards=n_shards, mesh=mesh)
+    assert tel.query_path == "collective"  # the wired default under a mesh
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 4, (tel.n_buckets, n_experts))
+    for step in range(steps):
+        tel.ingest(counts, step)
+    jax.block_until_ready(tel.state.shards.C)
+
+    experts = jnp.asarray(tel._expert_base
+                          + np.arange(n_experts, dtype=np.int32))
+    lv = jnp.full((n_experts,), 3, jnp.int32)
+    les = jnp.zeros((n_experts,), jnp.int32)
+    cfg = tel.cfg
+
+    @jax.jit
+    def psum_load(shards):
+        def body(st):
+            one = jax.tree.map(lambda x: x[0], st)  # this device's sketch
+            red = _merge.psum_sketch(cfg, one, "data")
+            w, _ = vertex_query(cfg, red, experts, (lv, les),
+                                direction="in", with_edge_label=False,
+                                last=None)
+            return w
+        return shard_map(body, mesh=mesh, in_specs=P("data"),
+                         out_specs=P(), check_rep=False)(shards)
+
+    variants = [
+        ("telemetry_handle", lambda: jax.block_until_ready(
+            tel.load_vector())),
+        ("telemetry_psum", lambda: jax.block_until_ready(
+            psum_load(tel.state.shards))),
+    ]
+    medians = _timed_medians(variants, warmup=1, iters=7)
+    rows, result = [], {}
+    for tag, _ in variants:
+        dt = medians[tag]
+        rows.append([f"{tag}_x{n_shards}", n_experts, n_shards,
+                     f"{dt * 1e6:.1f}", f"{dt:.5f}"])
+        result[f"{tag}_x{n_shards}"] = {
+            "experts": n_experts, "shards": n_shards, "devices": n_shards,
+            "us_per_read": dt * 1e6, "total_s": dt}
+    write_csv("telemetry_mesh_throughput",
+              ["impl", "experts", "shards", "us_per_read", "total_s"], rows)
+    _merge_bench(result)
+    return rows
+
+
+def mesh_rows_subprocess(quick: bool) -> None:
+    """Run the mesh-resident rows in a child with 8 fake CPU devices (the
+    device count is fixed at backend init, so the parent can't host them).
+    The child merges its rows into BENCH_engine.json itself."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    cmd = [sys.executable, "-m", "benchmarks.kernel_bench", "--mesh-child"]
+    if quick:
+        cmd.append("--quick")
+    subprocess.run(cmd, check=True, env=env,
+                   cwd=Path(__file__).resolve().parents[1])
+
+
 def query_throughput(n=20000, q=4096):
     cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
                         window_size=100, pool_capacity=8192)
@@ -363,15 +524,31 @@ def main(argv=None):
                     help="run only the query-path rows (the conformance "
                          "job's bench: feeds check_bench + the artifact "
                          "without re-paying the ingest benches)")
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="skip the fake-device mesh rows (collective "
+                         "query + telemetry decision)")
+    ap.add_argument("--mesh-child", action="store_true",
+                    help="internal: run the mesh rows in this process "
+                         "(expects the fake-device XLA_FLAGS already set)")
     args = ap.parse_args(argv)
     # power-of-two sizes: the fused path buckets batch shapes, so an
     # aligned n measures the paths on identical item counts
     n = 2048 if args.quick else 16384
+    if args.mesh_child:
+        for rows in (collective_query_throughput(
+                n=n, q=1024 if args.quick else 2048),
+                telemetry_mesh_throughput()):
+            print("impl,...,total_s")
+            for r in rows:
+                print(",".join(str(x) for x in r))
+        return
     if args.only_query:
         qrows = query_path_throughput(n=n, q=1024 if args.quick else 2048)
         print("impl,queries,shards,us_per_query,total_s")
         for r in qrows:
             print(",".join(str(x) for x in r))
+        if not args.no_mesh:
+            mesh_rows_subprocess(args.quick)
         return
     rows = engine_insert_throughput(n=n, subwindows_spanned=4,
                                     include_pallas=not args.no_pallas)
@@ -391,6 +568,8 @@ def main(argv=None):
     print("impl,queries,shards,us_per_query,total_s")
     for r in qrows:
         print(",".join(str(x) for x in r))
+    if not args.no_mesh:
+        mesh_rows_subprocess(args.quick)
     if not args.quick:
         insert_throughput(n=n)
         query_throughput(n=n)

@@ -85,8 +85,11 @@ print("reachable(a -> b)?      est:", sk.reachable(a, la, b, lb),
 print("pool_lost (should be 0):", int(merged.pool_lost))
 
 # 6. checkpoint round-trip — sketches persist with the same manifests as
-#    train state, and restore under a *grown* shard count (exact for any
-#    state: queries sum shard contributions, new shards start empty)
+#    train state; restoring under a different shard count re-partitions
+#    the contents by key space (repro.sketch.reshard, DESIGN.md §9.3):
+#    history spreads over all 8 shards instead of staying where the 4-shard
+#    layout put it. Vertex/label aggregates are conserved exactly; edge
+#    estimates stay one-sided (est >= truth) as collisions redistribute.
 with tempfile.TemporaryDirectory() as d:
     skt.save(spec, state, d, step=1)
     spec8 = spec.replace(n_shards=8)
@@ -94,5 +97,5 @@ with tempfile.TemporaryDirectory() as d:
     same = q1(skt.QueryBatch.edges([a], [la], [b], [lb]))
     grown = int(skt.query(spec8, restored,
                           skt.QueryBatch.edges([a], [la], [b], [lb]))[0])
-    print(f"\ncheckpoint restored 4 shards -> 8 shards: "
-          f"weight(a->b) {same} == {grown}: {same == grown}")
+    print(f"\ncheckpoint restored 4 shards -> 8 shards (balanced reshard): "
+          f"weight(a->b) {same} vs {grown} (both >= truth)")

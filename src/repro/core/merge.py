@@ -124,11 +124,41 @@ def lgs_merge_all(cfg, stacked):
     )
 
 
+def psum_partials(x: jax.Array, axis_name: str) -> jax.Array:
+    """Reduce per-shard query partials to the fleet answer inside
+    ``shard_map``: sum the device-local shard axis, then ``psum`` across the
+    mesh axis (DESIGN.md §9 — the collective query's one reduction point).
+
+    ``x``: ``[S_local, B]`` (or any leading local-shard axis). Addition is
+    the exact combinator for every sketch query — hash partitioning makes
+    shard estimates disjoint — and int32 addition is associative, so the
+    two-level reduce is bit-identical to the host-side ``sum(axis=0)`` of
+    the full stack. Shares the all-reduce seat with ``psum_sketch`` below
+    (which moves whole counter planes; this moves only the answers).
+    """
+    return jax.lax.psum(jnp.sum(x, axis=0), axis_name)
+
+
+def maybe_psum_partials(w: jax.Array, wl: jax.Array, axis_name: str | None):
+    """The plane ops' shared reduction tail: pass-through per-shard
+    partials when host-side (``axis_name=None``), or reduce both outputs
+    through ``psum_partials`` when running inside ``shard_map`` — keeping
+    the collective reduction contract in exactly one place."""
+    if axis_name is None:
+        return w, wl
+    return psum_partials(w, axis_name), psum_partials(wl, axis_name)
+
+
 def psum_sketch(cfg: LSketchConfig, state: LSketchState, axis_name: str) -> LSketchState:
     """All-reduce a sharded telemetry sketch across a mesh axis (in-jit).
 
     Counter planes psum; keys/window indices are identical across shards by
-    construction (same seed, lockstep windows), validated in tests.
+    construction (same seed, lockstep windows), validated in tests. Note
+    the cost asymmetry with the handle layer's collective query: this moves
+    the full ``[d, d, 2, k(, c)]`` planes through the interconnect on every
+    reduce, while ``psum_partials`` moves one int32 per query — the
+    telemetry-at-scale benchmark (``kernel_bench --mesh-child``) quantifies
+    the gap and the MoE controller defaults to the handle path.
     """
     return LSketchState(
         key=jax.lax.pmax(state.key, axis_name),

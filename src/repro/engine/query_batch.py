@@ -5,8 +5,10 @@ compatibility adapter: it takes the legacy *object* wrappers
 (``LSketch`` / ``LGS`` / ``GSS``), lifts their plain state into a 1-shard
 ``ShardedState`` handle, and routes through ``repro.sketch.query`` — one
 implementation of normalization, EMPTY-sentinel bucket padding, per-kind
-jitted dispatch, path selection (``path="scan"|"pallas"|"auto"``, see
-DESIGN.md §8) and the GSS degeneracy rules. The scalar methods attached
+jitted dispatch, path selection (``path="scan"|"pallas"|"collective"|
+"auto"``, see DESIGN.md §8/§9 — "collective" needs a mesh-resident
+handle, which the object shims never carry, so shim traffic takes the
+host paths) and the GSS degeneracy rules. The scalar methods attached
 in ``core/queries.py`` sit on top (scalars are length-1 batches);
 ``launch/serve_sketch.py`` serves request traffic through the handle layer
 directly.

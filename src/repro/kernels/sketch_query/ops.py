@@ -39,7 +39,8 @@ def _pad_to(x, mult, fill=0):
 
 def edge_query_planes(cfg: LSketchConfig, planes: QueryPlanes, src, dst,
                       labels, with_le: bool = True, interpret: bool = True,
-                      _kernel_interpret: bool = False):
+                      _kernel_interpret: bool = False,
+                      axis_name: str | None = None):
     """Batched edge queries on window-reduced planes, all shards at once.
 
     src/dst: int32 [B]; labels: (lA, lB, le) int32 [B] each (``le`` is
@@ -52,6 +53,12 @@ def edge_query_planes(cfg: LSketchConfig, planes: QueryPlanes, src, dst,
     ``_kernel_interpret`` (tests only): run the hardware-kernel branch in
     Pallas interpret mode — the only way to exercise it on CPU.
     Traced (not jitted) — compose inside a jitted caller.
+
+    ``axis_name`` makes this a ``shard_map``-compatible entry point
+    (DESIGN.md §9): the planes then carry only the device-local shard
+    block ``[S_local, ...]`` and the outputs come back reduced to ``[B]``
+    via ``core.merge.psum_partials`` (local sum + cross-device psum) —
+    the collective query's one reduction point.
     """
     la, lb, le = labels
     pa = precompute(cfg, src, la)
@@ -93,7 +100,8 @@ def edge_query_planes(cfg: LSketchConfig, planes: QueryPlanes, src, dst,
     if le_idx is not None:
         wl_p = planes.pool_pw[s_idx, pslot, le_idx[None, :].astype(jnp.int32)]
         wl = wl + jnp.where(sel, wl_p, 0)
-    return w, wl
+    from repro.core.merge import maybe_psum_partials
+    return maybe_psum_partials(w, wl, axis_name)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 5),

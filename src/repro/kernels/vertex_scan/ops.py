@@ -38,13 +38,17 @@ __all__ = ["vertex_query_planes", "label_aggregate_planes",
 def vertex_query_planes(cfg: LSketchConfig, planes: QueryPlanes, vertex,
                         labels, direction: str = "out", with_le: bool = True,
                         interpret: bool = True,
-                        _kernel_interpret: bool = False):
+                        _kernel_interpret: bool = False,
+                        axis_name: str | None = None):
     """Batched vertex aggregate queries on window-reduced planes.
 
     vertex: int32 [B]; labels: (lv, le) int32 [B] each (``le`` ignored when
     ``with_le`` is False). Returns (w, w_label), each [S, B] per-shard
     partials. ``interpret``/``_kernel_interpret`` as in
-    ``edge_query_planes``. Traced — compose inside a jitted caller.
+    ``edge_query_planes``; ``axis_name`` likewise makes this a
+    ``shard_map``-compatible entry point returning ``[B]`` outputs reduced
+    via ``core.merge.psum_partials`` (DESIGN.md §9).
+    Traced — compose inside a jitted caller.
     """
     lv, le = labels
     pre = precompute(cfg, vertex, lv)
@@ -92,15 +96,19 @@ def vertex_query_planes(cfg: LSketchConfig, planes: QueryPlanes, vertex,
                              (S, B) + planes.pool_pw.shape[1:]),
             le_idx[None, :, None, None].astype(jnp.int32), -1)[..., 0]
         wl = wl + jnp.sum(jnp.where(pm, lw, 0), -1)
-    return w, wl
+    from repro.core.merge import maybe_psum_partials
+    return maybe_psum_partials(w, wl, axis_name)
 
 
 def label_aggregate_planes(cfg: LSketchConfig, planes: QueryPlanes, vlabel,
                            edge_label=None, direction: str = "out",
-                           with_le: bool = False):
+                           with_le: bool = False,
+                           axis_name: str | None = None):
     """Vertex-label aggregates on window-reduced planes (Alg. 4 lines
     10-14): sum every occupied cell in the label's block rows (out) /
-    columns (in) plus matching pool entries. Returns (w, w_label) [S, B].
+    columns (in) plus matching pool entries. Returns (w, w_label) [S, B],
+    or ``[B]`` psum-reduced when ``axis_name`` is set (the shard_map
+    collective entry, DESIGN.md §9).
     """
     vlabel = jnp.asarray(vlabel, jnp.int32)
     B = vlabel.shape[0]
@@ -139,7 +147,8 @@ def label_aggregate_planes(cfg: LSketchConfig, planes: QueryPlanes, vlabel,
                              (S, B) + planes.pool_pw.shape[1:]),
             le_idx[None, :, None, None].astype(jnp.int32), -1)[..., 0]
         wl = wl + jnp.sum(jnp.where(pmatch, plw, 0), -1)
-    return w, wl
+    from repro.core.merge import maybe_psum_partials
+    return maybe_psum_partials(w, wl, axis_name)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4, 5),

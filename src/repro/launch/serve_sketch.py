@@ -9,14 +9,19 @@ host partition of batch N+1 overlaps batch N's in-flight dispatch
 (``--no-pipeline`` dispatches eagerly instead). Queries fan through every
 shard and sum contributions; the query path flushes the ingest pipeline
 first, so answers always reflect every batch submitted before them.
-``--query-path`` picks the read path (DESIGN.md §8): the dense vmapped
-scan reference or the shard-axis kernel path over cached window-reduced
-planes — the plane cache is built on the first query after a flush and
+``--query-path`` picks the read path (DESIGN.md §8/§9): the dense vmapped
+scan reference, the shard-axis kernel path over cached window-reduced
+planes, or — with ``--mesh N`` laying the shard axis over N devices —
+the mesh-resident ``collective`` path (``--collective`` is shorthand),
+where queries run inside ``shard_map`` against a device-resident plane
+cache and reduce with psum, never funnelling shard partials through the
+host. The plane cache is built on the first query after a flush and
 reused for every request group until the next ingest. The same server
 fronts LSketch, LGS, or GSS because the handle layer dispatches on
 ``spec.kind``.
 
 Usage: python -m repro.launch.serve_sketch --sketch lsketch --shards 4
+       python -m repro.launch.serve_sketch --shards 8 --mesh 4 --collective
    (or python -m repro.launch.serve --mode sketch ...)
 """
 
@@ -60,10 +65,33 @@ class SketchServer:
 
     def __init__(self, spec: "skt.SketchSpec", max_batch: int = 4096,
                  state: "skt.ShardedState | None" = None,
-                 pipeline: bool = True, query_path: str = "auto"):
+                 pipeline: bool = True, query_path: str = "auto",
+                 mesh=None, axis: str = "data"):
         self.spec = spec
         self.pipeline = pipeline
         self.query_path = query_path
+        # a pre-placed handle already carries its layout — honor it
+        ctx = skt.mesh_context(state) if state is not None else None
+        if ctx is None and mesh is not None:
+            ctx = skt.MeshContext(mesh=mesh, axis=axis)
+        if query_path == "collective":
+            # fail at construction, not after a full ingest: collective
+            # needs a mesh whose axis divides the shard count
+            if ctx is None:
+                raise ValueError(
+                    "query_path='collective' needs a mesh (SketchServer("
+                    "..., mesh=...) or a place()d state)")
+            if not ctx.divides(spec.n_shards):
+                raise ValueError(
+                    f"query_path='collective' needs the mesh axis to divide "
+                    f"the shard count: n_shards={spec.n_shards} over "
+                    f"{ctx.n_devices} devices replicates instead of "
+                    "sharding")
+        if mesh is not None and skt.mesh_context(state) is None:
+            # mesh-resident serving: the shard axis lives on the mesh from
+            # the first dispatch; ingest keeps the residency (DESIGN.md §9)
+            state = skt.place(spec, state if state is not None
+                              else skt.create(spec), mesh, axis=axis)
         self._ingestor = skt.AsyncIngestor(spec, state=state)
         self.max_batch = max_batch
         self.pending: List[QueryRequest] = []
@@ -153,17 +181,43 @@ def main(argv=None):
                     help="dispatch each batch eagerly instead of "
                          "overlapping partition and device compute")
     ap.add_argument("--query-path", default="auto",
-                    choices=["auto", "scan", "pallas"],
-                    help="read path: dense vmapped scan vs shard-axis "
-                         "kernels over cached window-reduced planes")
+                    choices=["auto", "scan", "pallas", "collective"],
+                    help="read path: dense vmapped scan, shard-axis "
+                         "kernels over cached window-reduced planes, or "
+                         "the mesh-resident shard_map+psum path "
+                         "(needs --mesh)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="lay the shard axis over the first N devices "
+                         "(0 = host-resident handle); N must divide "
+                         "--shards for the collective path")
+    ap.add_argument("--collective", action="store_true",
+                    help="shorthand for --query-path collective")
     args = ap.parse_args(argv)
+    if args.collective:
+        args.query_path = "collective"
+
+    mesh = None
+    if args.mesh:
+        devs = jax.devices()
+        if args.mesh > len(devs):
+            raise SystemExit(f"--mesh {args.mesh}: only {len(devs)} "
+                             "devices available")
+        mesh = jax.sharding.Mesh(np.array(devs[:args.mesh]), ("data",))
+        ctx = skt.MeshContext(mesh=mesh, axis="data")
+        if args.query_path == "collective" and not ctx.divides(args.shards):
+            raise SystemExit(
+                f"--query-path collective needs --mesh to divide --shards "
+                f"(got {args.shards} shards over {args.mesh} devices, "
+                "which replicates instead of sharding)")
+    elif args.query_path == "collective":
+        raise SystemExit("--query-path collective needs --mesh N")
 
     spec = dataclasses.replace(PHONE, n_edges=args.edges, n_vertices=1000)
     st = generate(spec, seed=0)
     server = SketchServer(build_spec(args.sketch, spec.window_size,
                                      n_shards=args.shards),
                           pipeline=not args.no_pipeline,
-                          query_path=args.query_path)
+                          query_path=args.query_path, mesh=mesh)
 
     from repro.engine.insert import TRACE_COUNTS
     traces_before = TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]

@@ -18,19 +18,24 @@ thin compatibility shims over this layer with ``n_shards=1``.
 
 from __future__ import annotations
 
-from .spec import KINDS, SketchSpec, make_spec, shard_assignment
-from .state import (ShardedState, create, merge_all, named_shardings, place,
-                    shards_compatible, stack_states, unstack_state)
+from .spec import (KINDS, SketchSpec, make_spec, shard_assignment,
+                   shard_assignment_vids)
+from .state import (MeshContext, ShardedState, create, merge_all,
+                    mesh_context, named_shardings, place, shards_compatible,
+                    stack_states, unstack_state, with_mesh)
 from .ingest import AsyncIngestor, ingest, ingest_single
 from .query import (QueryBatch, clear_plane_cache, default_query_path, query,
                     query_planes, resolve_query_path)
+from .reshard import reshard
 from .checkpoint import restore, save, saved_spec
 
 __all__ = [
     "KINDS", "SketchSpec", "make_spec", "shard_assignment",
-    "ShardedState", "create", "merge_all", "named_shardings", "place",
-    "shards_compatible", "stack_states", "unstack_state",
+    "shard_assignment_vids",
+    "MeshContext", "ShardedState", "create", "merge_all", "mesh_context",
+    "named_shardings", "place", "shards_compatible", "stack_states",
+    "unstack_state", "with_mesh",
     "AsyncIngestor", "ingest", "ingest_single", "QueryBatch", "query",
     "query_planes", "clear_plane_cache", "resolve_query_path",
-    "default_query_path", "restore", "save", "saved_spec",
+    "default_query_path", "reshard", "restore", "save", "saved_spec",
 ]

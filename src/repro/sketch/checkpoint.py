@@ -6,20 +6,22 @@ The spec rides in the manifest's ``extra`` block, so ``restore`` can
 validate that the on-disk sketch is *identity-compatible* with the
 requested one (same kind/config/seed — the exact-merge precondition) while
 allowing a different shard count: restoring an N-shard checkpoint under an
-M-shard spec merges the saved shards (``merge_all``) into shard 0 of a
-fresh M-shard handle. Counters are conserved and every query answer is
-unchanged (queries sum shard contributions); only the *placement* of the
-historical mass differs — fresh ingest hash-partitions across all M shards
-as usual.
+M-shard spec re-partitions the saved contents across all M shards by
+key space (``repro.sketch.reshard`` — decode + balanced first-fit
+re-insert, DESIGN.md §9.3) instead of piling history into shard 0.
+Counters are conserved (vertex/label answers exactly, edge answers within
+the one-sided bound); see ``reshard`` for the contract and the exactness
+fallbacks for states it cannot decode.
 """
 
 from __future__ import annotations
 
 from repro.distributed.checkpoint import CheckpointManager
 
+from .reshard import reshard
 from .spec import SketchSpec
 from .state import (ShardedState, _init_one, create, merge_all, place,
-                    shards_compatible, stack_states, unstack_state)
+                    stack_states, unstack_state)
 
 MANIFEST_KEY = "sketch_spec"
 
@@ -44,18 +46,18 @@ def restore(spec: SketchSpec, directory, step: int | None = None, mesh=None,
     """Restore a handle for ``spec`` from a checkpoint directory.
 
     The saved spec must be identity-compatible (same kind/config). A
-    different ``n_shards`` reshards:
-
-      * growing (M > N): the saved shards are stacked with M-N fresh empty
-        shards — exact for *any* state (queries sum shard contributions,
-        so appending zeros changes nothing);
-      * shrinking (M < N): the saved shards ``merge_all`` into shard 0 —
-        exact only when ``shards_compatible`` holds, so an incompatible
-        (cross-shard-contended) checkpoint raises rather than silently
-        degrading answers; restore it at >= its saved shard count instead.
+    different ``n_shards`` triggers a key-space ``reshard`` (decode +
+    balanced first-fit re-insert): the historical mass spreads over all
+    target shards instead of piling into shard 0, vertex/label answers
+    are conserved exactly and edge answers stay one-sided (see
+    ``repro.sketch.reshard``; its per-shard decode handles even
+    cross-shard-contended checkpoints a ``merge_all`` shrink would have
+    to refuse). LGS cannot be decoded (count-min cells store no keys) and
+    falls back: shrink merges into shard 0, grow appends empty shards —
+    both exact, history stays where the counters put it.
 
     With a ``mesh``, leaves are placed under the shard-axis
-    ``NamedSharding``.
+    ``NamedSharding`` and the handle comes back mesh-resident.
     """
     mgr = CheckpointManager(directory)
     step = mgr.latest_step() if step is None else step
@@ -67,20 +69,18 @@ def restore(spec: SketchSpec, directory, step: int | None = None, mesh=None,
             f"{spec.kind}/{spec.config!r}")
     state, _ = mgr.restore(create(saved), step=step)
     if saved.n_shards != spec.n_shards:
-        base = _init_one(spec)
-        if spec.n_shards > saved.n_shards:
-            olds = [unstack_state(state, i) for i in range(saved.n_shards)]
-            state = stack_states(
-                olds + [base] * (spec.n_shards - saved.n_shards))
+        if spec.kind != "lgs":
+            state = reshard(saved, state, spec.n_shards)
         else:
-            if not bool(shards_compatible(saved, state)):
-                raise ValueError(
-                    f"cannot shrink {saved.n_shards} -> {spec.n_shards} "
-                    "shards: saved shards are not exactly mergeable "
-                    "(cross-shard cell contention); restore with "
-                    f"n_shards >= {saved.n_shards} instead")
-            merged = merge_all(saved, state)
-            state = stack_states([merged] + [base] * (spec.n_shards - 1))
+            base = _init_one(spec)
+            if spec.n_shards > saved.n_shards:
+                olds = [unstack_state(state, i)
+                        for i in range(saved.n_shards)]
+                state = stack_states(
+                    olds + [base] * (spec.n_shards - saved.n_shards))
+            else:
+                merged = merge_all(saved, state)
+                state = stack_states([merged] + [base] * (spec.n_shards - 1))
     if mesh is not None:
         state = place(spec, state, mesh, axis=axis)
     return state

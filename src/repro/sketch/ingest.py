@@ -33,6 +33,13 @@ Every write path here returns a **new** handle object; the kernel query
 path's window-plane cache (DESIGN.md §8) memoizes on handle identity, so
 any ingest — including the pipelined dispatches — invalidates it by
 construction: a query after an ingest can never observe stale planes.
+
+Mesh residency (DESIGN.md §9): a handle that was ``place``d carries a
+``MeshContext``; every dispatch here first lays the host partition over
+that same shard-axis sharding (each shard's rows go straight to the
+device owning the shard — no gather through one device) and attaches the
+context to the fresh handle, so ingest never demotes a mesh-resident
+handle back to the host.
 """
 
 from __future__ import annotations
@@ -42,6 +49,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.lgs import _lgs_insert_fused, lgs_insert_impl
 from repro.core.types import EdgeBatch
@@ -49,7 +57,7 @@ from repro.engine import insert as eng_insert
 from repro.engine.window import pad_to_bucket
 
 from .spec import SketchSpec, shard_assignment
-from .state import ShardedState, create
+from .state import ShardedState, create, mesh_context, with_mesh
 
 _FIELDS = ("src", "dst", "src_label", "dst_label", "edge_label", "weight",
            "time")
@@ -150,10 +158,27 @@ def _ingest_stacked_lgs(key, shards, batch: EdgeBatch, n_valid):
     return jax.vmap(one)(shards, batch, n_valid)
 
 
+def _place_partition(ctx, stacked: EdgeBatch, n_valid):
+    """Lay a host partition over the handle's mesh before dispatch: each
+    shard's rows transfer straight to the device that owns that shard, so
+    the stacked insert compiles shard-local (GSPMD never gathers the
+    partition — or the donated state — through one device)."""
+    rows = NamedSharding(ctx.mesh, P(ctx.axis, None))
+    vec = NamedSharding(ctx.mesh, P(ctx.axis))
+    stacked = jax.tree.map(lambda x: jax.device_put(x, rows), stacked)
+    return stacked, jax.device_put(n_valid, vec)
+
+
 def _dispatch_stacked(spec: SketchSpec, state: ShardedState, stacked,
                       n_valid, path: str) -> ShardedState:
     """One jitted dispatch for a pre-partitioned stack (shared by
-    ``ingest`` and ``AsyncIngestor``); donates the input handle."""
+    ``ingest`` and ``AsyncIngestor``); donates the input handle. A
+    mesh-resident handle (``place``) keeps its residency: the partition is
+    placed under the same shard-axis sharding and the new handle carries
+    the MeshContext forward."""
+    ctx = mesh_context(state)
+    if ctx is not None and ctx.divides(spec.n_shards):
+        stacked, n_valid = _place_partition(ctx, stacked, n_valid)
     if spec.kind == "lgs":
         shards = _ingest_stacked_lgs(spec.config.key(), state.shards,
                                      stacked, n_valid)
@@ -167,7 +192,7 @@ def _dispatch_stacked(spec: SketchSpec, state: ShardedState, stacked,
             spec.config, state.shards, stacked, n_valid,
             use_pallas=path == "pallas",
             interpret=jax.default_backend() != "tpu")
-    return ShardedState(shards=shards)
+    return with_mesh(ShardedState(shards=shards), ctx)
 
 
 def ingest(spec: SketchSpec, state: ShardedState, batch: EdgeBatch,

@@ -7,7 +7,7 @@ logical edge lives on exactly one shard), so addition is the exact
 combinator for every query kind — edge weights, vertex aggregates, and
 label aggregates.
 
-Two read paths answer the same queries bit-identically (DESIGN.md §8):
+Three read paths answer the same queries bit-identically (DESIGN.md §8/§9):
 
   * ``path="scan"`` — the dense reference: ``core/queries.py`` vmapped
     over shards, re-reducing the ``[d, d, 2, k(, c)]`` counter planes
@@ -25,6 +25,16 @@ Two read paths answer the same queries bit-identically (DESIGN.md §8):
     immutable handle, which is exactly the cache invalidation: stale
     planes cannot be served because the old handle is never queried
     again (regression-tested in tests/test_query_path.py).
+  * ``path="collective"`` — the mesh-resident path (DESIGN.md §9): for a
+    handle carrying a ``MeshContext`` (``place`` attaches it), the same
+    plane walk runs inside ``jax.shard_map`` over the shard axis, each
+    device answering against its local shard block of a **device-resident
+    plane cache** (planes built under the state's own sharding, memoized
+    with the identical handle-identity contract), and the per-shard
+    partials reduce with ``lax.psum`` (``core.merge.psum_partials``) —
+    the query never funnels shard partials through the host. Bit-identical
+    to the other paths: int32 addition is associative, so the two-level
+    (local, cross-device) reduce equals the host-side ``sum(axis=0)``.
 
 ``path="auto"`` mirrors the ingest rule: pallas on TPU, scan elsewhere.
 LGS always takes scan (count-min cells — no keyed walk, no planes).
@@ -51,6 +61,8 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import queries as _q
 from repro.core.lgs import _lgs_edge_query, _lgs_vertex_query
@@ -58,7 +70,7 @@ from repro.core.types import EMPTY
 from repro.engine.window import bucket_size
 
 from .spec import SketchSpec
-from .state import ShardedState
+from .state import ShardedState, mesh_context
 
 # trace-time counters keyed by (kind, path) — tests assert one jitted
 # program per (kind, bucket, path) by reading these before/after a
@@ -121,20 +133,41 @@ def default_query_path() -> str:
 
 
 def resolve_query_path(spec: SketchSpec, path: str = "auto") -> str:
-    """Normalize a user-facing query path name to "scan" | "pallas".
+    """Normalize a user-facing query path name to
+    "scan" | "pallas" | "collective".
 
     "auto" is the backend default; LGS silently takes "scan" (count-min
     cells store no keys — there is no probe walk or plane reduction to
-    kernelize). Unlike ingest, skewed blocking needs no fallback: the
-    query kernels address absolute rows/cols, not uniform tiles.
+    kernelize, on any path). Unlike ingest, skewed blocking needs no
+    fallback: the query kernels address absolute rows/cols, not uniform
+    tiles. "collective" additionally requires a mesh-resident handle —
+    validated at dispatch (``query``), where the state is in hand.
     """
     if path == "auto":
         path = default_query_path()
-    if path == "pallas" and spec.kind == "lgs":
+    if path in ("pallas", "collective") and spec.kind == "lgs":
         path = "scan"
-    if path not in ("scan", "pallas"):
+    if path not in ("scan", "pallas", "collective"):
         raise ValueError(f"unknown query path {path!r}")
     return path
+
+
+def _collective_ctx(spec: SketchSpec, state):
+    """Validate and fetch the MeshContext a collective query runs under."""
+    ctx = mesh_context(state) if isinstance(state, ShardedState) else None
+    if ctx is None:
+        raise ValueError(
+            "path='collective' needs a mesh-resident handle: lay the shard "
+            "axis over a mesh axis with repro.sketch.place(...) (or attach "
+            "an existing layout with with_mesh(...)) first")
+    if not ctx.divides(spec.n_shards):
+        raise ValueError(
+            f"path='collective' needs the mesh axis to divide the shard "
+            f"count (shard_map blocks must be uniform): n_shards="
+            f"{spec.n_shards} over {ctx.n_devices} devices on axis "
+            f"{ctx.axis!r} is replicated, not sharded — use the host "
+            "fan-out paths (scan/pallas) or repartition")
+    return ctx
 
 
 # --------------------------------------------------------------------------
@@ -190,12 +223,40 @@ def _build_planes(spec, shards, *, horizon, stacked=True):
     return _q.build_query_planes(spec.config, shards, horizon)
 
 
-def query_planes(spec: SketchSpec, state, last=None):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("horizon",))
+def _build_planes_collective(spec, mesh, axis, shards, *, horizon):
+    """Device-resident plane build: each device reduces only its local
+    shard block, under the same global-``cur_widx`` reconciliation (the
+    max-lift becomes a ``pmax`` across the mesh axis). The output planes
+    carry the state's own sharding (leading shard axis over ``axis``), so
+    the collective query dispatches consume them with zero re-layout.
+    """
+    _count("planes", "build")
+
+    def body(sh):
+        g = jax.lax.pmax(jnp.max(sh.cur_widx, axis=0), axis)
+        sh = dataclasses.replace(
+            sh, cur_widx=jnp.broadcast_to(g, sh.cur_widx.shape))
+        return _q.build_query_planes(spec.config, sh, horizon)
+
+    # check_rep=False: the bodies use gathers/scatters that predate the
+    # replication-rule registry; correctness is pinned by the scan parity
+    # tests, not the rep checker
+    return shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(axis),
+                     check_rep=False)(shards)
+
+
+def query_planes(spec: SketchSpec, state, last=None, *,
+                 collective: bool = False):
     """The window-reduced ``QueryPlanes`` for ``(state, last)``, memoized
     on the state object (handles are immutable — every ingest/restore/
     merge returns a new one, so a hit is always exact). Horizons that
     alias the same validity mask (``last=None`` vs ``last>=k``) share one
-    entry. Public so serving loops can pre-warm the cache after a flush.
+    entry. With ``collective=True`` the planes are built and kept under
+    the handle's mesh sharding (one device-resident entry per horizon,
+    same identity contract — the cache key just gains the layout). Public
+    so serving loops can pre-warm the cache after a flush.
     """
     k = spec.config.effective_k
     horizon = k if last is None else min(int(last), k)
@@ -203,13 +264,19 @@ def query_planes(spec: SketchSpec, state, last=None):
     if cache is None:
         cache = {}
         object.__setattr__(state, _PLANES_ATTR, cache)
-    if horizon not in cache:
+    ckey = ("collective", horizon) if collective else horizon
+    if ckey not in cache:
         PLANES_BUILD_COUNTS["build"] += 1
-        stacked = isinstance(state, ShardedState)
-        shards = state.shards if stacked else state
-        cache[horizon] = _build_planes(spec, shards, horizon=horizon,
-                                       stacked=stacked)
-    return cache[horizon]
+        if collective:
+            ctx = _collective_ctx(spec, state)
+            cache[ckey] = _build_planes_collective(
+                spec, ctx.mesh, ctx.axis, state.shards, horizon=horizon)
+        else:
+            stacked = isinstance(state, ShardedState)
+            shards = state.shards if stacked else state
+            cache[ckey] = _build_planes(spec, shards, horizon=horizon,
+                                        stacked=stacked)
+    return cache[ckey]
 
 
 def clear_plane_cache(state) -> None:
@@ -312,6 +379,68 @@ def _label_pallas(spec, planes, lv, les, *, with_le, direction):
 
 
 # --------------------------------------------------------------------------
+# collective dispatches (DESIGN.md §9): the same plane ops inside
+# shard_map over the shard axis — per-device shard blocks, psum reduction
+# --------------------------------------------------------------------------
+
+def _shmap(body, ctx, n_query_args):
+    """shard_map wrapper shared by the collective dispatches: planes are
+    sharded on the leading shard axis, query arrays replicated, output
+    replicated (already psum-reduced inside the plane ops)."""
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(ctx.axis),) + (P(),) * n_query_args,
+        out_specs=P(), check_rep=False)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("with_le", "interpret"))
+def _edge_collective(spec, ctx, planes, src, dst, la, lb, les, *, with_le,
+                     interpret):
+    _count("edge", "collective")
+    from repro.kernels.sketch_query.ops import edge_query_planes
+
+    def body(planes, src, dst, la, lb, les):
+        w, wl = edge_query_planes(spec.config, planes, src, dst,
+                                  (la, lb, les), with_le=with_le,
+                                  interpret=interpret, axis_name=ctx.axis)
+        return wl if with_le else w
+
+    return _shmap(body, ctx, 5)(planes, src, dst, la, lb, les)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("with_le", "direction", "interpret"))
+def _vertex_collective(spec, ctx, planes, v, lv, les, *, with_le, direction,
+                       interpret):
+    _count("vertex", "collective")
+    from repro.kernels.vertex_scan.ops import vertex_query_planes
+
+    def body(planes, v, lv, les):
+        w, wl = vertex_query_planes(spec.config, planes, v, (lv, les),
+                                    direction=direction, with_le=with_le,
+                                    interpret=interpret, axis_name=ctx.axis)
+        return wl if with_le else w
+
+    return _shmap(body, ctx, 3)(planes, v, lv, les)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("with_le", "direction"))
+def _label_collective(spec, ctx, planes, lv, les, *, with_le, direction):
+    _count("label", "collective")
+    from repro.kernels.vertex_scan.ops import label_aggregate_planes
+
+    def body(planes, lv, les):
+        w, wl = label_aggregate_planes(spec.config, planes, lv,
+                                       edge_label=les, direction=direction,
+                                       with_le=with_le, axis_name=ctx.axis)
+        return wl if with_le else w
+
+    return _shmap(body, ctx, 2)(planes, lv, les)
+
+
+# --------------------------------------------------------------------------
 # public entry
 # --------------------------------------------------------------------------
 
@@ -323,10 +452,13 @@ def query(spec: SketchSpec, state, q: QueryBatch,
     pytree (the object-shim path) is accepted too and lifted to a 1-shard
     stack *inside* the jitted dispatch (no eager whole-state copy).
 
-    ``path``: "auto" (backend default), "scan" (dense vmapped reference)
-    or "pallas" (shard-axis kernels / compiled lowerings over cached
-    window-reduced planes). Both answer bit-identically (pinned in
-    tests/test_query_path.py).
+    ``path``: "auto" (backend default), "scan" (dense vmapped reference),
+    "pallas" (shard-axis kernels / compiled lowerings over cached
+    window-reduced planes), or "collective" (the same plane walk inside
+    ``shard_map`` over a mesh-resident handle — device-local shard blocks,
+    device-resident plane cache, psum reduction; requires ``place``).
+    All answer bit-identically (pinned in tests/test_query_path.py and
+    tests/test_multidevice.py).
     """
     path = resolve_query_path(spec, path)
     stacked = isinstance(state, ShardedState)
@@ -344,7 +476,12 @@ def query(spec: SketchSpec, state, q: QueryBatch,
         with_le = le is not None
         les = as_i32(le, n) if with_le else jnp.zeros_like(src)
         src, dst, la, lb, les = pad_all(n, src, dst, la, lb, les)
-        if path == "pallas":
+        if path == "collective":
+            ctx = _collective_ctx(spec, state)
+            planes = query_planes(spec, state, last, collective=True)
+            out = _edge_collective(spec, ctx, planes, src, dst, la, lb, les,
+                                   with_le=with_le, interpret=interpret)
+        elif path == "pallas":
             planes = query_planes(spec, state, last)
             out = _edge_pallas(spec, planes, src, dst, la, lb, les,
                                with_le=with_le, interpret=interpret)
@@ -363,7 +500,13 @@ def query(spec: SketchSpec, state, q: QueryBatch,
         with_le = le is not None
         les = as_i32(le, n) if with_le else jnp.zeros_like(v)
         v, lv, les = pad_all(n, v, lv, les)
-        if path == "pallas":
+        if path == "collective":
+            ctx = _collective_ctx(spec, state)
+            planes = query_planes(spec, state, last, collective=True)
+            out = _vertex_collective(spec, ctx, planes, v, lv, les,
+                                     with_le=with_le, direction=q.direction,
+                                     interpret=interpret)
+        elif path == "pallas":
             planes = query_planes(spec, state, last)
             out = _vertex_pallas(spec, planes, v, lv, les, with_le=with_le,
                                  direction=q.direction, interpret=interpret)
@@ -386,7 +529,12 @@ def query(spec: SketchSpec, state, q: QueryBatch,
         with_le = le is not None
         les = as_i32(le, n) if with_le else jnp.zeros_like(lv)
         lv, les = pad_all(n, lv, les)
-        if path == "pallas":
+        if path == "collective":
+            ctx = _collective_ctx(spec, state)
+            planes = query_planes(spec, state, last, collective=True)
+            out = _label_collective(spec, ctx, planes, lv, les,
+                                    with_le=with_le, direction=q.direction)
+        elif path == "pallas":
             planes = query_planes(spec, state, last)
             out = _label_pallas(spec, planes, lv, les, with_le=with_le,
                                 direction=q.direction)

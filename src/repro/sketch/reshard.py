@@ -1,0 +1,228 @@
+"""Key-space resharding: balanced shard-count changes (DESIGN.md §9.3).
+
+``reshard(spec, state, n_shards)`` re-partitions a sharded handle's
+*contents* across a new shard count. The naive alternatives both pile
+history: shrinking by ``merge_all`` drops everything into shard 0, and
+growing by appending empty shards leaves all history where it was (all of
+it in shard 0 when growing from a 1-shard checkpoint) — fresh ingest then
+balances while the historical mass never moves.
+
+The re-partition is a decode + re-insert over the sketch's *key space*:
+
+  1. **decode** every occupied matrix cell and pool entry — of every
+     shard — into a relocatable record, under ``merge_all``'s per-slot
+     window reconciliation (counters in ring slots a lagging shard never
+     re-claimed are dropped, exactly as the merge's keep-mask drops them;
+     the global max ``slot_widx``/``cur_widx`` become the ring bookkeeping
+     of every output shard). Unlike ``merge_all`` itself, no key *union*
+     is taken — each record walks with its own true key — so the decode is
+     exact even for cross-shard-contended states the merge would refuse.
+     Key reversibility (the same H^-1 the successor scan uses) recovers
+     both endpoints' packed vertex identities ``(m, s, f)`` from a cell's
+     address + stored key, and the packed vid fully determines the probe
+     walk — so a record is ``(vid_src, vid_dst, C[k], P[k, c])`` with its
+     complete addressing derivable. (The modular inverse is exact whenever
+     block widths divide 2^32 — true for every power-of-two ``d /
+     n_blocks`` layout, the same caveat as the successor reconstruction.)
+  2. route each record by ``shard_assignment_vids`` (the key-space twin of
+     the ingest hash — raw ids are not recoverable from cells) and
+     **replay first-fit insertion** per target shard: matrix probe walk in
+     paper order, pool fallback, ``pool_lost`` on saturation. Records that
+     share an endpoint pair land in one cell/slot and their counters add.
+
+Guarantees (tested in tests/test_reshard.py):
+
+  * **vertex/label queries are conserved exactly** (they sum all matching
+    cells — records keep their counters and stay matchable at whatever
+    probe position first-fit lands them, because every probe position of a
+    source lies in its candidate rows and stores that position's key);
+  * **edge queries stay one-sided** (``est >= truth``, or the honest
+    ``est >= truth - pool_lost`` under saturation): a record's own weight
+    is always findable — the query walk follows the same first-fit rule
+    the replay used — while *collision* contributions may shift either
+    way as co-located keys scatter across shards;
+  * **occupancy balances** across the new shards (the point).
+
+LGS is refused: count-min cells store no keys, so there is no key space
+to re-partition (restore keeps its merge-into-shard-0 path for LGS).
+Future occurrences of an edge still route by the ingest-time raw-id hash,
+which need not agree with the vid routing — weight then splits across two
+shards; queries sum shards, so answers are unaffected (only later
+``shards_compatible`` exactness may be given up, as documented there).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing as hsh
+from repro.core.lsketch import VertexAddressing, edge_probes
+from repro.core.types import EMPTY
+
+from .spec import SketchSpec, shard_assignment_vids
+from .state import ShardedState
+
+
+def _addressing_from_vids(cfg, vids):
+    """Rebuild full probe addressing from packed (m, s, f) identities —
+    the decode direction of ``precompute`` (cf. ``_edge_exists_by_vid``)."""
+    vids = jnp.asarray(vids, jnp.int32)
+    m, s, f = hsh.unpack_vertex_id(vids, cfg.F)
+    starts, widths = cfg.block_start_width()
+    return VertexAddressing(m, starts[m], widths[m], s, f,
+                            hsh.candidate_offsets(f, cfg.r), vids)
+
+
+def _cell_vids(cfg, rows, cols, keys):
+    """Invert (cell address, packed key) -> (vid_src, vid_dst): the stored
+    (ia, fa) fields identify the row as the ia-th candidate of the source,
+    so ``s(A) = (row_rel - offs(fA)[iA]) mod width`` (successor-scan math);
+    symmetrically for the column with (ib, fb)."""
+    k = jnp.asarray(keys, jnp.int32)
+    ia, ib, fa, fb = hsh.unpack_key(k, cfg.F)
+    starts, widths = cfg.block_start_width()
+
+    def one(lines, idx, f):
+        m = jnp.searchsorted(starts, lines, side="right") - 1
+        off = jnp.take_along_axis(hsh.candidate_offsets(f, cfg.r),
+                                  idx[:, None].astype(jnp.int32), -1)[:, 0]
+        s = (lines - starts[m] - off) % widths[m]
+        return hsh.pack_vertex_id(m, s, f, cfg.F)
+
+    return (np.asarray(one(jnp.asarray(rows, jnp.int32), ia, fa)),
+            np.asarray(one(jnp.asarray(cols, jnp.int32), ib, fb)))
+
+
+def _decode_records(cfg, shards):
+    """Decode a stacked ``[S, ...]`` shard state into relocatable records.
+
+    Applies the per-slot window reconciliation before reading counters
+    (``keep[s, slot] = slot_widx[s, slot] == max_s slot_widx[., slot]`` —
+    a lagging shard's stale counters are exactly what the combined stream
+    already expired), then flattens every occupied cell and pool entry of
+    every shard. Returns (vid_src, vid_dst, C [R, k], P [R, k, c]).
+    """
+    slot_widx = np.max(np.asarray(shards.slot_widx), axis=0)  # [k]
+    keep = np.asarray(shards.slot_widx) == slot_widx[None]    # [S, k]
+
+    key = np.asarray(shards.key)  # [S, d, d, 2]
+    si, rows, cols, tz = np.nonzero(key != EMPTY)
+    vid_src, vid_dst = _cell_vids(cfg, rows, cols, key[si, rows, cols, tz])
+    C = np.asarray(shards.C)[si, rows, cols, tz] * keep[si]
+    Pm = np.asarray(shards.P)[si, rows, cols, tz] * keep[si][:, :, None]
+
+    pool_key = np.asarray(shards.pool_key)  # [S, Q, 2]
+    sp, slots = np.nonzero(pool_key[:, :, 0] != EMPTY)
+    return (
+        np.concatenate([vid_src, pool_key[sp, slots, 0]]),
+        np.concatenate([vid_dst, pool_key[sp, slots, 1]]),
+        np.concatenate([C, np.asarray(shards.pool_C)[sp, slots] * keep[sp]]),
+        np.concatenate([Pm, np.asarray(shards.pool_P)[sp, slots]
+                        * keep[sp][:, :, None]]),
+    )
+
+
+def _replay(cfg, n_shards, assign, vid_src, vid_dst, rec_C, rec_P, d):
+    """First-fit re-insertion of decoded records into ``n_shards`` fresh
+    shard states (host-side numpy — resharding is an administrative op).
+
+    Probe order matches the insert loop exactly: probe-major, twin-minor
+    over the s sampled cells, then the pool's open-addressing sequence;
+    the claimed cell stores *that position's* packed key (each probe
+    position packs its own candidate indices).
+    """
+    pa = _addressing_from_vids(cfg, vid_src)
+    pb = _addressing_from_vids(cfg, vid_dst)
+    pr = edge_probes(cfg, pa, pb)
+    rows = np.asarray(pr.rows)          # [R, s]
+    cols = np.asarray(pr.cols)
+    keys = np.asarray(pr.keys)
+    pool_seq = np.asarray(hsh.pool_slot_seq(
+        pa.vid, pb.vid, cfg.pool_capacity, cfg.pool_probes, cfg.seed))
+
+    kk, cc = rec_C.shape[1], rec_P.shape[2]
+    Q = cfg.pool_capacity
+    key = np.full((n_shards, d, d, 2), EMPTY, np.int32)
+    C = np.zeros((n_shards, d, d, 2, kk), rec_C.dtype)
+    Pn = np.zeros((n_shards, d, d, 2, kk, cc), rec_P.dtype)
+    pool_key = np.full((n_shards, Q, 2), EMPTY, np.int32)
+    pool_C = np.zeros((n_shards, Q, kk), rec_C.dtype)
+    pool_P = np.zeros((n_shards, Q, kk, cc), rec_P.dtype)
+    pool_lost = np.zeros((n_shards,), np.int64)
+
+    s_probes = rows.shape[1]
+    for i in range(len(assign)):
+        sh = int(assign[i])
+        placed = False
+        for p in range(s_probes):
+            r, c = rows[i, p], cols[i, p]
+            for t in (0, 1):
+                cur = key[sh, r, c, t]
+                if cur == keys[i, p] or cur == EMPTY:
+                    key[sh, r, c, t] = keys[i, p]
+                    C[sh, r, c, t] += rec_C[i]
+                    Pn[sh, r, c, t] += rec_P[i]
+                    placed = True
+                    break
+            if placed:
+                break
+        if not placed:
+            for q in pool_seq[i]:
+                pk = pool_key[sh, q]
+                if (pk[0] == vid_src[i] and pk[1] == vid_dst[i]) \
+                        or pk[0] == EMPTY:
+                    pool_key[sh, q] = (vid_src[i], vid_dst[i])
+                    pool_C[sh, q] += rec_C[i]
+                    pool_P[sh, q] += rec_P[i]
+                    placed = True
+                    break
+        if not placed:
+            pool_lost[sh] += int(rec_C[i].sum())
+
+    return key, C, Pn, pool_key, pool_C, pool_P, pool_lost
+
+
+def reshard(spec: SketchSpec, state: ShardedState,
+            n_shards: int) -> ShardedState:
+    """Re-partition a handle's contents across ``n_shards`` balanced
+    shards (see module docstring for the algorithm and guarantees).
+
+    Returns the new ``ShardedState`` for ``spec.replace(n_shards=
+    n_shards)``; the input handle is not consumed. Like every producer,
+    the result is a fresh handle (cold plane cache, no MeshContext —
+    ``place`` it again if it should stay mesh-resident).
+    """
+    if spec.kind == "lgs":
+        raise NotImplementedError(
+            "LGS stores no keys — there is no key space to re-partition; "
+            "restore keeps the merge-into-shard-0 path for LGS")
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+
+    cfg = spec.config
+    shards = state.shards
+    vid_src, vid_dst, rec_C, rec_P = _decode_records(cfg, shards)
+    target = spec.replace(n_shards=n_shards)
+    assign = shard_assignment_vids(target, vid_src)
+    d = np.asarray(shards.key).shape[1]
+    key, C, Pn, pool_key, pool_C, pool_P, pool_lost = _replay(
+        cfg, n_shards, assign, vid_src, vid_dst, rec_C, rec_P, d)
+
+    # pre-reshard saturation losses are global history; keep them on shard 0
+    pool_lost[0] += int(np.sum(np.asarray(shards.pool_lost)))
+    slot_widx = np.max(np.asarray(shards.slot_widx), axis=0)
+    cur_widx = np.max(np.asarray(shards.cur_widx))
+    new = type(shards)(
+        key=jnp.asarray(key),
+        C=jnp.asarray(C), P=jnp.asarray(Pn),
+        pool_key=jnp.asarray(pool_key),
+        pool_C=jnp.asarray(pool_C), pool_P=jnp.asarray(pool_P),
+        pool_lost=jnp.asarray(pool_lost.astype(
+            np.asarray(shards.pool_lost).dtype)),
+        slot_widx=jnp.asarray(
+            np.broadcast_to(slot_widx[None], (n_shards,) + slot_widx.shape)),
+        cur_widx=jnp.asarray(np.full((n_shards,), cur_widx,
+                                     np.asarray(shards.cur_widx).dtype)),
+    )
+    return ShardedState(shards=new)

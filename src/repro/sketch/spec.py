@@ -131,6 +131,26 @@ def _hash31_np(x: np.ndarray, seed: int) -> np.ndarray:
     return (h & np.uint32(0x7FFFFFFF)).astype(np.int32)
 
 
+def shard_assignment_vids(spec: SketchSpec, vids) -> np.ndarray:
+    """Key-space shard routing for ``reshard``: route by the packed
+    sketch-side vertex identity ``(m, s, f)`` of the *source* endpoint.
+
+    A sketch state stores only packed identities — the raw ``(src,
+    src_label)`` pair behind ``shard_assignment`` is not recoverable from
+    cells (the hash is lossy) — so decoded records re-partition on the vid
+    instead. All cells/pool entries of one source entity share its vid, so
+    a logical edge's whole history lands on one shard; the routing is a
+    pure function of (seed, vid) like the ingest-time hash, just over a
+    different (coarser) key space, salted apart from it.
+    """
+    vids = np.asarray(vids, np.int64)
+    if spec.n_shards == 1:
+        return np.zeros(vids.shape, np.int32)
+    mixed = vids.astype(np.uint32) * np.uint32(2654435761)
+    h = _hash31_np(mixed, spec.seed ^ _SHARD_SALT ^ 0x7E5)
+    return (h % np.int32(spec.n_shards)).astype(np.int32)
+
+
 def shard_assignment(spec: SketchSpec, src, src_label=None) -> np.ndarray:
     """Shard id of every edge: ``hash31(mix(src, src_label)) % n_shards``.
 

@@ -19,6 +19,8 @@ stale planes behind.
 from __future__ import annotations
 
 import functools
+import warnings
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -74,19 +76,87 @@ def unstack_state(state: ShardedState, shard: int = 0):
 
 
 # --------------------------------------------------------------------------
-# device placement
+# device placement + mesh context (DESIGN.md §9)
 # --------------------------------------------------------------------------
+
+# host-side handle attribute carrying the MeshContext. Like the query-plane
+# cache (DESIGN.md §8) it hangs off the handle *object*, never the pytree:
+# it does not traverse jit, checkpointing, or donation, and every
+# state-producing op decides explicitly whether to propagate it.
+_MESH_ATTR = "_mesh_ctx"
+
+# (n_shards, n_devices, axis) triples already warned about — the
+# silent-replication warning fires once per distinct mismatch, not per call
+_replication_warned: set = set()
+
+
+@dataclass(frozen=True)
+class MeshContext:
+    """Where a handle's shard axis lives: a mesh and the axis name the
+    leading ``[n_shards]`` dimension is laid over.
+
+    Attached to the handle by ``place`` (or ``with_mesh``) and propagated
+    by every mesh-preserving producer (``ingest``, the AsyncIngestor's
+    dispatches). It is what makes the handle *mesh-resident*: the
+    ``path="collective"`` query and the device-resident plane cache read
+    the mesh from here instead of round-tripping shard partials through
+    the host.
+    """
+
+    mesh: Any
+    axis: str = "data"
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def divides(self, n_shards: int) -> bool:
+        """True iff the shard axis actually shards over this mesh axis
+        (``named_shardings`` replicates otherwise)."""
+        return n_shards % self.n_devices == 0
+
+
+def mesh_context(state) -> MeshContext | None:
+    """The ``MeshContext`` attached to a handle, or None (host-resident)."""
+    return getattr(state, _MESH_ATTR, None)
+
+
+def with_mesh(state: ShardedState, ctx: MeshContext | None) -> ShardedState:
+    """Attach a ``MeshContext`` to a handle (returns the same object).
+
+    ``place`` does this automatically; use directly when the state is
+    already laid out (e.g. restored under a mesh by other machinery) and
+    only the context is missing.
+    """
+    if ctx is not None:
+        object.__setattr__(state, _MESH_ATTR, ctx)
+    return state
+
 
 def named_shardings(spec: SketchSpec, mesh, axis: str = "data"):
     """A ShardedState-shaped tree of ``NamedSharding``s that lays the shard
     axis over ``mesh.shape[axis]`` (checkpoint-restore placement tree).
 
     Mirrors the divisibility guard of ``distributed.sharding_ctx``: when the
-    mesh axis doesn't divide ``n_shards`` the state is replicated rather
-    than erroring, so the same code serves every (n_shards x mesh) cell.
+    mesh axis doesn't divide ``n_shards`` the state is **replicated** rather
+    than erroring, so the same code serves every (n_shards x mesh) cell —
+    but replication silently forfeits the memory and collective-query wins,
+    so the mismatch warns once per (n_shards, mesh, axis) triple.
     """
     n_dev = int(mesh.shape[axis])
-    spec_axis = axis if spec.n_shards % n_dev == 0 else None
+    if not MeshContext(mesh=mesh, axis=axis).divides(spec.n_shards):
+        key = (spec.n_shards, n_dev, axis)
+        if key not in _replication_warned:
+            _replication_warned.add(key)
+            warnings.warn(
+                f"mesh axis {axis!r} has {n_dev} devices, which does not "
+                f"divide n_shards={spec.n_shards}: the sketch state will be "
+                "fully replicated on every device (correct, but no memory "
+                "scaling and no collective query). Pick n_shards as a "
+                f"multiple of {n_dev} to shard.", UserWarning, stacklevel=2)
+        spec_axis = None
+    else:
+        spec_axis = axis
     target = jax.eval_shape(lambda: create(spec))
     return jax.tree.map(
         lambda leaf: NamedSharding(
@@ -96,13 +166,17 @@ def named_shardings(spec: SketchSpec, mesh, axis: str = "data"):
 
 def place(spec: SketchSpec, state: ShardedState, mesh,
           axis: str = "data") -> ShardedState:
-    """Place the handle's shard axis over a mesh axis (``NamedSharding``).
+    """Place the handle's shard axis over a mesh axis (``NamedSharding``)
+    and attach the ``MeshContext`` that makes the handle mesh-resident.
 
     Subsequent jitted ``ingest``/``query`` calls partition over the shard
     axis automatically (the vmapped per-shard computation is embarrassingly
-    parallel, so GSPMD keeps every shard's insert local to its device).
+    parallel, so GSPMD keeps every shard's insert local to its device);
+    ``query(..., path="collective")`` additionally keeps the *reduction*
+    device-side (`shard_map` + psum, DESIGN.md §9).
     """
-    return jax.device_put(state, named_shardings(spec, mesh, axis))
+    placed = jax.device_put(state, named_shardings(spec, mesh, axis))
+    return with_mesh(placed, MeshContext(mesh=mesh, axis=axis))
 
 
 # --------------------------------------------------------------------------

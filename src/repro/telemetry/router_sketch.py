@@ -23,6 +23,21 @@ and reshards like any train-state leaf. The sketch update runs OFF the
 critical path (counts are tiny host transfers, inserted asynchronously
 between steps); the capacity-factor controller reads windowed expert load
 to adjust cfg.capacity_factor — the beyond-paper integration.
+
+Telemetry at scale (the ROADMAP decision): with ``mesh=`` the sharded
+handle goes mesh-resident and controller reads default to the
+``collective`` query path (DESIGN.md §9) — per-device shard blocks,
+device-resident plane cache, one psum of the *answers*. The alternative,
+all-reducing whole sketches with ``core.merge.psum_sketch`` and querying
+the reduced state, moves the full ``[d, d, 2, k, c]`` counter planes
+through the interconnect on every read; the same-run A/B on the 8-fake-
+device mesh (``kernel_bench --quick``, rows ``telemetry_handle_x8`` vs
+``telemetry_psum_x8`` in BENCH_engine.json) measures the handle path
+~2x faster (6.3 ms vs 13.5 ms per load_vector) even with zero real
+interconnect cost — fake devices share one CPU, so the gap on hardware
+only widens — so the MoE controller defaults to it; ``psum_sketch``
+stays the right tool only when a *plain* merged state is needed (e.g.
+exporting one sketch artifact per step).
 """
 
 from __future__ import annotations
@@ -47,7 +62,9 @@ class RouterTelemetry:
     subwindows: int = 8
     d: int = 128
     n_shards: int = 1  # hash-partitioned sketch shards
-    query_path: str = "auto"  # "scan" | "pallas" | backend default
+    query_path: str = "auto"  # "scan" | "pallas" | "collective" | default
+    mesh: "object | None" = None  # lay the shard axis over mesh axis `axis`
+    axis: str = "data"
 
     def __post_init__(self):
         self.cfg = LSketchConfig(
@@ -57,6 +74,17 @@ class RouterTelemetry:
         self.spec = skt.SketchSpec(kind="lsketch", config=self.cfg,
                                    n_shards=self.n_shards)
         self.state = skt.create(self.spec)
+        if self.mesh is not None:
+            ctx = skt.MeshContext(mesh=self.mesh, axis=self.axis)
+            self.state = skt.place(self.spec, self.state, self.mesh,
+                                   axis=self.axis)
+            if self.query_path == "auto" and ctx.divides(self.n_shards):
+                # the benchmarked telemetry-at-scale default (module
+                # docstring): collective handle reads beat psum_sketch.
+                # A non-dividing layout replicates (place already warned)
+                # and keeps the host-path default — collective would
+                # refuse it at every read.
+                self.query_path = "collective"
         # vertex ids: buckets [0, n_buckets); experts [n_buckets, ...)
         self._expert_base = self.n_buckets
 

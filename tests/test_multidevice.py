@@ -1,21 +1,33 @@
 """Multi-device behaviors via subprocess (8 fake CPU devices): the dry-run
 lower+compile machinery on a small mesh, sharded train-step numerics vs
-single-device, and checkpoint resharding across different mesh shapes."""
+single-device, checkpoint resharding across different mesh shapes, and the
+mesh-resident sketch layer (DESIGN.md §9) — collective query parity with
+the host paths, ingest residency, and the named_shardings divisibility
+branches. The exhaustive collective sweep (kinds x shards x window
+positions incl. wraparound + pool overflow, plus compile-count pins) is
+marked ``slow`` and rides the conformance CI job."""
 
+import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
-def _run(code: str) -> str:
+def _run(code: str, timeout: int = 480) -> str:
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "HOME": "/tmp"}
+    # keep the backend pin (when the host has one): without it jax probes
+    # every plugin backend in the child, which can dwarf the actual test
+    # on boxes with accelerator toolchains installed
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=480,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+        capture_output=True, text=True, timeout=timeout, env=env,
     )
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
@@ -96,3 +108,238 @@ def test_checkpoint_reshards_across_meshes():
         print("RESHARD_OK")
     """)
     assert "RESHARD_OK" in stdout
+
+
+# --------------------------------------------------------------------------
+# mesh-resident sketch layer (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+_SKETCH_PRELUDE = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import importlib
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro import sketch as skt
+        # the package re-exports the query *function*; the module needs
+        # importlib (same trick as tests/test_query_path.py)
+        qmod = importlib.import_module("repro.sketch.query")
+        from repro.core import LSketchConfig
+        from repro.core.gss import gss_config
+        from repro.core.types import EdgeBatch
+
+        LS = LSketchConfig(d=64, n_blocks=2, F=512, r=4, s=4, c=4, k=4,
+                           window_size=400, pool_capacity=256, pool_probes=8)
+        GS = gss_config(d=64, r=4, s=4, pool_capacity=256)
+
+        def batch(a):
+            return EdgeBatch(*[jnp.asarray(x, jnp.int32) for x in a])
+
+        def stream(kind, seed=11, n=600, tmax=2400, nv=50):
+            rng = np.random.default_rng(seed)
+            src = rng.integers(0, nv, n).astype(np.int32)
+            dst = rng.integers(0, nv, n).astype(np.int32)
+            le = rng.integers(0, 5, n).astype(np.int32)
+            w = rng.integers(1, 4, n).astype(np.int32)
+            t = np.sort(rng.integers(0, tmax, n)).astype(np.int32)
+            if kind == "gss":
+                z = np.zeros(n, np.int32)
+                return src, dst, z, z, z, w, z
+            return src, dst, src % 3, dst % 3, le, w, t
+
+        def mesh_over(ndev):
+            return jax.sharding.Mesh(np.array(jax.devices()[:ndev]), ("data",))
+
+        # compact (compile-budget-aware) query suite: every kind and both
+        # directions, label-restricted edges, and a time-restricted horizon
+        # for windowed sketches. Static-arg combos are kept lean — each
+        # distinct (kind, with_le, direction, last) pair compiles its own
+        # scan program on this 2-core box.
+        def suite(kind, a):
+            src, dst, la, lb, le, w, t = a
+            lasts = (None,) if kind == "gss" else (None, 1)
+            vs = np.arange(40, dtype=np.int32)
+            for last in lasts:
+                yield skt.QueryBatch.edges(src[:48], la[:48], dst[:48],
+                                           lb[:48], last=last)
+                yield skt.QueryBatch.edges(src[:48], la[:48], dst[:48], lb[:48],
+                                           edge_label=le[:48], last=last)
+                yield skt.QueryBatch.vertices(vs, vs % 3, direction="out",
+                                              last=last)
+                yield skt.QueryBatch.vertices(vs, vs % 3, direction="in",
+                                              last=last)
+                yield skt.QueryBatch.labels(np.arange(4, dtype=np.int32),
+                                            last=last)
+
+        def assert_parity(spec, state, kind, ctx):
+            for qb in suite(kind, ARRS):
+                a = np.asarray(skt.query(spec, state, qb, path="scan"))
+                b = np.asarray(skt.query(spec, state, qb, path="collective"))
+                assert np.array_equal(a, b), (ctx, qb.kind, qb.last,
+                                              qb.direction, a[:6], b[:6])
+"""
+
+
+def test_collective_query_smoke_and_mesh_residency():
+    """Tier-1 smoke: collective == scan on one (kind, shards, mesh) cell;
+    ingest keeps the handle mesh-resident (sharded output + MeshContext);
+    named_shardings warns once on (and only on) the replicated branch."""
+    stdout = _run(_SKETCH_PRELUDE + """
+        import warnings
+        spec = skt.SketchSpec(kind="lsketch", config=LS, n_shards=4)
+        mesh = mesh_over(4)
+        ARRS = stream("lsketch")
+        st = skt.place(spec, skt.create(spec), mesh)
+        st = skt.ingest(spec, st, batch(ARRS))
+        assert skt.mesh_context(st) is not None, "MeshContext lost by ingest"
+        assert not st.shards.C.sharding.is_fully_replicated, \\
+            "ingest gathered the placed state"
+        host = skt.ingest(spec, skt.create(spec), batch(ARRS))
+        assert all(bool(jnp.array_equal(x, y)) for x, y in zip(
+            jax.tree.leaves(st.shards), jax.tree.leaves(host.shards))), \\
+            "placed ingest diverged from host ingest"
+        # full-horizon half of the suite only — the tier-1 compile budget;
+        # the slow sweep covers every horizon x window position
+        for qb in [q for q in suite("lsketch", ARRS) if q.last is None]:
+            a = np.asarray(skt.query(spec, st, qb, path="scan"))
+            b = np.asarray(skt.query(spec, st, qb, path="collective"))
+            assert np.array_equal(a, b), (qb.kind, qb.direction, a[:6], b[:6])
+        print("PARITY_OK")
+
+        # named_shardings: divisible -> sharded (no warning)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            sh = skt.named_shardings(spec, mesh)
+        assert not rec, [str(w.message) for w in rec]
+        assert not sh.shards.C.is_fully_replicated
+        # non-divisible -> replicated, one warning total
+        spec3 = skt.SketchSpec(kind="lsketch", config=LS, n_shards=3)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            sh3 = skt.named_shardings(spec3, mesh)
+            skt.named_shardings(spec3, mesh)  # second call: deduped
+        assert sh3.shards.C.is_fully_replicated
+        assert len(rec) == 1 and "replicated" in str(rec[0].message), \\
+            [str(w.message) for w in rec]
+        print("BRANCHES_OK")
+    """)
+    assert "PARITY_OK" in stdout and "BRANCHES_OK" in stdout
+
+
+@pytest.mark.slow
+def test_collective_query_parity_sweep_lsketch():
+    """The acceptance sweep, LSketch half: path="collective" is
+    bit-identical to path="scan" across shards {4, 8} x mesh layouts (1
+    and 2 shards per device) x window positions — staged ingest, ring
+    wraparound, pool overflow."""
+    stdout = _run(_SKETCH_PRELUDE + """
+        ARRS = stream("lsketch")
+        for ns, ndev in ((4, 4), (8, 8), (8, 4)):
+            spec = skt.SketchSpec(kind="lsketch", config=LS, n_shards=ns)
+            st = skt.place(spec, skt.create(spec), mesh_over(ndev))
+            n = len(ARRS[0]); step = -(-n // 2)
+            for stage, a in enumerate(range(0, n, step)):
+                st = skt.ingest(spec, st, batch(tuple(
+                    x[a:a + step] for x in ARRS)))
+                assert_parity(spec, st, "lsketch",
+                              f"lsketch x{ns}/{ndev}dev s{stage}")
+            print("OK", ns, ndev)
+
+        # ring wrapped far past the stream: planes reduce to the same
+        # (mostly expired) window the dense reference masks
+        spec = skt.SketchSpec(kind="lsketch", config=LS, n_shards=4)
+        ARRS = stream("lsketch", seed=12, n=200, tmax=LS.window_size - 1)
+        st = skt.place(spec, skt.create(spec), mesh_over(4))
+        st = skt.ingest(spec, st, batch(ARRS))
+        late = tuple(np.asarray(x, np.int32) for x in
+                     ([9999], [0], [9998], [0], [0], [1],
+                      [LS.subwindow_size * 40]))
+        st = skt.ingest(spec, st, batch(late))
+        assert_parity(spec, st, "lsketch", "wraparound")
+        print("OK wraparound")
+
+        # saturated pool (pool_lost > 0) answers identically too
+        tiny = LSketchConfig(d=8, n_blocks=2, F=256, r=2, s=2, c=4, k=4,
+                             window_size=400, pool_capacity=8,
+                             pool_probes=2)
+        spec = skt.SketchSpec(kind="lsketch", config=tiny, n_shards=4)
+        ARRS = stream("lsketch", seed=13, n=500, tmax=1500, nv=400)
+        st = skt.place(spec, skt.create(spec), mesh_over(4))
+        st = skt.ingest(spec, st, batch(ARRS))
+        assert int(jnp.sum(st.shards.pool_lost)) > 0
+        assert_parity(spec, st, "lsketch", "pool-overflow")
+        print("OK pool-overflow")
+    """, timeout=1200)
+    assert stdout.count("OK") == 5
+
+
+@pytest.mark.slow
+def test_collective_query_parity_sweep_gss():
+    """The acceptance sweep, GSS half (degenerate normalization: no
+    labels, no window) across shards {4, 8} x mesh layouts."""
+    stdout = _run(_SKETCH_PRELUDE + """
+        ARRS = stream("gss")
+        for ns, ndev in ((4, 4), (8, 8), (8, 4)):
+            spec = skt.SketchSpec(kind="gss", config=GS, n_shards=ns)
+            st = skt.place(spec, skt.create(spec), mesh_over(ndev))
+            n = len(ARRS[0]); step = -(-n // 2)
+            for stage, a in enumerate(range(0, n, step)):
+                st = skt.ingest(spec, st, batch(tuple(
+                    x[a:a + step] for x in ARRS)))
+                assert_parity(spec, st, "gss",
+                              f"gss x{ns}/{ndev}dev s{stage}")
+            print("OK", ns, ndev)
+    """, timeout=1200)
+    assert stdout.count("OK") == 3
+
+
+@pytest.mark.slow
+def test_collective_compile_counts_and_device_plane_cache():
+    """One shard_map program per (kind, bucket); one device-resident plane
+    build per (handle, horizon) — the handle-identity cache contract,
+    unchanged on the mesh."""
+    stdout = _run(_SKETCH_PRELUDE + """
+        spec = skt.SketchSpec(kind="lsketch", config=LS, n_shards=8)
+        ARRS = stream("lsketch", seed=31)
+        st = skt.place(spec, skt.create(spec), mesh_over(8))
+        st = skt.ingest(spec, st, batch(ARRS))
+        src, dst, la, lb = ARRS[0], ARRS[1], ARRS[2], ARRS[3]
+
+        def edge_q(n, last=None):
+            return skt.QueryBatch.edges(src[:n], la[:n], dst[:n], lb[:n],
+                                        last=last)
+
+        before = dict(qmod.QUERY_TRACE_COUNTS)
+        delta = lambda kind: (qmod.QUERY_TRACE_COUNTS.get(
+            (kind, "collective"), 0) - before.get((kind, "collective"), 0))
+        builds0 = qmod.PLANES_BUILD_COUNTS["build"]
+        skt.query(spec, st, edge_q(20), path="collective")   # bucket 32
+        skt.query(spec, st, edge_q(27), path="collective")   # same bucket
+        assert delta("edge") == 1, "same (kind, bucket) retraced"
+        skt.query(spec, st, edge_q(40), path="collective")   # bucket 64
+        n2 = delta("edge")
+        skt.query(spec, st, edge_q(33), path="collective")
+        assert delta("edge") == n2, "repeated bucket retraced"
+        vs = np.arange(20, dtype=np.int32)
+        skt.query(spec, st, skt.QueryBatch.vertices(vs, vs % 3),
+                  path="collective")
+        skt.query(spec, st, skt.QueryBatch.labels([0, 1]),
+                  path="collective")
+        # every query above shares the one full-horizon device plane build
+        assert qmod.PLANES_BUILD_COUNTS["build"] - builds0 == 1, \\
+            qmod.PLANES_BUILD_COUNTS["build"] - builds0
+        # a tighter horizon is a different pure function -> one more build
+        skt.query(spec, st, edge_q(20, last=1), path="collective")
+        assert qmod.PLANES_BUILD_COUNTS["build"] - builds0 == 2
+        # a new handle starts cold (ingest invalidates by construction)
+        st2 = skt.ingest(spec, st, batch(tuple(
+            x[:64] for x in stream("lsketch", seed=32))))
+        skt.query(spec, st2, edge_q(20), path="collective")
+        assert qmod.PLANES_BUILD_COUNTS["build"] - builds0 == 3
+        # the collective planes live under the state's sharding
+        planes = skt.query_planes(spec, st2, collective=True)
+        assert not planes.cw.sharding.is_fully_replicated, \\
+            "device plane cache is not sharded"
+        print("COUNTS_OK")
+    """, timeout=1200)
+    assert "COUNTS_OK" in stdout

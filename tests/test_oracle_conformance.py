@@ -24,9 +24,9 @@ XLA-lowering mode on CPU) and the query path (shard-axis query kernels
 over cached window-reduced planes, DESIGN.md §8), so the one-sidedness
 and no-false-negative guarantees are pinned end-to-end on the kernel
 read path too, across window wraparound and pool overflow. Every run's
-error statistics are appended to ``oracle_error_stats.json`` at the repo
-root — the CI conformance artifact (mean/max relative error, exact-hit
-fraction per run).
+error statistics are written to ``artifacts/oracle_error_stats.json`` —
+a gitignored, CI-uploaded path (generated artifacts stay out of the
+tree) — with mean/max relative error and exact-hit fraction per run.
 
 Marked ``slow``: the CI fast tier runs ``-m "not slow"``; this file rides
 the conformance job.
@@ -53,7 +53,8 @@ LS_CFG = LSketchConfig(d=64, n_blocks=2, F=512, r=4, s=4, c=4, k=4,
 LGS_CFG = LGSConfig(d=64, copies=3, c=4, k=4, window_size=400)
 GSS_CFG = gss_config(d=128)
 
-STATS_PATH = Path(__file__).resolve().parents[1] / "oracle_error_stats.json"
+STATS_PATH = (Path(__file__).resolve().parents[1] / "artifacts"
+              / "oracle_error_stats.json")
 _STATS: dict = {}
 
 
@@ -62,6 +63,7 @@ def _write_stats():
     """Collect per-run error stats; flush the CI artifact at module end."""
     yield
     if _STATS:
+        STATS_PATH.parent.mkdir(parents=True, exist_ok=True)
         STATS_PATH.write_text(json.dumps(_STATS, indent=2, sort_keys=True)
                               + "\n")
 

@@ -1,0 +1,199 @@
+"""Key-space resharding contract (repro.sketch.reshard, DESIGN.md §9.3).
+
+The pins, per the reshard guarantees:
+
+  * grow/shrink round-trips (1 -> 4 -> 1, 4 -> 2) are query-equivalent to
+    straight-line ingest **within the oracle's overestimate-only bound**:
+    vertex/label aggregates are conserved exactly (they sum all matching
+    cells, and records stay matchable wherever first-fit lands them),
+    edge estimates never drop below exact truth (a record's own weight is
+    always findable — the query walk follows the same first-fit rule the
+    replay used), and under pool saturation the bound honestly weakens to
+    ``est >= truth - pool_lost``;
+  * post-reshard occupancy is balanced — no shard-0 pileup (the old
+    restore behavior this replaces);
+  * counters are conserved leaf-for-leaf when nothing new drops;
+  * cross-shard-contended states reshard exactly (the per-shard decode
+    never takes ``merge_all``'s lossy key union);
+  * LGS is refused (no key space to re-partition).
+
+Parametrized over kinds {lsketch, gss} and pool overflow.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import sketch as skt
+from repro.core import EMPTY, LSketchConfig
+from repro.core.gss import gss_config
+from repro.core.types import EdgeBatch
+
+LS_CFG = LSketchConfig(d=64, n_blocks=2, F=512, r=4, s=4, c=4, k=4,
+                       window_size=4000, pool_capacity=512, pool_probes=8)
+GSS_CFG = gss_config(d=64, r=4, s=4, pool_capacity=512)
+TINY_POOL = LSketchConfig(d=8, n_blocks=2, F=256, r=2, s=2, c=4, k=4,
+                          window_size=4000, pool_capacity=8, pool_probes=2)
+
+
+def _stream(kind, seed=0, n=800, n_vertices=60):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n).astype(np.int32)
+    dst = rng.integers(0, n_vertices, n).astype(np.int32)
+    le = rng.integers(0, 5, n).astype(np.int32)
+    w = rng.integers(1, 4, n).astype(np.int32)
+    t = np.sort(rng.integers(0, 3999, n)).astype(np.int32)  # all in-window
+    if kind == "gss":  # GSS normalization: no labels, no time
+        z = np.zeros(n, np.int32)
+        return src, dst, z, z, z, w, z
+    return src, dst, src % 3, dst % 3, le, w, t
+
+
+def _batch(arrays) -> EdgeBatch:
+    return EdgeBatch(*[jnp.asarray(x, jnp.int32) for x in arrays])
+
+
+def _truth(arrays):
+    """Exact edge weights (everything in-window by construction)."""
+    src, dst, la, lb, le, w, t = arrays
+    out = {}
+    for i in range(len(src)):
+        k = (int(src[i]), int(la[i]), int(dst[i]), int(lb[i]))
+        out[k] = out.get(k, 0) + int(w[i])
+    return out
+
+
+def _queries(arrays, n_vertices=60):
+    src, dst, la, lb, le, w, t = arrays
+    return (skt.QueryBatch.edges(src[:64], la[:64], dst[:64], lb[:64]),
+            skt.QueryBatch.vertices(np.arange(n_vertices, dtype=np.int32),
+                                    np.arange(n_vertices, dtype=np.int32)
+                                    % 3))
+
+
+def _edge_truths(arrays, n=64):
+    src, dst, la, lb = arrays[0], arrays[1], arrays[2], arrays[3]
+    t = _truth(arrays)
+    return np.array([t[(int(src[i]), int(la[i]), int(dst[i]), int(lb[i]))]
+                     for i in range(n)])
+
+
+def _occupancy(state):
+    return np.asarray(jnp.sum(state.shards.key != EMPTY, axis=(1, 2, 3)))
+
+
+@pytest.mark.parametrize("kind", ["lsketch", "gss"])
+def test_reshard_roundtrip_grow_shrink(kind):
+    cfg = LS_CFG if kind == "lsketch" else GSS_CFG
+    arrays = _stream(kind)
+    spec1 = skt.SketchSpec(kind=kind, config=cfg, n_shards=1)
+    st1 = skt.ingest(spec1, skt.create(spec1), _batch(arrays))
+    qe, qv = _queries(arrays)
+    tr = _edge_truths(arrays)
+    base_v = np.asarray(skt.query(spec1, st1, qv))
+
+    # 1 -> 4: balanced, vertex-conserved, edge one-sided
+    spec4 = spec1.replace(n_shards=4)
+    r4 = skt.reshard(spec1, st1, 4)
+    assert r4.n_shards == 4
+    assert np.array_equal(np.asarray(skt.query(spec4, r4, qv)), base_v)
+    est = np.asarray(skt.query(spec4, r4, qe))
+    assert np.all(est >= tr), (kind, est[:8], tr[:8])
+    occ = _occupancy(r4)
+    assert occ.min() > 0 and occ.max() < 0.6 * occ.sum(), occ
+    # counters conserved leaf-for-leaf (no drops at this pool size)
+    assert int(jnp.sum(r4.shards.pool_lost)) == int(st1.shards.pool_lost[0])
+    assert int(jnp.sum(r4.shards.C)) + int(jnp.sum(r4.shards.pool_C)) == \
+        int(jnp.sum(st1.shards.C)) + int(jnp.sum(st1.shards.pool_C))
+
+    # 4 -> 1 (round-trip) and 4 -> 2 (shrink)
+    for m in (1, 2):
+        specm = spec1.replace(n_shards=m)
+        rm = skt.reshard(spec4, r4, m)
+        assert np.array_equal(np.asarray(skt.query(specm, rm, qv)), base_v)
+        est = np.asarray(skt.query(specm, rm, qe))
+        assert np.all(est >= tr), (kind, m)
+
+
+@pytest.mark.parametrize("kind", ["lsketch", "gss"])
+def test_restore_reshards_balanced_no_shard0_pileup(kind, tmp_path):
+    """The regression this feature exists for: a 1-shard checkpoint
+    restored at 4 shards used to put every byte of history into shard 0."""
+    cfg = LS_CFG if kind == "lsketch" else GSS_CFG
+    arrays = _stream(kind, seed=1)
+    spec1 = skt.SketchSpec(kind=kind, config=cfg, n_shards=1)
+    st1 = skt.ingest(spec1, skt.create(spec1), _batch(arrays))
+    skt.save(spec1, st1, tmp_path)
+
+    spec4 = spec1.replace(n_shards=4)
+    restored = skt.restore(spec4, tmp_path)
+    occ = _occupancy(restored)
+    assert occ.min() > 0, f"empty shard after restore-reshard: {occ}"
+    assert occ.max() < 0.6 * occ.sum(), f"shard pileup: {occ}"
+    qe, qv = _queries(arrays)
+    assert np.array_equal(np.asarray(skt.query(spec4, restored, qv)),
+                          np.asarray(skt.query(spec1, st1, qv)))
+    assert np.all(np.asarray(skt.query(spec4, restored, qe))
+                  >= _edge_truths(arrays))
+
+
+def test_reshard_under_pool_overflow_honest_bound():
+    """With a saturated pool the one-sided bound honestly weakens to
+    ``est >= truth - pool_lost`` — and reshard keeps the accounting:
+    replay drops land in pool_lost, pre-reshard losses are carried."""
+    arrays = _stream("lsketch", seed=2, n=500, n_vertices=400)
+    spec1 = skt.SketchSpec(kind="lsketch", config=TINY_POOL, n_shards=1)
+    st1 = skt.ingest(spec1, skt.create(spec1), _batch(arrays))
+    lost_before = int(st1.shards.pool_lost[0])
+    assert lost_before > 0, "stream must saturate the pool"
+
+    spec4 = spec1.replace(n_shards=4)
+    r4 = skt.reshard(spec1, st1, 4)
+    lost_after = int(jnp.sum(r4.shards.pool_lost))
+    assert lost_after >= lost_before  # carried + any replay drops
+    qe = skt.QueryBatch.edges(arrays[0][:64], arrays[2][:64],
+                              arrays[1][:64], arrays[3][:64])
+    est = np.asarray(skt.query(spec4, r4, qe))
+    tr = _edge_truths(arrays)
+    assert np.all(est >= tr - lost_after), (est[:8], tr[:8], lost_after)
+
+
+def test_reshard_contended_state_exact_vertex_conservation():
+    """Cross-shard cell contention (which merge_all must refuse) reshards
+    exactly: the per-shard decode walks every record with its true key."""
+    cfg = LS_CFG.replace(d=32, s=2)  # small matrix: contention certain
+    arrays = _stream("lsketch", seed=3)
+    spec4 = skt.SketchSpec(kind="lsketch", config=cfg, n_shards=4)
+    st4 = skt.ingest(spec4, skt.create(spec4), _batch(arrays))
+    assert not bool(skt.shards_compatible(spec4, st4))
+
+    qe, qv = _queries(arrays)
+    base_v = np.asarray(skt.query(spec4, st4, qv))
+    for m in (2, 8):
+        specm = spec4.replace(n_shards=m)
+        rm = skt.reshard(spec4, st4, m)
+        assert np.array_equal(np.asarray(skt.query(specm, rm, qv)), base_v)
+        assert np.all(np.asarray(skt.query(specm, rm, qe))
+                      >= _edge_truths(arrays)), m
+
+
+def test_reshard_refuses_lgs():
+    spec = skt.make_spec("lgs", d=32, copies=2, c=4, k=4, window_size=400)
+    with pytest.raises(NotImplementedError, match="key space"):
+        skt.reshard(spec, skt.create(spec), 4)
+
+
+def test_reshard_fresh_handle_contract():
+    """reshard returns a fresh handle: cold plane cache, no MeshContext,
+    input not consumed (still queryable)."""
+    arrays = _stream("lsketch", seed=4, n=200)
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=2)
+    st = skt.ingest(spec, skt.create(spec), _batch(arrays))
+    qv = _queries(arrays)[1]
+    before = np.asarray(skt.query(spec, st, qv, path="pallas"))  # warm cache
+    r = skt.reshard(spec, st, 4)
+    assert skt.mesh_context(r) is None
+    from repro.sketch.query import _PLANES_ATTR
+    assert not getattr(r, _PLANES_ATTR, None)
+    # input handle untouched
+    assert np.array_equal(np.asarray(skt.query(spec, st, qv)), before)

@@ -260,6 +260,12 @@ def test_shard_assignment_is_deterministic_and_balanced():
 # --------------------------------------------------------------------------
 
 def test_checkpoint_roundtrip_same_and_different_shard_count(tmp_path):
+    """Same-count restore is bit-exact; a different count triggers the
+    key-space ``reshard`` (balanced re-partition): vertex aggregates are
+    conserved exactly, occupancy spreads over every target shard instead
+    of piling into shard 0, and the handle keeps ingesting correctly.
+    (Deeper reshard pins — one-sidedness vs an exact oracle, round-trips,
+    pool overflow — live in tests/test_reshard.py.)"""
     arrays = _overflow_stream(CFG, seed=8, n_hot=200, n_cold=600)
     src, dst, la, lb, le, w, t = arrays
     spec4 = skt.make_spec("lsketch", n_shards=4, config=CFG)
@@ -270,46 +276,50 @@ def test_checkpoint_roundtrip_same_and_different_shard_count(tmp_path):
     same = skt.restore(spec4, tmp_path)
     assert _states_equal(state, same)
 
-    q = skt.QueryBatch.edges(src[:64], la[:64], dst[:64], lb[:64])
-    # shrink (4 -> 2): exact because this stream's shards are compatible
-    spec2 = spec4.replace(n_shards=2)
-    resharded = skt.restore(spec2, tmp_path)
-    assert resharded.n_shards == 2
-    assert np.array_equal(skt.query(spec2, resharded, q),
-                          skt.query(spec4, state, q))
-    # grow (4 -> 6): exact for any state (new shards start empty)
-    spec6 = spec4.replace(n_shards=6)
-    grown = skt.restore(spec6, tmp_path)
-    assert grown.n_shards == 6
-    assert np.array_equal(skt.query(spec6, grown, q),
-                          skt.query(spec4, state, q))
-    # and the resharded handles keep ingesting correctly
-    more = _batch(tuple(x[:128] for x in arrays))
-    r2 = skt.ingest(spec2, resharded, more)
-    s2 = skt.ingest(spec4, state, more)
-    assert np.array_equal(skt.query(spec2, r2, q), skt.query(spec4, s2, q))
+    qv = skt.QueryBatch.vertices(src[:64], la[:64])
+    base_v = skt.query(spec4, state, qv)
+    for m in (2, 6):  # shrink and grow
+        specm = spec4.replace(n_shards=m)
+        resharded = skt.restore(specm, tmp_path)
+        assert resharded.n_shards == m
+        assert np.array_equal(skt.query(specm, resharded, qv), base_v)
+        occ = np.asarray(jnp.sum(resharded.shards.key != EMPTY,
+                                 axis=(1, 2, 3)))
+        # this stream has only 8 distinct source entities (by design), so
+        # full balance is not expectable at m=6 — pin no-pileup instead
+        # (fine-grained balance is pinned in tests/test_reshard.py)
+        assert np.count_nonzero(occ) >= min(m, 4), f"pileup at {m}: {occ}"
+        assert occ.max() < occ.sum(), f"single-shard pileup at {m}: {occ}"
+        # and the resharded handle keeps ingesting correctly (vertex
+        # aggregates sum all matching cells, so placement is invisible)
+        more = _batch(tuple(x[:128] for x in arrays))
+        rm = skt.ingest(specm, resharded, more)
+        s4 = skt.ingest(spec4, skt.restore(spec4, tmp_path), more)
+        assert np.array_equal(skt.query(specm, rm, qv),
+                              skt.query(spec4, s4, qv))
 
     with pytest.raises(ValueError):
         skt.restore(skt.make_spec("lsketch", config=CFG.replace(seed=1)),
                     tmp_path)
 
 
-def test_checkpoint_shrink_refuses_contended_shards(tmp_path):
-    """An incompatible (contended) 4-shard checkpoint must refuse a lossy
-    shrink-merge instead of silently degrading answers."""
+def test_checkpoint_reshard_handles_contended_shards(tmp_path):
+    """A cross-shard-contended checkpoint — which the old merge-based
+    shrink had to refuse — reshards fine: the per-shard decode never takes
+    the lossy key union, so vertex aggregates are conserved exactly in
+    both directions."""
     arrays = random_stream(np.random.default_rng(1), n=400)
     cfg = CFG.replace(d=32, s=4)  # small matrix: contention certain
     spec = skt.make_spec("lsketch", n_shards=4, config=cfg)
     state = skt.ingest(spec, skt.create(spec), _batch(arrays))
     assert not bool(skt.shards_compatible(spec, state))
     skt.save(spec, state, tmp_path)
-    with pytest.raises(ValueError, match="not exactly mergeable"):
-        skt.restore(spec.replace(n_shards=2), tmp_path)
-    grown = skt.restore(spec.replace(n_shards=8), tmp_path)  # grow is fine
-    q = skt.QueryBatch.edges(arrays[0][:32], arrays[2][:32],
-                             arrays[1][:32], arrays[3][:32])
-    assert np.array_equal(skt.query(spec.replace(n_shards=8), grown, q),
-                          skt.query(spec, state, q))
+    qv = skt.QueryBatch.vertices(arrays[0][:32], arrays[2][:32])
+    base_v = skt.query(spec, state, qv)
+    for m in (2, 8):
+        resharded = skt.restore(spec.replace(n_shards=m), tmp_path)
+        assert np.array_equal(
+            skt.query(spec.replace(n_shards=m), resharded, qv), base_v), m
 
 
 # --------------------------------------------------------------------------
