@@ -13,7 +13,11 @@ the noise. Checks:
   * the mesh-resident collective path (device plane cache + psum of
     answers) beats the host fan-out on the same placed 8-shard state —
     the DESIGN.md §9 acceptance A/B, measured in the fake-device child
-    (``kernel_bench --mesh-child``) within one run like every other gate.
+    (``kernel_bench --mesh-child``) within one run like every other gate;
+  * the mixed ingest/query serving loop with incremental plane
+    maintenance (DESIGN.md §10: delta-apply each flush into the cached
+    planes) beats the flush-rebuild baseline, and the isolated
+    delta-apply step beats the cold plane build, both at 4 shards.
 
 ``python -m benchmarks.check_bench [path-to-json]`` — exits nonzero with
 a diagnostic when a gate fails or the rows are missing.
@@ -31,6 +35,11 @@ GATES = [
     ("query_pallas_cached_x4", "query_pallas_cold_x4"),
     ("query_collective_cached_x8", "query_scan_mesh_x8"),
     ("query_collective_cached_x8", "query_collective_cold_x8"),
+    # §10 mixed ingest/query serving: incremental plane maintenance must
+    # beat rebuilding the cache on every flush, end-to-end and on the
+    # isolated cache-refresh step
+    ("mixed_serve_incremental_x4", "mixed_serve_rebuild_x4"),
+    ("planes_delta_apply_x4", "planes_cold_build_x4"),
 ]
 
 METRIC = "total_s"

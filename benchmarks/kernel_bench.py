@@ -339,6 +339,130 @@ def query_path_throughput(n=16384, q=2048, shard_counts=(1, 4)):
     return rows
 
 
+def mixed_serve_throughput(n=4096, q=1024, rounds=6, n_shards=4):
+    """Mixed ingest/query serving loop (DESIGN.md §10): alternating
+    flush+query rounds on one sharded handle — the paper's time-sensitive
+    serving scenario, where PR-4's cache previously died on every flush.
+
+      * ``mixed_serve_incremental_x{S}`` — plane cache maintained across
+        flushes by folding each flush's ``PlanesDelta`` into the cached
+        planes (the §10 path);
+      * ``mixed_serve_rebuild_x{S}``     — cache dropped after every
+        flush (the pre-§10 behavior): each round's first query re-pays
+        the full ``[d,d,2,k,c]`` window reduction.
+
+    Every batch lands in the live subwindow (constant ``t``) — the steady
+    serving state between window advances, exactly where the delta path
+    is valid; the seed flush (slot resets from a fresh ring) happens in
+    the untimed warmup lineage build. ``us_q_p50``/``us_q_p99`` are
+    per-round query latencies pooled across iterations. Two focused rows
+    isolate the cache-refresh step itself after one flush:
+
+      * ``planes_delta_apply_x{S}`` — ``query_planes`` resolving the
+        pending delta chain;
+      * ``planes_cold_build_x{S}``  — ``query_planes`` after
+        ``clear_plane_cache`` (full rebuild).
+
+    Same ``_timed_medians``/alternation discipline; ``check_bench.py``
+    gates incremental < rebuild and delta-apply < cold-build same-run.
+    """
+    import time as _time
+    from repro import sketch as skt
+    from repro.sketch.query import clear_plane_cache
+
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=1024)
+    rng = np.random.default_rng(0)
+    spec = skt.make_spec("lsketch", n_shards=n_shards, config=cfg)
+    bs = max(n // rounds, 1)
+
+    def mk_batch():
+        b = _batch(rng, bs, n_vlabels=32)
+        t = np.full(bs, 3, np.int32)  # live subwindow: no ring movement
+        return EdgeBatch(b.src, b.dst, b.src_label, b.dst_label,
+                         b.edge_label, b.weight, jnp.asarray(t))
+
+    batches = [mk_batch() for _ in range(rounds)]
+    seed_batch = mk_batch()
+    vs = jnp.asarray(rng.integers(0, 500, q), jnp.int32)
+    qb = skt.QueryBatch.vertices(vs, (vs % 32).astype(jnp.int32),
+                                 edge_label=jnp.asarray(
+                                     rng.integers(0, 6, q), jnp.int32),
+                                 direction="out")
+    warmup, iters = 1, 3
+
+    def fresh():
+        # seed flush claims the ring slot (reset -> delta invalid by
+        # design) and the first query builds the cache + compiles — all
+        # untimed, so the timed rounds measure steady-state serving
+        st = skt.ingest(spec, skt.create(spec), seed_batch, path="scan")
+        jax.block_until_ready(skt.query(spec, st, qb, path="pallas"))
+        return st
+
+    lineages = {tag: [fresh() for _ in range(warmup + iters)]
+                for tag in ("incremental", "rebuild")}
+    qtimes = {"incremental": [], "rebuild": []}
+
+    def run(tag):
+        st = lineages[tag].pop()
+        lat = []
+        for b in batches:
+            st = skt.ingest(spec, st, b, path="scan")
+            if tag == "rebuild":
+                clear_plane_cache(st)  # drops cache AND pending chain
+            t0 = _time.perf_counter()
+            out = skt.query(spec, st, qb, path="pallas")
+            jax.block_until_ready(out)
+            lat.append(_time.perf_counter() - t0)
+        qtimes[tag].append(lat)
+        return st
+
+    medians = _timed_medians(
+        [("mixed_serve_incremental", lambda: run("incremental")),
+         ("mixed_serve_rebuild", lambda: run("rebuild"))],
+        warmup=warmup, iters=iters)
+
+    # focused cache-refresh A/B: flush once, then time query_planes via
+    # the delta chain vs after a cache clear (the clear's cold build also
+    # re-warms the cache, feeding the next iteration's delta apply)
+    st = fresh()
+    apply_t, build_t = [], []
+    for _ in range(warmup + iters):
+        st = skt.ingest(spec, st, mk_batch(), path="scan")
+        t0 = _time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(skt.query_planes(spec, st)))
+        apply_t.append(_time.perf_counter() - t0)
+        clear_plane_cache(st)
+        t0 = _time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(skt.query_planes(spec, st)))
+        build_t.append(_time.perf_counter() - t0)
+
+    rows, result = [], {}
+    for tag in ("incremental", "rebuild"):
+        dt = medians[f"mixed_serve_{tag}"]
+        pooled = np.concatenate(qtimes[tag][warmup:]) * 1e6 / q
+        p50, p99 = float(np.percentile(pooled, 50)), \
+            float(np.percentile(pooled, 99))
+        rows.append([f"mixed_serve_{tag}_x{n_shards}", rounds, q, n_shards,
+                     f"{p50:.3f}", f"{p99:.3f}", f"{dt:.4f}"])
+        result[f"mixed_serve_{tag}_x{n_shards}"] = {
+            "rounds": rounds, "queries_per_round": q, "shards": n_shards,
+            "edges_per_flush": bs, "us_per_query_p50": p50,
+            "us_per_query_p99": p99, "total_s": dt}
+    for tag, ts in (("planes_delta_apply", apply_t),
+                    ("planes_cold_build", build_t)):
+        dt = float(np.median(ts[warmup:]))
+        rows.append([f"{tag}_x{n_shards}", 1, "-", n_shards, "-", "-",
+                     f"{dt:.5f}"])
+        result[f"{tag}_x{n_shards}"] = {"shards": n_shards,
+                                        "edges_per_flush": bs, "total_s": dt}
+    write_csv("mixed_serve_throughput",
+              ["impl", "rounds", "queries", "shards", "us_q_p50", "us_q_p99",
+               "total_s"], rows)
+    _merge_bench(result)
+    return rows
+
+
 def collective_query_throughput(n=2048, q=1024, n_shards=8):
     """Mesh-resident query comparison on the fake-device mesh (run inside
     the ``--mesh-child`` process): the same label-restricted vertex batch
@@ -547,6 +671,11 @@ def main(argv=None):
         print("impl,queries,shards,us_per_query,total_s")
         for r in qrows:
             print(",".join(str(x) for x in r))
+        mrows = mixed_serve_throughput(n=n, q=512 if args.quick else 2048,
+                                       rounds=4 if args.quick else 6)
+        print("impl,rounds,queries,shards,us_q_p50,us_q_p99,total_s")
+        for r in mrows:
+            print(",".join(str(x) for x in r))
         if not args.no_mesh:
             mesh_rows_subprocess(args.quick)
         return
@@ -567,6 +696,11 @@ def main(argv=None):
     qrows = query_path_throughput(n=n, q=1024 if args.quick else 2048)
     print("impl,queries,shards,us_per_query,total_s")
     for r in qrows:
+        print(",".join(str(x) for x in r))
+    mrows = mixed_serve_throughput(n=n, q=512 if args.quick else 2048,
+                                   rounds=4 if args.quick else 6)
+    print("impl,rounds,queries,shards,us_q_p50,us_q_p99,total_s")
+    for r in mrows:
         print(",".join(str(x) for x in r))
     if not args.no_mesh:
         mesh_rows_subprocess(args.quick)

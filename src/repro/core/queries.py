@@ -83,6 +83,64 @@ def build_query_planes(cfg: LSketchConfig, state: LSketchState,
     )
 
 
+@pytree_dataclass
+class PlanesDelta:
+    """Additive contribution of one ingest flush to cached ``QueryPlanes``
+    (DESIGN.md §10). The planes are linear in the C/P/pool counters under a
+    fixed validity mask, so a flush that neither resets a ring slot nor
+    advances ``cur_widx`` changes every horizon's planes by exactly the
+    counter increments it wrote — all of which land in one ring slot per
+    shard (the flush was a single subwindow segment). The engine emits this
+    record from the same segment plan that drove the insert; ``ok`` gates
+    applicability on the device (no host sync inside the ingest dispatch).
+
+    ok      : []            single-segment AND no slot reset, every shard —
+                            the ring (and hence every mask) is unchanged
+    slot    : [S]           the one ring slot each shard's flush touched
+    d_c     : [S, d, d, 2]  C increment at that slot (post - pre)
+    d_p     : [S, d, d, 2, c]
+    d_pool_c: [S, Q]
+    d_pool_p: [S, Q, c]
+    """
+
+    ok: jax.Array
+    slot: jax.Array
+    d_c: jax.Array
+    d_p: jax.Array
+    d_pool_c: jax.Array
+    d_pool_p: jax.Array
+
+
+def apply_planes_delta(cfg: LSketchConfig, state: LSketchState,
+                       planes: QueryPlanes, delta: PlanesDelta,
+                       last: int | None = None) -> QueryPlanes:
+    """Fold one flush's ``PlanesDelta`` into cached planes for horizon
+    ``last`` — bit-identical to ``build_query_planes(cfg, state, last)``
+    whenever ``delta.ok`` holds (int32 addition is exactly associative, so
+    adding the masked slot increment equals re-reducing all ``k`` slots).
+
+    ``state`` is the post-flush state (its ring equals the pre-flush ring
+    under ``ok``); the touched slot's increment only counts where that slot
+    is inside this horizon's validity mask — a flush into an already-expired
+    subwindow contributes to ``last=None`` planes but not to a tighter
+    horizon's, exactly as the full rebuild masks it. Keys and pool keys are
+    structural pass-throughs recomputed from the new state (first-fit may
+    have claimed empty cells). Traced; compose inside a jitted caller."""
+    mask = jax.vmap(lambda st: valid_slot_mask(cfg, st, last))(state)  # [S, k]
+    live = jnp.take_along_axis(mask, delta.slot[:, None], axis=1)[:, 0]  # [S]
+    mC = live.astype(planes.cw.dtype)
+    return QueryPlanes(
+        key=jnp.moveaxis(state.key, 3, 1),
+        cw=planes.cw + jnp.moveaxis(delta.d_c * mC[:, None, None, None],
+                                    3, 1),
+        pw=planes.pw + jnp.moveaxis(delta.d_p * mC[:, None, None, None, None],
+                                    3, 1),
+        pool_key=state.pool_key,
+        pool_cw=planes.pool_cw + delta.d_pool_c * mC[:, None],
+        pool_pw=planes.pool_pw + delta.d_pool_p * mC[:, None, None],
+    )
+
+
 def _win_weights(cfg: LSketchConfig, state: LSketchState, C_slots, P_slots,
                  le_idx, mask):
     """GETWEIGHTSINM: reduce counter lists over valid subwindow slots.

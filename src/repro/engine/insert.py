@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import hashing as hsh
 from repro.core.lsketch import edge_probes, insert_window_batch, precompute
+from repro.core.queries import PlanesDelta
 from repro.core.types import EMPTY, EdgeBatch, LSketchConfig, LSketchState
 
 from .window import WindowRing, pad_to_bucket
@@ -188,10 +189,26 @@ _insert_batch_fused = functools.partial(
 # stacked (shard-axis) insertion — the repro.sketch ingest backend
 # --------------------------------------------------------------------------
 
+def _touched_slot_slices(states: LSketchState, slot):
+    """Per-shard counter slices at ring slot ``slot`` (int32 [S]) — the
+    only slot a single-segment flush writes. C/P slice on the slot axis
+    (axis 4 of [S, d, d, 2, k(, c)]), pool planes on axis 2."""
+    sl = slot.astype(jnp.int32)
+    c = jnp.take_along_axis(
+        states.C, sl[:, None, None, None, None], axis=4)[..., 0]
+    p = jnp.take_along_axis(
+        states.P, sl[:, None, None, None, None, None], axis=4)[..., 0, :]
+    pc = jnp.take_along_axis(states.pool_C, sl[:, None, None], axis=2)[..., 0]
+    pp = jnp.take_along_axis(
+        states.pool_P, sl[:, None, None, None], axis=2)[..., 0, :]
+    return c, p, pc, pp
+
+
 def insert_stacked_fused_impl(cfg: LSketchConfig, states: LSketchState,
                               batch: EdgeBatch, n_valid: jax.Array,
                               use_pallas: bool = False,
-                              interpret: bool = True) -> LSketchState:
+                              interpret: bool = True,
+                              emit_delta: bool = False):
     """One dispatch for a whole ``[n_shards, B]`` hash-partitioned batch.
 
     ``states``/``batch`` carry a leading ``[n_shards]`` axis on every leaf;
@@ -207,6 +224,15 @@ def insert_stacked_fused_impl(cfg: LSketchConfig, states: LSketchState,
     (``matrix_insert_binned_sharded``, grid (n_shards, n_blocks,
     n_blocks)); otherwise a vmapped ``lax.scan`` replays each shard in
     stream order. Both live under one ``lax.cond`` in one jitted dispatch.
+
+    With ``emit_delta`` (static) the return value is ``(states, delta)``
+    where ``delta`` is the ``core.queries.PlanesDelta`` of this flush —
+    the touched-slot counter increments, sliced inside this dispatch
+    because the caller's input buffers are donated (there is no "before"
+    to diff against once we return). ``delta.ok`` is False whenever any
+    shard's flush spanned several subwindows or reset a ring slot; the
+    slices are then meaningless and the caller must rebuild planes cold
+    (DESIGN.md §10).
 
     Semantics are bit-identical to vmapping ``insert_batch_fused_impl``
     over the shard axis (property-tested in tests/test_sketch_api.py).
@@ -245,23 +271,43 @@ def insert_stacked_fused_impl(cfg: LSketchConfig, states: LSketchState,
                 cfg, s_st, s_pr, s_le, s_sl, s_wc, s_wk, s_v)
         )(st, probes, le_idx, plan.slot, w_count, w_key, valid)
 
+    # single-segment test: every shard's valid prefix is one subwindow.
+    # Gates the sharded kernel (each shard's items then share
+    # plan.slot[s, 0] and count_live == key_live — the kernel's contract,
+    # shard by shard) and the delta record (all writes land in one slot).
+    if use_pallas or emit_delta:
+        one_segment_all = jnp.all(jax.vmap(
+            lambda wdx, v: _segment_count(jnp.where(v, wdx, wdx[0])))(
+                widx, valid) == jnp.int32(1))
+
+    touched = plan.slot[:, 0]
+    if emit_delta:
+        pre = _touched_slot_slices(states, touched)
+
     if not use_pallas:
-        return scan_path(states)
+        out = scan_path(states)
+    else:
+        from repro.kernels.sketch_insert.ops import \
+            matrix_insert_binned_sharded
 
-    from repro.kernels.sketch_insert.ops import matrix_insert_binned_sharded
+        def pallas_path(st):
+            return matrix_insert_binned_sharded(
+                cfg, st, probes, le_idx, w_count, touched,
+                max_bin=B, interpret=interpret)
 
-    def pallas_path(st):
-        return matrix_insert_binned_sharded(
-            cfg, st, probes, le_idx, w_count, plan.slot[:, 0],
-            max_bin=B, interpret=interpret)
+        out = jax.lax.cond(one_segment_all, pallas_path, scan_path, states)
 
-    # kernel-eligible iff every shard's valid prefix is one subwindow: then
-    # each shard's items share plan.slot[s, 0] and count_live == key_live —
-    # the sharded kernel's contract, shard by shard.
-    one_segment_all = jnp.all(jax.vmap(
-        lambda wdx, v: _segment_count(jnp.where(v, wdx, wdx[0])))(
-            widx, valid) == jnp.int32(1))
-    return jax.lax.cond(one_segment_all, pallas_path, scan_path, states)
+    if not emit_delta:
+        return out
+    post = _touched_slot_slices(out, touched)
+    # no reset anywhere <=> the ring is unchanged (a cur_widx advance
+    # implies a reset), so every horizon's validity mask is unchanged and
+    # the slot increment is the exact planes delta
+    ok = one_segment_all & ~jnp.any(plan.reset)
+    delta = PlanesDelta(ok=ok, slot=touched,
+                        d_c=post[0] - pre[0], d_p=post[1] - pre[1],
+                        d_pool_c=post[2] - pre[2], d_pool_p=post[3] - pre[3])
+    return out, delta
 
 
 # (the stacked impl is jitted by its one frontend, repro.sketch.ingest —

@@ -66,10 +66,11 @@ class SketchServer:
     def __init__(self, spec: "skt.SketchSpec", max_batch: int = 4096,
                  state: "skt.ShardedState | None" = None,
                  pipeline: bool = True, query_path: str = "auto",
-                 mesh=None, axis: str = "data"):
+                 mesh=None, axis: str = "data", prewarm: bool = True):
         self.spec = spec
         self.pipeline = pipeline
         self.query_path = query_path
+        self.prewarm = prewarm
         # a pre-placed handle already carries its layout — honor it
         ctx = skt.mesh_context(state) if state is not None else None
         if ctx is None and mesh is not None:
@@ -106,6 +107,27 @@ class SketchServer:
         self._ingestor.submit(batch)
         if not self.pipeline:
             self._ingestor.flush()
+        self._prewarm()
+
+    def _prewarm(self, last=None, handle=None) -> None:
+        """Keep the plane cache hot off the query path (DESIGN.md §10).
+
+        Runs on the *dispatched* handle — the staged pipeline batch stays
+        staged, so prewarming never collapses the partition/dispatch
+        overlap. Each call folds the flush's delta chain (or, after a
+        window advance, pays the rebuild here instead of inside the first
+        query). No-op for the scan path: it reads raw counters.
+        """
+        if not self.prewarm:
+            return
+        path = skt.resolve_query_path(self.spec, self.query_path)
+        if path == "scan":
+            return
+        h = handle if handle is not None else self._ingestor.dispatched
+        if h is None:
+            return
+        skt.query_planes(self.spec, h, last,
+                         collective=(path == "collective"))
 
     # ---- queries ----
     def submit(self, kind: str, **args) -> QueryRequest:
@@ -126,6 +148,9 @@ class SketchServer:
         groups: Dict[tuple, List[QueryRequest]] = {}
         for r in self.pending:
             groups.setdefault(self._group_key(r), []).append(r)
+        for last in {g[2] for g in groups}:
+            # post-flush handle: .state drains the ingest pipeline first
+            self._prewarm(last, handle=self.state)
         for (kind, with_le, last, direction), reqs in groups.items():
             a = {k: np.asarray([r.args[k] for r in reqs], np.int32)
                  for k in reqs[0].args if _batch_axis(reqs, k)}
@@ -192,6 +217,10 @@ def main(argv=None):
                          "--shards for the collective path")
     ap.add_argument("--collective", action="store_true",
                     help="shorthand for --query-path collective")
+    ap.add_argument("--no-prewarm", action="store_true",
+                    help="skip keeping the plane cache hot across ingest "
+                         "flushes; the first query after a flush pays the "
+                         "delta-apply or rebuild inline")
     args = ap.parse_args(argv)
     if args.collective:
         args.query_path = "collective"
@@ -217,7 +246,8 @@ def main(argv=None):
     server = SketchServer(build_spec(args.sketch, spec.window_size,
                                      n_shards=args.shards),
                           pipeline=not args.no_pipeline,
-                          query_path=args.query_path, mesh=mesh)
+                          query_path=args.query_path, mesh=mesh,
+                          prewarm=not args.no_prewarm)
 
     from repro.engine.insert import TRACE_COUNTS
     traces_before = TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]

@@ -58,6 +58,7 @@ from repro.engine.window import pad_to_bucket
 
 from .spec import SketchSpec, shard_assignment
 from .state import ShardedState, create, mesh_context, with_mesh
+from . import query as _query
 
 _FIELDS = ("src", "dst", "src_label", "dst_label", "edge_label", "weight",
            "time")
@@ -138,13 +139,14 @@ def _partition_stack(spec: SketchSpec, batch: EdgeBatch):
 
 
 @functools.partial(jax.jit, static_argnums=(0,),
-                   static_argnames=("use_pallas", "interpret"),
+                   static_argnames=("use_pallas", "interpret", "emit_delta"),
                    donate_argnums=1)
 def _ingest_stacked_lsketch(cfg, shards, batch: EdgeBatch, n_valid,
-                            use_pallas=False, interpret=False):
+                            use_pallas=False, interpret=False,
+                            emit_delta=False):
     return eng_insert.insert_stacked_fused_impl(
         cfg, shards, batch, n_valid, use_pallas=use_pallas,
-        interpret=interpret)
+        interpret=interpret, emit_delta=emit_delta)
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=1)
@@ -175,10 +177,18 @@ def _dispatch_stacked(spec: SketchSpec, state: ShardedState, stacked,
     ``ingest`` and ``AsyncIngestor``); donates the input handle. A
     mesh-resident handle (``place``) keeps its residency: the partition is
     placed under the same shard-axis sharding and the new handle carries
-    the MeshContext forward."""
+    the MeshContext forward.
+
+    Plane propagation (DESIGN.md §10): when the consumed handle carries
+    cached ``QueryPlanes`` (or an unresolved delta chain), the dispatch
+    also emits this flush's ``PlanesDelta`` and hangs the
+    ``(parent planes, chain)`` off the fresh handle, so the next query
+    can delta-apply instead of rebuilding. The emission flag is static —
+    a handle that was never queried ingests with zero delta overhead."""
     ctx = mesh_context(state)
     if ctx is not None and ctx.divides(spec.n_shards):
         stacked, n_valid = _place_partition(ctx, stacked, n_valid)
+    delta = carry = None
     if spec.kind == "lgs":
         shards = _ingest_stacked_lgs(spec.config.key(), state.shards,
                                      stacked, n_valid)
@@ -186,13 +196,19 @@ def _dispatch_stacked(spec: SketchSpec, state: ShardedState, stacked,
         path = eng_insert.resolve_path(spec.config, path)
         if path == "chunked":
             raise ValueError("the stacked ingest has no chunked path")
+        carry = _query.planes_delta_base(state)
         # interpret only matters on the Pallas branch: interpret-mode off
         # TPU so CPU CI exercises the kernel logic, compiled on TPU
-        shards = _ingest_stacked_lsketch(
+        out = _ingest_stacked_lsketch(
             spec.config, state.shards, stacked, n_valid,
             use_pallas=path == "pallas",
-            interpret=jax.default_backend() != "tpu")
-    return with_mesh(ShardedState(shards=shards), ctx)
+            interpret=jax.default_backend() != "tpu",
+            emit_delta=carry is not None)
+        shards, delta = out if carry is not None else (out, None)
+    new = with_mesh(ShardedState(shards=shards), ctx)
+    if carry is not None:
+        _query.attach_planes_delta(new, carry[0], carry[1], delta)
+    return new
 
 
 def ingest(spec: SketchSpec, state: ShardedState, batch: EdgeBatch,
@@ -270,6 +286,14 @@ class AsyncIngestor:
     def state(self) -> ShardedState:
         """The handle with every submitted batch applied (implicit flush)."""
         return self.flush()
+
+    @property
+    def dispatched(self) -> ShardedState:
+        """The live handle with every *dispatched* batch applied — unlike
+        ``state`` this does **not** flush the staged batch, so a serving
+        loop can pre-warm its plane cache (``repro.sketch.query_planes``)
+        without collapsing the pipeline's one-batch stagger."""
+        return self._state
 
     @property
     def pending(self) -> int:

@@ -74,12 +74,21 @@ from .state import ShardedState, mesh_context
 
 # trace-time counters keyed by (kind, path) — tests assert one jitted
 # program per (kind, bucket, path) by reading these before/after a
-# workload; ("planes", "build") counts plane-builder traces and
-# PLANES_BUILD_COUNTS["build"] counts host-side cache misses (builds).
+# workload; ("planes", "build")/("planes", "delta") count plane-builder /
+# delta-apply traces; PLANES_BUILD_COUNTS counts host-side cache misses:
+# "build" full rebuilds, "delta" misses resolved by folding pending flush
+# deltas into the parent handle's planes (DESIGN.md §10).
 QUERY_TRACE_COUNTS: dict = {}
-PLANES_BUILD_COUNTS = {"build": 0}
+PLANES_BUILD_COUNTS = {"build": 0, "delta": 0}
 
 _PLANES_ATTR = "_query_planes_cache"
+_PENDING_ATTR = "_planes_pending"
+
+# Longest delta chain a handle will resolve before falling back to a full
+# rebuild: N un-queried flushes cost N sequential applies at the next
+# query, and past a few links one fused rebuild is both cheaper and frees
+# the chain's buffers. 8 covers any realistic serving cadence.
+MAX_DELTA_CHAIN = 8
 
 
 def _count(kind: str, path: str) -> None:
@@ -247,16 +256,115 @@ def _build_planes_collective(spec, mesh, axis, shards, *, horizon):
                      check_rep=False)(shards)
 
 
+@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("horizon",))
+def _apply_planes_delta(spec, shards, planes, delta, *, horizon):
+    """Fold one flush's ``PlanesDelta`` into cached host planes — the warm
+    path of an ingest-flush cache miss. Same global-``cur_widx``
+    reconciliation as ``_build_planes`` (unchanged by construction when
+    ``delta.ok`` held, so the masks match the cached planes')."""
+    _count("planes", "delta")
+    shards = _with_global_window(shards)
+    return _q.apply_planes_delta(spec.config, shards, planes, delta, horizon)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("horizon",))
+def _apply_planes_delta_collective(spec, mesh, axis, shards, planes, delta,
+                                   *, horizon):
+    """Device-resident delta apply: each device folds its local shard
+    block's increment into its local plane block — mesh planes survive a
+    flush without a device-wide rebuild. ``delta.ok`` is a scalar, so the
+    delta's in_specs are spelled per leaf (everything else shards on the
+    mesh axis like the planes)."""
+    _count("planes", "delta")
+
+    def body(sh, pl, dl):
+        g = jax.lax.pmax(jnp.max(sh.cur_widx, axis=0), axis)
+        sh = dataclasses.replace(
+            sh, cur_widx=jnp.broadcast_to(g, sh.cur_widx.shape))
+        return _q.apply_planes_delta(spec.config, sh, pl, dl, horizon)
+
+    dspec = _q.PlanesDelta(ok=P(), slot=P(axis), d_c=P(axis), d_p=P(axis),
+                           d_pool_c=P(axis), d_pool_p=P(axis))
+    return shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), dspec),
+                     out_specs=P(axis), check_rep=False)(shards, planes,
+                                                         delta)
+
+
+def planes_delta_base(state):
+    """The ``(base planes dict, prior delta chain)`` the next ingest flush
+    should extend, or None when the handle carries nothing a delta could
+    keep warm (then the flush skips delta emission entirely — a pure-ingest
+    workload pays zero overhead). Called by ``repro.sketch.ingest`` on the
+    handle it is about to consume."""
+    cache = getattr(state, _PLANES_ATTR, None)
+    if cache:
+        # resolved planes on this handle: one fresh link suffices
+        return dict(cache), []
+    pend = getattr(state, _PENDING_ATTR, None)
+    if pend is not None and len(pend[1]) < MAX_DELTA_CHAIN:
+        return pend
+    return None
+
+
+def attach_planes_delta(state, base: dict, chain: list, delta) -> None:
+    """Hang a pending ``(base planes, delta chain + [delta])`` off a fresh
+    ingest handle — same host-attribute idiom as the plane cache itself
+    (never traverses jit/donation; resolved lazily by ``query_planes``)."""
+    object.__setattr__(state, _PENDING_ATTR, (base, chain + [delta]))
+
+
+def _resolve_pending(spec, state, ckey, horizon, collective):
+    """Try to serve a plane-cache miss by folding the handle's pending
+    flush deltas into the parent's cached planes. Returns the planes, or
+    None when incrementality does not hold (any link's flush reset a ring
+    slot / advanced the window / spanned several subwindows — the ring
+    moved, so the chain is useless for *every* horizon and is dropped) or
+    the parent never cached this horizon."""
+    pend = getattr(state, _PENDING_ATTR, None)
+    if pend is None:
+        return None
+    base, deltas = pend
+    if ckey not in base:
+        return None
+    for d in deltas:
+        # one device read per link, paid on the first query of the handle
+        # (which was about to block on the flush results anyway)
+        if not bool(d.ok):
+            object.__setattr__(state, _PENDING_ATTR, None)
+            return None
+    planes = base[ckey]
+    # all links ok => the ring never moved across the chain, so every
+    # link's mask equals the final state's — apply them all under it
+    if collective:
+        ctx = _collective_ctx(spec, state)
+        for d in deltas:
+            planes = _apply_planes_delta_collective(
+                spec, ctx.mesh, ctx.axis, state.shards, planes, d,
+                horizon=horizon)
+    else:
+        for d in deltas:
+            planes = _apply_planes_delta(spec, state.shards, planes, d,
+                                         horizon=horizon)
+    PLANES_BUILD_COUNTS["delta"] += 1
+    return planes
+
+
 def query_planes(spec: SketchSpec, state, last=None, *,
                  collective: bool = False):
     """The window-reduced ``QueryPlanes`` for ``(state, last)``, memoized
     on the state object (handles are immutable — every ingest/restore/
     merge returns a new one, so a hit is always exact). Horizons that
     alias the same validity mask (``last=None`` vs ``last>=k``) share one
-    entry. With ``collective=True`` the planes are built and kept under
-    the handle's mesh sharding (one device-resident entry per horizon,
-    same identity contract — the cache key just gains the layout). Public
-    so serving loops can pre-warm the cache after a flush.
+    entry. A miss on a fresh ingest handle first tries the incremental
+    path — folding the flush's ``PlanesDelta`` chain into the parent
+    handle's cached planes (DESIGN.md §10) — and rebuilds from the full
+    counters only when the flush moved the ring or the parent had nothing
+    cached for this horizon. With ``collective=True`` the planes are built
+    and kept under the handle's mesh sharding (one device-resident entry
+    per horizon, same identity contract — the cache key just gains the
+    layout; the delta path applies device-locally via ``shard_map``).
+    Public so serving loops can pre-warm the cache after a flush.
     """
     k = spec.config.effective_k
     horizon = k if last is None else min(int(last), k)
@@ -266,26 +374,31 @@ def query_planes(spec: SketchSpec, state, last=None, *,
         object.__setattr__(state, _PLANES_ATTR, cache)
     ckey = ("collective", horizon) if collective else horizon
     if ckey not in cache:
-        PLANES_BUILD_COUNTS["build"] += 1
-        if collective:
-            ctx = _collective_ctx(spec, state)
-            cache[ckey] = _build_planes_collective(
-                spec, ctx.mesh, ctx.axis, state.shards, horizon=horizon)
-        else:
-            stacked = isinstance(state, ShardedState)
-            shards = state.shards if stacked else state
-            cache[ckey] = _build_planes(spec, shards, horizon=horizon,
-                                        stacked=stacked)
+        planes = _resolve_pending(spec, state, ckey, horizon, collective)
+        if planes is None:
+            PLANES_BUILD_COUNTS["build"] += 1
+            if collective:
+                ctx = _collective_ctx(spec, state)
+                planes = _build_planes_collective(
+                    spec, ctx.mesh, ctx.axis, state.shards, horizon=horizon)
+            else:
+                stacked = isinstance(state, ShardedState)
+                shards = state.shards if stacked else state
+                planes = _build_planes(spec, shards, horizon=horizon,
+                                       stacked=stacked)
+        cache[ckey] = planes
     return cache[ckey]
 
 
 def clear_plane_cache(state) -> None:
-    """Drop any memoized ``QueryPlanes`` from a handle. Never needed for
-    correctness (state-producing ops return fresh handles); benchmarks use
-    it to time the cold path, and it frees plane memory on a handle that
-    will only be checkpointed."""
+    """Drop any memoized ``QueryPlanes`` — and any pending flush-delta
+    chain — from a handle. Never needed for correctness (state-producing
+    ops return fresh handles); benchmarks use it to time the cold path,
+    and it frees plane memory on a handle that will only be checkpointed."""
     if getattr(state, _PLANES_ATTR, None):
         object.__setattr__(state, _PLANES_ATTR, {})
+    if getattr(state, _PENDING_ATTR, None) is not None:
+        object.__setattr__(state, _PENDING_ATTR, None)
 
 
 # --------------------------------------------------------------------------

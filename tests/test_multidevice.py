@@ -343,3 +343,60 @@ def test_collective_compile_counts_and_device_plane_cache():
         print("COUNTS_OK")
     """, timeout=1200)
     assert "COUNTS_OK" in stdout
+
+
+@pytest.mark.slow
+def test_collective_planes_delta_across_flushes():
+    """DESIGN.md §10 on the mesh: the device-resident plane cache
+    survives ingest flushes via the shard_map'd delta apply — no
+    device-wide rebuild in steady state, results bit-identical to a cold
+    device build, sharding preserved, and collective == scan end-to-end
+    on the delta-maintained handle."""
+    stdout = _run(_SKETCH_PRELUDE + """
+        spec = skt.SketchSpec(kind="lsketch", config=LS, n_shards=8)
+        # dense enough that every one of the 8 shards claims the live
+        # subwindow — a shard that never saw it resets on the first live
+        # flush, which (correctly) invalidates the delta globally
+        ARRS = stream("lsketch", seed=71, n=1600)
+        st = skt.place(spec, skt.create(spec), mesh_over(8))
+        st = skt.ingest(spec, st, batch(ARRS))
+        skt.query_planes(spec, st, collective=True)  # warm device cache
+        b0 = qmod.PLANES_BUILD_COUNTS["build"]
+        d0 = qmod.PLANES_BUILD_COUNTS["delta"]
+
+        def live_batch(seed, tlo=2300, thi=2400, n=64):
+            # single live subwindow (t in [2300, 2400), subwindow 100):
+            # the delta stays valid across every flush
+            rng = np.random.default_rng(seed)
+            src = rng.integers(0, 50, n).astype(np.int32)
+            dst = rng.integers(0, 50, n).astype(np.int32)
+            return batch((src, dst, src % 3, dst % 3,
+                          rng.integers(0, 5, n), rng.integers(1, 4, n),
+                          np.sort(rng.integers(tlo, thi, n))))
+
+        n_flushes = 4
+        for i in range(n_flushes):
+            st = skt.ingest(spec, st, live_batch(72 + i))
+            pl = skt.query_planes(spec, st, collective=True)
+            assert not pl.cw.sharding.is_fully_replicated, \\
+                "delta-applied device planes lost their sharding"
+            inc = jax.tree.leaves(pl)
+            skt.clear_plane_cache(st)
+            cold = jax.tree.leaves(skt.query_planes(spec, st,
+                                                    collective=True))
+            assert all(bool(jnp.array_equal(x, y))
+                       for x, y in zip(inc, cold)), f"flush {i} diverged"
+        assert qmod.PLANES_BUILD_COUNTS["delta"] - d0 == n_flushes
+        # the cold rebuilds forced for the comparison are the ONLY builds
+        assert qmod.PLANES_BUILD_COUNTS["build"] - b0 == n_flushes
+        # ring movement falls back on the mesh too
+        st = skt.ingest(spec, st, live_batch(90, tlo=2400, thi=2500))
+        skt.query_planes(spec, st, collective=True)
+        assert qmod.PLANES_BUILD_COUNTS["build"] - b0 == n_flushes + 1
+        assert qmod.PLANES_BUILD_COUNTS["delta"] - d0 == n_flushes
+        # end-to-end answers on a delta-maintained handle
+        st = skt.ingest(spec, st, live_batch(99, tlo=2400, thi=2500))
+        assert_parity(spec, st, "lsketch", "delta-maintained")
+        print("COLLECTIVE_DELTA_OK")
+    """, timeout=1200)
+    assert "COLLECTIVE_DELTA_OK" in stdout

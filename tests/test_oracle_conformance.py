@@ -333,6 +333,69 @@ def test_wraparound_expires_old_weight_exactly(ns, path):
 
 
 # --------------------------------------------------------------------------
+# mixed ingest/query serving: delta-maintained planes stay conformant
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ns", [1, 4])
+def test_mixed_serving_delta_maintained_planes_conformant(ns):
+    """The serving loop DESIGN.md §10 targets: flush a live-subwindow
+    batch, query, repeat. After the first build the pallas answers ride
+    delta-applied planes; they must stay bit-identical to the scan
+    reference and one-sided vs the oracle at every step — including a
+    mid-loop flush that advances the window (delta invalid -> rebuild)."""
+    import importlib
+    q_mod = importlib.import_module("repro.sketch.query")
+    cfg = LS_CFG
+    spec = skt.SketchSpec(kind="lsketch", config=cfg, n_shards=ns)
+    base = _stream(seed=8, n=900, tmax=2400)
+    oracle = ExactGraph(cfg.effective_k, cfg.subwindow_size)
+    state = skt.ingest(spec, skt.create(spec), _batch(base))
+    oracle.insert_batch(base)
+    rng = np.random.default_rng(9)
+    errs = []
+    d0 = q_mod.PLANES_BUILD_COUNTS["delta"]
+    tmax = 2400
+    for step in range(6):
+        advance = step == 3  # one flush moves the window mid-loop
+        tlo = tmax if advance else tmax - cfg.subwindow_size
+        tmax = max(tmax, tlo + cfg.subwindow_size)
+        m = 64
+        src = rng.integers(0, 50, m).astype(np.int32)
+        dst = rng.integers(0, 50, m).astype(np.int32)
+        chunk = (src, dst, (src % 3).astype(np.int32),
+                 (dst % 3).astype(np.int32),
+                 rng.integers(0, 5, m).astype(np.int32),
+                 rng.integers(1, 4, m).astype(np.int32),
+                 np.sort(rng.integers(
+                     tlo, tlo + cfg.subwindow_size, m)).astype(np.int32))
+        state = skt.ingest(spec, state, _batch(chunk))
+        oracle.insert_batch(chunk)
+        present, absent = _sample_edges(oracle, base)
+        edges = present[::7] + absent
+        qs = np.array([e[0] for e in edges], np.int32)
+        qla = np.array([e[1] for e in edges], np.int32)
+        qd = np.array([e[2] for e in edges], np.int32)
+        qlb = np.array([e[3] for e in edges], np.int32)
+        for last in (None, 2):
+            qb = skt.QueryBatch.edges(qs, qla, qd, qlb, last=last)
+            pal = np.asarray(skt.query(spec, state, qb, path="pallas"))
+            ref = np.asarray(skt.query(spec, state, qb, path="scan"))
+            assert np.array_equal(pal, ref), (
+                f"x{ns} step={step} last={last}: delta-maintained pallas "
+                "diverged from scan")
+            for i, e in enumerate(edges):
+                truth = oracle.edge_weight(*e, last=last)
+                assert pal[i] >= truth, (
+                    f"x{ns} step={step} last={last}: edge {e} "
+                    f"est {pal[i]} < truth {truth}")
+                errs.append((int(pal[i]), truth))
+    # the loop must actually have served from the delta path (steady
+    # steps), not silently rebuilt every time
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] - d0 >= 3
+    _record(f"mixed_serve/lsketch/x{ns}/pallas", errs)
+
+
+# --------------------------------------------------------------------------
 # reachability (LGS): no false negatives inside the window
 # --------------------------------------------------------------------------
 

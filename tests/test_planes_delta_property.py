@@ -1,0 +1,142 @@
+"""Property test for incremental plane maintenance (DESIGN.md §10).
+
+The property: for ANY flush sequence — live-subwindow appends, late
+arrivals into still-claimed older subwindows, window advances, pool
+overflow — ``query_planes`` on the post-flush handle answers
+**bit-identically** to a cold ``build_query_planes`` on the same
+counters, at every horizon, for both kinds x shard counts. Which path
+served the planes (delta apply vs rebuild fallback) is an optimization
+detail the property is deliberately blind to; correctness must not
+depend on the validity classification.
+
+Runs under ``hypothesis`` when the environment ships it; otherwise a
+seeded random sweep drives the identical case generator (the CI
+container has no hypothesis — the sweep keeps the property exercised
+there, and the hypothesis path picks up automatically where installed).
+The collective (mesh-resident) cache variant lives in
+tests/test_multidevice.py — device counts are fixed at backend init, so
+it needs the fake-device subprocess recipe.
+"""
+
+import importlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import sketch as skt
+from repro.core import LSketchConfig
+from repro.core.gss import gss_config
+from repro.core.types import EdgeBatch
+
+q_mod = importlib.import_module("repro.sketch.query")
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# one config per (kind, overflow) so jitted programs are shared across
+# every drawn example (shapes bucket identically)
+LS_CFG = LSketchConfig(d=16, n_blocks=2, F=256, r=2, s=2, c=4, k=4,
+                       window_size=400, pool_capacity=64, pool_probes=4)
+LS_CFG_TINY_POOL = LSketchConfig(d=8, n_blocks=2, F=256, r=2, s=2, c=4,
+                                 k=4, window_size=400, pool_capacity=8,
+                                 pool_probes=2)
+GSS_CFG = gss_config(d=16)
+
+BASE_N, FLUSH_N, TMAX = 256, 64, 1600  # fixed sizes: no shape retraces
+PLACEMENTS = ("live", "late", "advance")
+
+
+def _planes_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _batch(rng, kind, n, tlo, thi, n_vertices):
+    src = rng.integers(0, n_vertices, n).astype(np.int32)
+    dst = rng.integers(0, n_vertices, n).astype(np.int32)
+    if kind == "gss":
+        z = np.zeros(n, np.int32)
+        arrays = (src, dst, z, z, z, rng.integers(1, 4, n), z)
+    else:
+        arrays = (src, dst, src % 3, dst % 3, rng.integers(0, 5, n),
+                  rng.integers(1, 4, n),
+                  np.sort(rng.integers(tlo, thi, n)))
+    return EdgeBatch(*[jnp.asarray(x, jnp.int32) for x in arrays])
+
+
+def _assert_inc_matches_cold(spec, state, horizons, ctx):
+    inc = [skt.query_planes(spec, state, h) for h in horizons]
+    skt.clear_plane_cache(state)  # drops cache AND pending chain
+    for h, planes in zip(horizons, inc):
+        cold = skt.query_planes(spec, state, h)
+        assert _planes_equal(planes, cold), \
+            f"{ctx} last={h}: incremental planes != cold rebuild"
+
+
+def run_case(kind, ns, seed, n_flushes, placement_idx, tiny_pool):
+    if kind == "gss":
+        cfg, n_vertices = GSS_CFG, 60
+    else:
+        cfg = LS_CFG_TINY_POOL if tiny_pool else LS_CFG
+        n_vertices = 400 if tiny_pool else 60
+    spec = skt.SketchSpec(kind=kind, config=cfg, n_shards=ns)
+    horizons = (None,) if kind == "gss" else (None, 1, 2)
+    rng = np.random.default_rng(seed)
+    sw = max(cfg.subwindow_size, 1)
+
+    tmax = TMAX
+    # the tiny-pool case needs enough per-shard stream density to
+    # actually saturate an 8-slot pool behind 4 shards
+    base_n = 512 if tiny_pool else BASE_N
+    state = skt.ingest(spec, skt.create(spec),
+                       _batch(rng, kind, base_n, 0, tmax, n_vertices))
+    if kind == "lsketch" and tiny_pool:
+        assert int(jnp.sum(state.shards.pool_lost)) > 0, \
+            "tiny-pool case must actually saturate"
+    for h in horizons:  # warm the cache the serving loop would keep hot
+        skt.query_planes(spec, state, h)
+
+    for i in range(n_flushes):
+        placement = PLACEMENTS[placement_idx[i] % len(PLACEMENTS)]
+        if placement == "live":
+            tlo, thi = tmax - sw, tmax
+        elif placement == "late":
+            tlo, thi = tmax - 2 * sw, tmax - sw
+        else:  # advance: claims (and on wrap resets) a new subwindow
+            tlo, thi = tmax, tmax + sw
+            tmax += sw
+        state = skt.ingest(spec, state,
+                           _batch(rng, kind, FLUSH_N, tlo, thi, n_vertices))
+        _assert_inc_matches_cold(
+            spec, state, horizons,
+            ctx=f"{kind} x{ns} seed={seed} flush={i} {placement}")
+
+
+CASES = [(kind, ns) for kind in ("lsketch", "gss") for ns in (1, 4)]
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("kind,ns", CASES)
+    @settings(max_examples=15, deadline=None)
+    @given(seed=hst.integers(0, 2**16),
+           n_flushes=hst.integers(1, 3),
+           placement_idx=hst.lists(hst.integers(0, 2), min_size=3,
+                                   max_size=3),
+           tiny_pool=hst.booleans())
+    def test_incremental_planes_property(kind, ns, seed, n_flushes,
+                                         placement_idx, tiny_pool):
+        run_case(kind, ns, seed, n_flushes, placement_idx, tiny_pool)
+else:
+    @pytest.mark.parametrize("kind,ns", CASES)
+    @pytest.mark.parametrize("seed", range(5))
+    def test_incremental_planes_property(kind, ns, seed):
+        rng = np.random.default_rng(1000 + seed)
+        run_case(kind, ns, seed,
+                 n_flushes=int(rng.integers(1, 4)),
+                 placement_idx=[int(x) for x in rng.integers(0, 3, 3)],
+                 tiny_pool=bool(seed % 2))

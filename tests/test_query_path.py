@@ -277,6 +277,180 @@ def test_clear_plane_cache_forces_rebuild():
 
 
 # --------------------------------------------------------------------------
+# incremental plane maintenance (DESIGN.md §10): a flush's PlanesDelta
+# folded into the parent's cached planes must be bit-identical to a cold
+# rebuild, and must fall back whenever the flush moved the ring
+# --------------------------------------------------------------------------
+
+def _planes_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _live_batch(seed, n=64, tlo=2300, thi=2400):
+    """A single-subwindow batch inside the stream's live subwindow
+    (t in [tlo, thi) with subwindow_size=100 -> no ring movement)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 50, n).astype(np.int32)
+    dst = rng.integers(0, 50, n).astype(np.int32)
+    return _batch((src, dst, src % 3, dst % 3, rng.integers(0, 5, n),
+                   rng.integers(1, 4, n), np.sort(rng.integers(tlo, thi, n))))
+
+
+@pytest.mark.parametrize("ns", [1, 4])
+def test_planes_delta_bit_identical_every_horizon(ns):
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=ns)
+    state = skt.ingest(spec, skt.create(spec), _batch(_stream(seed=51)))
+    for last in (None, 1, 2):  # warm every horizon's cache entry
+        skt.query_planes(spec, state, last)
+
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    state2 = skt.ingest(spec, state, _live_batch(seed=52))
+    for last in (None, 1, 2, LS_CFG.k + 5):
+        inc = skt.query_planes(spec, state2, last)
+        skt.clear_plane_cache(state2)
+        cold = skt.query_planes(spec, state2, last)
+        assert _planes_equal(inc, cold), \
+            f"x{ns} last={last}: delta-applied planes != cold rebuild"
+    # every horizon was served by delta apply, never a hidden rebuild
+    # (the clear_plane_cache cold builds are the only "build" increments:
+    # one per horizon pair above)
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] - before["delta"] >= 1
+    # query answers ride the delta-applied planes bit-identically
+    state3 = skt.ingest(spec, state2, _live_batch(seed=53))
+    _assert_paths_agree(spec, state3, "lsketch", ctx=f"delta x{ns}")
+
+
+@pytest.mark.parametrize("ns", [1, 4])
+def test_planes_delta_horizon_gating_on_stale_slot(ns):
+    """A late flush into an *older* still-claimed subwindow (no reset, no
+    advance) contributes to the full-window planes but not to a horizon
+    whose validity mask excludes that slot — same as a cold rebuild."""
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=ns)
+    state = skt.ingest(spec, skt.create(spec), _batch(_stream(seed=54)))
+    for last in (None, 1, 2):
+        skt.query_planes(spec, state, last)
+    # stream tmax=2400 -> cur subwindow idx 23; t in [2200, 2300) is the
+    # previous subwindow, slot already claimed at idx 22 -> ok stays True
+    state2 = skt.ingest(spec, state, _live_batch(seed=55, tlo=2200,
+                                                 thi=2300))
+    d0 = q_mod.PLANES_BUILD_COUNTS["delta"]
+    for last in (None, 1, 2):
+        inc = skt.query_planes(spec, state2, last)
+        skt.clear_plane_cache(state2)
+        cold = skt.query_planes(spec, state2, last)
+        assert _planes_equal(inc, cold), \
+            f"x{ns} last={last}: stale-slot delta gating diverged"
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] - d0 >= 1
+    _assert_paths_agree(spec, state2, "lsketch", ctx=f"stale-slot x{ns}")
+
+
+def test_planes_delta_fallback_on_ring_movement():
+    """Window advance (slot reset) and multi-subwindow batches invalidate
+    the delta -> full rebuild, still bit-identical to scan."""
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=4)
+    state = skt.ingest(spec, skt.create(spec), _batch(_stream(seed=56)))
+    skt.query_planes(spec, state)
+
+    # advance: t=2400.. claims subwindow 24, resetting a wrapped slot
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    st_adv = skt.ingest(spec, state, _live_batch(seed=57, tlo=2400,
+                                                 thi=2450))
+    skt.query_planes(spec, st_adv)
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == before["build"] + 1
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] == before["delta"]
+    _assert_paths_agree(spec, st_adv, "lsketch", ctx="advance fallback")
+
+    # multi-subwindow batch: the stacked insert takes the scan path and
+    # the delta record is marked invalid -> rebuild
+    skt.query_planes(spec, st_adv)
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    st_span = skt.ingest(spec, st_adv, _live_batch(seed=58, tlo=2400,
+                                                   thi=2600))
+    skt.query_planes(spec, st_span)
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == before["build"] + 1
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] == before["delta"]
+
+
+def test_planes_delta_chain_resolution_and_overflow_cap():
+    """Several un-queried flushes accumulate a delta chain that resolves
+    in one go; past MAX_DELTA_CHAIN the chain is abandoned (bounded host
+    memory) and the next query pays one rebuild."""
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=2)
+    state = skt.ingest(spec, skt.create(spec), _batch(_stream(seed=59)))
+    skt.query_planes(spec, state)
+
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    st = state
+    for i in range(3):  # three flushes, no query in between
+        st = skt.ingest(spec, st, _live_batch(seed=60 + i))
+    inc = skt.query_planes(spec, st)
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] == before["delta"] + 1
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == before["build"]
+    skt.clear_plane_cache(st)
+    assert _planes_equal(inc, skt.query_planes(spec, st))
+
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    for i in range(q_mod.MAX_DELTA_CHAIN + 2):
+        st = skt.ingest(spec, st, _live_batch(seed=80 + i))
+    skt.query_planes(spec, st)
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] == before["delta"]
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == before["build"] + 1
+
+
+def test_planes_delta_under_pool_overflow():
+    """The additional pool's contribution is linear too: a delta-applied
+    flush on a saturated pool matches the cold rebuild bit-for-bit."""
+    cfg = LSketchConfig(d=8, n_blocks=2, F=256, r=2, s=2, c=4, k=4,
+                        window_size=400, pool_capacity=8, pool_probes=2)
+    spec = skt.SketchSpec(kind="lsketch", config=cfg, n_shards=2)
+    arrays = _stream(seed=61, n=500, tmax=1500, n_vertices=400)
+    state = skt.ingest(spec, skt.create(spec), _batch(arrays))
+    assert int(jnp.sum(state.shards.pool_lost)) > 0, "pool must saturate"
+    skt.query_planes(spec, state)
+    d0 = q_mod.PLANES_BUILD_COUNTS["delta"]
+    # live subwindow for tmax=1500 is [1400, 1500); high-degree vertices
+    # keep hitting the (full) pool
+    rng = np.random.default_rng(62)
+    src = rng.integers(0, 400, 64).astype(np.int32)
+    dst = rng.integers(0, 400, 64).astype(np.int32)
+    b = _batch((src, dst, src % 3, dst % 3, rng.integers(0, 5, 64),
+                rng.integers(1, 4, 64),
+                np.sort(rng.integers(1400, 1500, 64))))
+    state2 = skt.ingest(spec, state, b)
+    inc = skt.query_planes(spec, state2)
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] == d0 + 1
+    skt.clear_plane_cache(state2)
+    assert _planes_equal(inc, skt.query_planes(spec, state2))
+    _assert_paths_agree(spec, state2, "lsketch", ctx="pool-overflow delta")
+
+
+def test_async_ingestor_steady_state_builds_stay_flat():
+    """Satellite: N pipelined flushes through AsyncIngestor.state (the
+    implicit flush) with a query after each — after the first build, the
+    cache is maintained purely by delta apply: PLANES_BUILD_COUNTS
+    ["build"] must stay flat."""
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=4)
+    qb = skt.QueryBatch.vertices(np.arange(30, dtype=np.int32),
+                                 np.arange(30, dtype=np.int32) % 3)
+    ing = skt.AsyncIngestor(spec)
+    ing.submit(_batch(_stream(seed=63)))
+    st = ing.state
+    ref = np.asarray(skt.query(spec, st, qb, path="pallas"))  # first build
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    n_flushes = 6
+    for i in range(n_flushes):
+        ing.submit(_live_batch(seed=64 + i))
+        st = ing.state  # implicit flush must propagate planes too
+        got = np.asarray(skt.query(spec, st, qb, path="pallas"))
+        assert np.array_equal(got, _fresh_truth(spec, st, qb))
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == before["build"], \
+        "hidden full rebuild during steady-state pipelined serving"
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] == \
+        before["delta"] + n_flushes
+
+
+# --------------------------------------------------------------------------
 # frontends ride the path selector
 # --------------------------------------------------------------------------
 

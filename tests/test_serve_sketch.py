@@ -1,13 +1,20 @@
-"""SketchServer: flush guard, request grouping, sharded end-to-end serving."""
+"""SketchServer: flush guard, request grouping, sharded end-to-end serving,
+and the plane-cache prewarm loop (DESIGN.md §10)."""
+
+import importlib
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro import sketch as skt
-from repro.core import LSketch
+from repro.core import LSketch, LSketchConfig
+from repro.core.types import EdgeBatch
 from repro.data.stream import PHONE, edge_batches, generate
 from repro.launch.serve_sketch import SketchServer, build_spec, main
 import dataclasses
+
+q_mod = importlib.import_module("repro.sketch.query")
 
 
 def _stream(n_edges=3000):
@@ -86,3 +93,85 @@ def test_serve_sketch_main_smoke_all_kinds(capsys):
         out = capsys.readouterr().out
         assert "ingested 1024 edges" in out
         assert "answered 64 edge queries" in out
+
+
+# --------------------------------------------------------------------------
+# plane-cache prewarm (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+_SERVE_CFG = LSketchConfig(d=64, n_blocks=2, F=512, r=4, s=4, c=4, k=4,
+                           window_size=400, pool_capacity=256, pool_probes=8)
+
+
+def _mk_batch(rng, n, tlo, thi):
+    src = rng.integers(0, 50, n).astype(np.int32)
+    dst = rng.integers(0, 50, n).astype(np.int32)
+    return EdgeBatch(*[jnp.asarray(x, jnp.int32) for x in (
+        src, dst, src % 3, dst % 3, rng.integers(0, 5, n),
+        rng.integers(1, 4, n), np.sort(rng.integers(tlo, thi, n)))])
+
+
+def test_prewarm_moves_plane_builds_off_the_query_path():
+    """Steady-state serving (live-subwindow flushes): with prewarm on,
+    the query flush never pays a full plane build — the cache was kept
+    hot (delta-applied) during ingest."""
+    spec = skt.SketchSpec(kind="lsketch", config=_SERVE_CFG, n_shards=4)
+    rng = np.random.default_rng(0)
+    server = SketchServer(spec, query_path="pallas")
+    # base stream claims every ring slot on every shard; later
+    # live-subwindow batches then keep the flush delta valid
+    server.ingest(_mk_batch(rng, 1200, 0, 2400))
+    for _ in range(4):
+        server.ingest(_mk_batch(rng, 96, 2300, 2400))
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    r = server.submit("edge", src=1, la=1, dst=2, lb=2)
+    assert server.flush() == 1 and r.answer is not None
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == before["build"], \
+        "query flush paid a full plane rebuild despite prewarm"
+
+
+def test_prewarm_off_pays_build_inline_same_answers():
+    """--no-prewarm semantics: identical answers, but the first query
+    flush pays the plane build it would otherwise have prewarmed."""
+    answers = {}
+    for prewarm in (True, False):
+        rng = np.random.default_rng(0)
+        server = SketchServer(
+            skt.SketchSpec(kind="lsketch", config=_SERVE_CFG, n_shards=4),
+            query_path="pallas", prewarm=prewarm)
+        server.ingest(_mk_batch(rng, 1200, 0, 2400))
+        for _ in range(3):
+            server.ingest(_mk_batch(rng, 96, 2300, 2400))
+        before = dict(q_mod.PLANES_BUILD_COUNTS)
+        reqs = [server.submit("edge", src=i, la=i % 3, dst=i + 1,
+                              lb=(i + 1) % 3) for i in range(8)]
+        server.flush()
+        answers[prewarm] = [r.answer for r in reqs]
+        paid = (q_mod.PLANES_BUILD_COUNTS["build"] - before["build"],
+                q_mod.PLANES_BUILD_COUNTS["delta"] - before["delta"])
+        if prewarm:
+            assert paid[0] == 0, f"prewarmed flush rebuilt planes: {paid}"
+        else:
+            assert sum(paid) >= 1, \
+                "no-prewarm flush should pay the cache fill inline"
+    assert answers[True] == answers[False]
+
+
+def test_prewarm_noop_on_scan_path():
+    """The scan path reads raw counters — prewarm must not build planes."""
+    spec = skt.SketchSpec(kind="lsketch", config=_SERVE_CFG, n_shards=2)
+    rng = np.random.default_rng(1)
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    server = SketchServer(spec, query_path="scan")
+    server.ingest(_mk_batch(rng, 256, 0, 2400))
+    r = server.submit("edge", src=1, la=1, dst=2, lb=2)
+    server.flush()
+    assert r.answer is not None
+    assert dict(q_mod.PLANES_BUILD_COUNTS) == before
+
+
+def test_serve_sketch_main_no_prewarm_flag(capsys):
+    main(["--sketch", "lsketch", "--shards", "2", "--edges", "512",
+          "--requests", "32", "--ingest-batch", "256", "--no-prewarm"])
+    out = capsys.readouterr().out
+    assert "answered 32 edge queries" in out
