@@ -26,6 +26,7 @@ a diagnostic when a gate fails or the rows are missing.
 from __future__ import annotations
 
 import json
+import math
 import sys
 from pathlib import Path
 
@@ -40,9 +41,24 @@ GATES = [
     # isolated cache-refresh step
     ("mixed_serve_incremental_x4", "mixed_serve_rebuild_x4"),
     ("planes_delta_apply_x4", "planes_cold_build_x4"),
+    # §11 multi-tenant pool: one pooled dispatch over [T * n_shards] rows
+    # must beat T independent single-tenant dispatches of the same data,
+    # for the ingest round and for the grouped query (serve_bench.py)
+    ("tenant_pool_ingest_x8", "tenant_independent_ingest_x8"),
+    ("tenant_pool_query_x8", "tenant_independent_query_x8"),
 ]
 
 METRIC = "total_s"
+
+# sustained-serving rows (concurrent_serve_throughput): the sojourn
+# latency percentiles must exist and be real numbers — a driver that
+# stalls or divides by zero would otherwise pass silently. (The pooled
+# row usually also beats the independent one, but a thread-scheduling A/B
+# is too noisy for a hard inequality gate.)
+LATENCY_ROWS = {
+    "tenant_serve_pooled_x8": ("ms_q_p50", "ms_q_p99"),
+    "tenant_serve_independent_x8": ("ms_q_p50", "ms_q_p99"),
+}
 
 
 def check(bench: dict) -> list[str]:
@@ -57,6 +73,18 @@ def check(bench: dict) -> list[str]:
             failures.append(
                 f"{fast} ({tf * 1e3:.2f} ms) did not beat "
                 f"{slow} ({ts * 1e3:.2f} ms) in the same-run A/B")
+    for row, metrics in LATENCY_ROWS.items():
+        if row not in bench:
+            failures.append(f"missing bench row {row} "
+                            f"(have: {sorted(bench)})")
+            continue
+        for m in metrics:
+            v = bench[row].get(m)
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v <= 0:
+                failures.append(
+                    f"{row}.{m} must be a finite positive latency, "
+                    f"got {v!r}")
     return failures
 
 
@@ -76,6 +104,9 @@ def main(argv=None) -> int:
         for fast, slow in GATES:
             print(f"check_bench: OK: {fast} ({bench[fast][METRIC] * 1e3:.2f} "
                   f"ms) < {slow} ({bench[slow][METRIC] * 1e3:.2f} ms)")
+        for row, metrics in LATENCY_ROWS.items():
+            vals = ", ".join(f"{m}={bench[row][m]:.2f}" for m in metrics)
+            print(f"check_bench: OK: {row} latencies finite ({vals})")
     return 1 if failures else 0
 
 

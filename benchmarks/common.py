@@ -2,12 +2,39 @@
 
 from __future__ import annotations
 
+import json
 import time
 from pathlib import Path
 
 import numpy as np
 
 OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+
+
+def merge_bench(result: dict) -> None:
+    """Merge rows into the repo-root ``BENCH_engine.json`` (the CI
+    artifact ``check_bench.py`` gates)."""
+    merged = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {}
+    merged.update(result)
+    BENCH_JSON.write_text(json.dumps(merged, indent=2) + "\n")
+
+
+def timed_medians(variants, warmup: int = 1, iters: int = 5):
+    """Time named thunks fairly on a noisy box: one warmup (compile) pass
+    each, then the variants **alternate** within every iteration so load
+    phases hit all of them equally; returns {tag: median seconds}. Every
+    same-run A/B gate in ``check_bench.py`` relies on this discipline."""
+    for _, fn in variants:
+        for _ in range(warmup):
+            fn()
+    times = {tag: [] for tag, _ in variants}
+    for _ in range(iters):
+        for tag, fn in variants:
+            t0 = time.perf_counter()
+            fn()
+            times[tag].append(time.perf_counter() - t0)
+    return {tag: float(np.median(ts)) for tag, ts in times.items()}
 
 
 def timer(fn, *args, warmup: int = 1, iters: int = 3):

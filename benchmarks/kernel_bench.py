@@ -31,7 +31,8 @@ from repro.core.queries import edge_query
 from repro.core.ref_prime import PrimeLSketch
 from repro.engine import insert as eng_insert
 
-from .common import timer, write_csv
+from .common import (merge_bench as _merge_bench,
+                     timed_medians as _timed_medians, timer, write_csv)
 
 
 def _batch(rng, n, n_vlabels=3):
@@ -124,31 +125,6 @@ def engine_insert_throughput(n=20000, subwindows_spanned=8,
     out = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
     out.write_text(json.dumps(result, indent=2) + "\n")
     return rows
-
-
-def _merge_bench(result):
-    out = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
-    merged = json.loads(out.read_text()) if out.exists() else {}
-    merged.update(result)
-    out.write_text(json.dumps(merged, indent=2) + "\n")
-
-
-def _timed_medians(variants, warmup=1, iters=5):
-    """Time named thunks fairly on a noisy box: one warmup (compile) pass
-    each, then the variants **alternate** within every iteration so load
-    phases hit all of them equally; returns {tag: median seconds}."""
-    import time as _time
-
-    for _, fn in variants:
-        for _ in range(warmup):
-            fn()
-    times = {tag: [] for tag, _ in variants}
-    for _ in range(iters):
-        for tag, fn in variants:
-            t0 = _time.perf_counter()
-            fn()
-            times[tag].append(_time.perf_counter() - t0)
-    return {tag: float(np.median(ts)) for tag, ts in times.items()}
 
 
 def sharded_ingest_throughput(n=16384, shard_counts=(1, 4),
@@ -676,6 +652,8 @@ def main(argv=None):
         print("impl,rounds,queries,shards,us_q_p50,us_q_p99,total_s")
         for r in mrows:
             print(",".join(str(x) for x in r))
+        from .serve_bench import run_all as _serve_rows
+        _serve_rows(quick=args.quick)
         if not args.no_mesh:
             mesh_rows_subprocess(args.quick)
         return
@@ -702,6 +680,8 @@ def main(argv=None):
     print("impl,rounds,queries,shards,us_q_p50,us_q_p99,total_s")
     for r in mrows:
         print(",".join(str(x) for x in r))
+    from .serve_bench import run_all as _serve_rows
+    _serve_rows(quick=args.quick)
     if not args.no_mesh:
         mesh_rows_subprocess(args.quick)
     if not args.quick:

@@ -99,3 +99,33 @@ with tempfile.TemporaryDirectory() as d:
                           skt.QueryBatch.edges([a], [la], [b], [lb]))[0])
     print(f"\ncheckpoint restored 4 shards -> 8 shards (balanced reshard): "
           f"weight(a->b) {same} vs {grown} (both >= truth)")
+
+# 7. many tenants, one compiled program (DESIGN.md §11): a TenantPool
+#    packs same-spec tenants onto one stacked state, so a cross-tenant
+#    ingest round or query group is a single dispatch — and every answer
+#    is bit-identical to the tenant's standalone sketch
+print("\n-- tenant pool --")
+small = skt.make_spec("lsketch", n_shards=2,
+                      config=dataclasses.replace(cfg, d=32, F=512,
+                                                 pool_capacity=1024))
+with tempfile.TemporaryDirectory() as d:
+    pool = skt.TenantPool(small, n_slots=2, directory=d)
+    per_tenant = {t: generate(dataclasses.replace(spec_stream, n_edges=2000),
+                              seed=10 + i)
+                  for i, t in enumerate(("alice", "bob"))}
+    for _ in range(2):                       # interleaved tenant traffic
+        for t, st in per_tenant.items():
+            for batch in edge_batches(st, 1024):
+                pool.ingest(t, batch)
+    v, lv = (int(per_tenant["alice"].src[-1]),        # recent: in-window
+             int(per_tenant["alice"].src_label[-1]))
+    qb = skt.QueryBatch.vertices([v], [lv])
+    est = pool.query_many([("alice", qb), ("bob", qb)])  # one dispatch
+    print(f"out-weight(v={v}) per tenant:",
+          {t: int(w[0]) for t, w in zip(("alice", "bob"), est)})
+    pool.evict("alice")                      # -> checkpoint under d
+    pool.attach("carol")                     # reuses alice's old slot
+    pool.attach("alice")                     # full pool: LRU-evicts carol,
+    back = pool.query_many([("alice", qb)])  # restores alice bit-identically
+    print("alice after evict/readmit:", int(back[0][0]),
+          "(same as pooled answer above)")

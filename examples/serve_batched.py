@@ -72,3 +72,41 @@ print(f"\nsketch: ingested {len(stream)} edges in {dt_ing:.2f}s over "
       f"4 shards; answered {done} mixed queries in {dt_q:.2f}s "
       f"({done/dt_q:.0f} q/s)")
 print("sample answers:", [r.answer for r in reqs[:8]])
+
+# ---- 3. multi-tenant serving: one server, one pool, T sketches ------------
+# A pool-mode SketchServer fronts a TenantPool (DESIGN.md §11): a round of
+# per-tenant batches lands in ONE stacked dispatch (ingest_many), and flush
+# answers each static-axis query group for every tenant in one grouped
+# dispatch — answers stay bit-identical to T standalone sketches.
+
+from repro import sketch as skt
+
+T = 4
+tenant_streams = {t: generate(dataclasses.replace(stream_spec, n_edges=2048),
+                              seed=100 + t) for t in range(T)}
+pool = skt.TenantPool(build_spec("lsketch", stream_spec.window_size,
+                                 n_shards=2), n_slots=T)
+mt_server = SketchServer(pool=pool)
+
+t0 = time.time()
+rounds = 0
+iters = {t: edge_batches(s, 512) for t, s in tenant_streams.items()}
+while True:
+    rnd = [(t, b) for t, it in iters.items() for b in [next(it, None)]
+           if b is not None]
+    if not rnd:
+        break
+    mt_server.ingest_many(rnd)          # T batches -> one pooled dispatch
+    rounds += 1
+dt_mt = time.time() - t0
+
+mt_reqs = {t: [mt_server.submit("vertex", tenant=t,
+                                v=int(tenant_streams[t].src[-1 - j]),
+                                lv=int(tenant_streams[t].src_label[-1 - j]))
+               for j in range(4)] for t in range(T)}
+done = mt_server.flush()                # all tenants, one grouped dispatch
+print(f"\ntenant pool: {T} tenants x 2048 edges in {rounds} pooled rounds "
+      f"({dt_mt:.2f}s); answered {done} queries in one flush")
+for t in range(T):
+    print(f"  tenant {t} recent out-weights:",
+          [r.answer for r in mt_reqs[t]])

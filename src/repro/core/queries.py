@@ -94,8 +94,14 @@ class PlanesDelta:
     record from the same segment plan that drove the insert; ``ok`` gates
     applicability on the device (no host sync inside the ingest dispatch).
 
-    ok      : []            single-segment AND no slot reset, every shard —
-                            the ring (and hence every mask) is unchanged
+    ok      : [S]           per shard row: single-segment AND no slot reset
+                            — that row's ring (and hence its own mask) is
+                            unchanged. Applicability of the whole delta is
+                            the AND over the rows whose window reconciliation
+                            is coupled: all of them for a plain sharded
+                            handle (one global ``cur_widx`` lift), each
+                            tenant's row group for a pooled handle
+                            (per-tenant lift, DESIGN.md §11)
     slot    : [S]           the one ring slot each shard's flush touched
     d_c     : [S, d, d, 2]  C increment at that slot (post - pre)
     d_p     : [S, d, d, 2, c]

@@ -229,10 +229,13 @@ def insert_stacked_fused_impl(cfg: LSketchConfig, states: LSketchState,
     where ``delta`` is the ``core.queries.PlanesDelta`` of this flush —
     the touched-slot counter increments, sliced inside this dispatch
     because the caller's input buffers are donated (there is no "before"
-    to diff against once we return). ``delta.ok`` is False whenever any
-    shard's flush spanned several subwindows or reset a ring slot; the
-    slices are then meaningless and the caller must rebuild planes cold
-    (DESIGN.md §10).
+    to diff against once we return). ``delta.ok`` is recorded **per shard
+    row** (tenant-axis dispatch, DESIGN.md §11): row ``s`` is False when
+    that row's flush spanned several subwindows or reset one of its ring
+    slots — its slices are then meaningless. The query layer ANDs the
+    rows whose window reconciliation couples them (all rows for a plain
+    sharded handle, each tenant's row group for a pooled one) before
+    applying; a failed group rebuilds planes cold (DESIGN.md §10).
 
     Semantics are bit-identical to vmapping ``insert_batch_fused_impl``
     over the shard axis (property-tested in tests/test_sketch_api.py).
@@ -276,9 +279,10 @@ def insert_stacked_fused_impl(cfg: LSketchConfig, states: LSketchState,
     # plan.slot[s, 0] and count_live == key_live — the kernel's contract,
     # shard by shard) and the delta record (all writes land in one slot).
     if use_pallas or emit_delta:
-        one_segment_all = jnp.all(jax.vmap(
+        one_segment_rows = jax.vmap(
             lambda wdx, v: _segment_count(jnp.where(v, wdx, wdx[0])))(
-                widx, valid) == jnp.int32(1))
+                widx, valid) == jnp.int32(1)
+        one_segment_all = jnp.all(one_segment_rows)
 
     touched = plan.slot[:, 0]
     if emit_delta:
@@ -300,10 +304,11 @@ def insert_stacked_fused_impl(cfg: LSketchConfig, states: LSketchState,
     if not emit_delta:
         return out
     post = _touched_slot_slices(out, touched)
-    # no reset anywhere <=> the ring is unchanged (a cur_widx advance
-    # implies a reset), so every horizon's validity mask is unchanged and
-    # the slot increment is the exact planes delta
-    ok = one_segment_all & ~jnp.any(plan.reset)
+    # per row: no reset <=> that row's ring is unchanged (a cur_widx
+    # advance implies a reset), so its every-horizon validity mask is
+    # unchanged and its slot increment is the exact planes delta. The
+    # AND over window-coupled rows is the caller's (tenant groups differ)
+    ok = one_segment_rows & ~jnp.any(plan.reset, axis=1)
     delta = PlanesDelta(ok=ok, slot=touched,
                         d_c=post[0] - pre[0], d_p=post[1] - pre[1],
                         d_pool_c=post[2] - pre[2], d_pool_p=post[3] - pre[3])

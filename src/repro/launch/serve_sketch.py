@@ -20,8 +20,16 @@ reused for every request group until the next ingest. The same server
 fronts LSketch, LGS, or GSS because the handle layer dispatches on
 ``spec.kind``.
 
+With ``--tenants T`` the server fronts a ``skt.TenantPool`` instead of a
+single handle (DESIGN.md §11): T independent same-spec tenant sketches
+share one stacked state, cross-tenant ingest rounds and query groups each
+collapse into a single pooled dispatch (the tenant is a dynamic per-row
+axis, not a compile-time one), and every answer is bit-identical to the
+tenant's standalone sketch.
+
 Usage: python -m repro.launch.serve_sketch --sketch lsketch --shards 4
        python -m repro.launch.serve_sketch --shards 8 --mesh 4 --collective
+       python -m repro.launch.serve_sketch --shards 1 --tenants 16
    (or python -m repro.launch.serve --mode sketch ...)
 """
 
@@ -48,25 +56,62 @@ class QueryRequest:
     kind: str  # "edge" | "vertex" | "label"
     args: Dict[str, Any]
     answer: int | None = None
+    tenant: Any = None  # pool-mode routing (None on a single-sketch server)
 
 
 class SketchServer:
-    """Continuous-batching frontend over one sharded sketch handle.
+    """Continuous-batching frontend over one sharded sketch handle — or,
+    with ``pool=``, over a ``skt.TenantPool`` of many same-spec sketches
+    (DESIGN.md §11).
 
     ``submit`` enqueues; ``flush`` answers every pending request with one
     batched dispatch per (kind, edge-label?, last?, direction?) group —
-    the static axes of the underlying jitted queries.
+    the static axes of the underlying jitted queries. In pool mode the
+    tenant is a *dynamic* axis (a per-row slot vector), so one group still
+    answers in one pooled dispatch regardless of how many tenants it spans.
 
     Ingest rides a ``skt.AsyncIngestor`` (``pipeline=True``, the default):
     the host hash-partition of each batch overlaps the previous batch's
     device dispatch, and the query path flushes the pipeline before
-    answering — submitted batches are always visible to later queries.
+    answering — submitted batches are always visible to later queries. In
+    pool mode the pool's own pipelined rounds play that role
+    (``ingest(batch, tenant=...)`` per tenant, or ``ingest_many`` for one
+    cross-tenant round), under the deterministic cross-tenant flush
+    contract of ``skt.TenantPool.submit``: per-tenant submission order is
+    preserved, cross-tenant order is normalized by slot — the resulting
+    state is bit-identical for any caller iteration order (DESIGN.md
+    §7.3/§11, pinned in tests/test_tenant_pool.py).
     """
 
-    def __init__(self, spec: "skt.SketchSpec", max_batch: int = 4096,
+    def __init__(self, spec: "skt.SketchSpec | None" = None,
+                 max_batch: int = 4096,
                  state: "skt.ShardedState | None" = None,
                  pipeline: bool = True, query_path: str = "auto",
-                 mesh=None, axis: str = "data", prewarm: bool = True):
+                 mesh=None, axis: str = "data", prewarm: bool = True,
+                 pool: "skt.TenantPool | None" = None):
+        self.pool = pool
+        if pool is not None:
+            if spec is not None and spec != pool.spec:
+                raise ValueError("pass either spec= or pool=, and a pool "
+                                 "carries its own per-tenant spec")
+            if state is not None or mesh is not None:
+                raise ValueError(
+                    "pool mode owns its state and is host-resident: "
+                    "state=/mesh= do not apply (DESIGN.md §11)")
+            if query_path == "collective":
+                raise ValueError(
+                    "query_path='collective' serves one mesh-placed "
+                    "sketch, not a TenantPool")
+            self.spec = pool.spec
+            self.pipeline = pipeline
+            self.query_path = query_path
+            self.prewarm = prewarm
+            self._ingestor = None
+            self.max_batch = max_batch
+            self.pending: List[QueryRequest] = []
+            return
+        if spec is None:
+            raise ValueError("SketchServer needs a spec= or a pool=")
         self.spec = spec
         self.pipeline = pipeline
         self.query_path = query_path
@@ -100,13 +145,35 @@ class SketchServer:
     @property
     def state(self) -> "skt.ShardedState":
         """The handle with every ingested batch applied (flushes)."""
+        if self.pool is not None:
+            return self.pool.state
         return self._ingestor.state
 
     # ---- ingest ----
-    def ingest(self, batch) -> None:
+    def ingest(self, batch, tenant=None) -> None:
+        if self.pool is not None:
+            if tenant is None:
+                raise ValueError("pool-mode ingest needs tenant=")
+            self.ingest_many([(tenant, batch)])
+            return
+        if tenant is not None:
+            raise ValueError("tenant= needs a pool-mode server (pool=)")
         self._ingestor.submit(batch)
         if not self.pipeline:
             self._ingestor.flush()
+        self._prewarm()
+
+    def ingest_many(self, batches) -> None:
+        """One cross-tenant ingest round (pool mode): ``{tenant: batch}``
+        or ``(tenant, batch)`` pairs collapse into a single pooled
+        dispatch. Deterministic under any iteration order — the pool
+        normalizes cross-tenant layout by slot and preserves per-tenant
+        pair order (the §7.3 flush contract, extended in §11)."""
+        if self.pool is None:
+            raise ValueError("ingest_many needs a pool-mode server (pool=)")
+        self.pool.submit(batches)
+        if not self.pipeline:
+            self.pool.flush()
         self._prewarm()
 
     def _prewarm(self, last=None, handle=None) -> None:
@@ -123,6 +190,12 @@ class SketchServer:
         path = skt.resolve_query_path(self.spec, self.query_path)
         if path == "scan":
             return
+        if self.pool is not None:
+            skt.query_planes(self.spec,
+                             handle if handle is not None
+                             else self.pool.dispatched,
+                             last, groups=self.pool.n_slots)
+            return
         h = handle if handle is not None else self._ingestor.dispatched
         if h is None:
             return
@@ -130,16 +203,37 @@ class SketchServer:
                          collective=(path == "collective"))
 
     # ---- queries ----
-    def submit(self, kind: str, **args) -> QueryRequest:
-        req = QueryRequest(kind, args)
+    def submit(self, kind: str, tenant=None, **args) -> QueryRequest:
+        if (tenant is None) != (self.pool is None):
+            raise ValueError("tenant= is required in pool mode and invalid "
+                             "otherwise")
+        req = QueryRequest(kind, args, tenant=tenant)
         self.pending.append(req)
         if len(self.pending) >= self.max_batch:
             self.flush()
         return req
 
     def _group_key(self, r: QueryRequest):
+        # the tenant is deliberately absent: in pool mode it is a dynamic
+        # per-row axis of the pooled dispatch, not a compile-time group
         return (r.kind, r.args.get("le") is not None, r.args.get("last"),
                 r.args.get("direction", "out"))
+
+    @staticmethod
+    def _group_batch(kind, reqs, with_le, last, direction) -> "skt.QueryBatch":
+        a = {k: np.asarray([r.args[k] for r in reqs], np.int32)
+             for k in reqs[0].args if _batch_axis(reqs, k)}
+        le = a.get("le") if with_le else None
+        if kind == "edge":
+            return skt.QueryBatch.edges(a["src"], a["la"], a["dst"],
+                                        a["lb"], edge_label=le, last=last)
+        if kind == "vertex":
+            return skt.QueryBatch.vertices(a["v"], a["lv"], edge_label=le,
+                                           direction=direction, last=last)
+        if kind == "label":
+            return skt.QueryBatch.labels(a["lv"], edge_label=le,
+                                         direction=direction, last=last)
+        raise ValueError(f"unknown query kind {kind!r}")
 
     def flush(self) -> int:
         if not self.pending:  # nothing queued: no dispatch, no state touch
@@ -152,20 +246,33 @@ class SketchServer:
             # post-flush handle: .state drains the ingest pipeline first
             self._prewarm(last, handle=self.state)
         for (kind, with_le, last, direction), reqs in groups.items():
-            a = {k: np.asarray([r.args[k] for r in reqs], np.int32)
-                 for k in reqs[0].args if _batch_axis(reqs, k)}
-            le = a.get("le") if with_le else None
-            if kind == "edge":
-                q = skt.QueryBatch.edges(a["src"], a["la"], a["dst"],
-                                         a["lb"], edge_label=le, last=last)
-            elif kind == "vertex":
-                q = skt.QueryBatch.vertices(a["v"], a["lv"], edge_label=le,
-                                            direction=direction, last=last)
-            elif kind == "label":
-                q = skt.QueryBatch.labels(a["lv"], edge_label=le,
-                                          direction=direction, last=last)
-            else:
-                raise ValueError(f"unknown query kind {kind!r}")
+            if self.pool is not None:
+                # one pooled dispatch for the whole group: contiguous
+                # per-tenant runs keep the combine cheap, and stable
+                # sorting keeps the row layout deterministic under any
+                # arrival interleaving
+                order = sorted(range(len(reqs)),
+                               key=lambda i: self.pool.slot_of(
+                                   reqs[i].tenant)
+                               if reqs[i].tenant in self.pool.tenants
+                               else -1)
+                runs: List[tuple] = []  # (tenant, [req, ...]) runs
+                for i in order:
+                    r = reqs[i]
+                    if runs and runs[-1][0] == r.tenant:
+                        runs[-1][1].append(r)
+                    else:
+                        runs.append((r.tenant, [r]))
+                pairs = [(t, self._group_batch(kind, rs, with_le, last,
+                                               direction))
+                         for t, rs in runs]
+                outs = self.pool.query_many(pairs, path=self.query_path)
+                for (_, rs), out in zip(runs, outs):
+                    for r, v in zip(rs, np.asarray(out)):
+                        r.answer = int(v)
+                done += len(reqs)
+                continue
+            q = self._group_batch(kind, reqs, with_le, last, direction)
             out = np.asarray(skt.query(self.spec, self.state, q,
                                        path=self.query_path))
             for r, v in zip(reqs, out):
@@ -221,7 +328,16 @@ def main(argv=None):
                     help="skip keeping the plane cache hot across ingest "
                          "flushes; the first query after a flush pays the "
                          "delta-apply or rebuild inline")
+    ap.add_argument("--tenants", type=int, default=0, metavar="T",
+                    help="serve T independent tenant sketches from one "
+                         "TenantPool (stream split round-robin; each "
+                         "tenant gets --shards shards). Incompatible "
+                         "with --mesh/--collective (pool mode is "
+                         "host-resident, DESIGN.md §11)")
     args = ap.parse_args(argv)
+    if args.tenants and (args.mesh or args.collective):
+        raise SystemExit("--tenants is host-resident: drop --mesh/"
+                         "--collective")
     if args.collective:
         args.query_path = "collective"
 
@@ -243,18 +359,29 @@ def main(argv=None):
 
     spec = dataclasses.replace(PHONE, n_edges=args.edges, n_vertices=1000)
     st = generate(spec, seed=0)
-    server = SketchServer(build_spec(args.sketch, spec.window_size,
-                                     n_shards=args.shards),
-                          pipeline=not args.no_pipeline,
-                          query_path=args.query_path, mesh=mesh,
-                          prewarm=not args.no_prewarm)
+    sk_spec = build_spec(args.sketch, spec.window_size, n_shards=args.shards)
+    if args.tenants:
+        pool = skt.TenantPool(sk_spec, n_slots=args.tenants)
+        server = SketchServer(pool=pool, pipeline=not args.no_pipeline,
+                              query_path=args.query_path,
+                              prewarm=not args.no_prewarm)
+    else:
+        server = SketchServer(sk_spec, pipeline=not args.no_pipeline,
+                              query_path=args.query_path, mesh=mesh,
+                              prewarm=not args.no_prewarm)
 
     from repro.engine.insert import TRACE_COUNTS
     traces_before = TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]
     t0 = time.time()
     n_batches = 0
     for batch in edge_batches(st, args.ingest_batch):
-        server.ingest(batch)
+        if args.tenants:
+            # round-robin tenant split of one stream: every tenant sees a
+            # time-ordered substream, and each round is one pooled dispatch
+            tid = n_batches % args.tenants
+            server.ingest_many([(tid, batch)])
+        else:
+            server.ingest(batch)
         n_batches += 1
     jax.block_until_ready(jax.tree.leaves(server.state.shards))  # drain pipe
     dt_ing = time.time() - t0
@@ -264,13 +391,17 @@ def main(argv=None):
     # expect <= #distinct bucketed batch shapes
     print(f"ingested {len(st)} edges in {dt_ing:.2f}s "
           f"({len(st) / dt_ing:.0f} edges/s, {n_batches} batches, "
-          f"{args.shards} shards, {traces} engine compiles)")
+          f"{args.shards} shards"
+          + (f", {args.tenants} tenants" if args.tenants else "")
+          + f", {traces} engine compiles)")
 
     rng = np.random.default_rng(1)
     idx = rng.integers(0, len(st), args.requests)
     t0 = time.time()
     reqs = [server.submit("edge", src=int(st.src[i]), la=int(st.src_label[i]),
-                          dst=int(st.dst[i]), lb=int(st.dst_label[i]))
+                          dst=int(st.dst[i]), lb=int(st.dst_label[i]),
+                          tenant=(int(i) % args.tenants if args.tenants
+                                  else None))
             for i in idx]
     server.flush()
     dt_q = time.time() - t0

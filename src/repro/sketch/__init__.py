@@ -27,7 +27,8 @@ from .ingest import AsyncIngestor, ingest, ingest_single
 from .query import (QueryBatch, clear_plane_cache, default_query_path, query,
                     query_planes, resolve_query_path)
 from .reshard import reshard
-from .checkpoint import restore, save, saved_spec
+from .checkpoint import restore, save, saved_extra, saved_spec
+from .tenant import PoolFullError, TenantPool
 
 __all__ = [
     "KINDS", "SketchSpec", "make_spec", "shard_assignment",
@@ -37,5 +38,6 @@ __all__ = [
     "unstack_state", "with_mesh",
     "AsyncIngestor", "ingest", "ingest_single", "QueryBatch", "query",
     "query_planes", "clear_plane_cache", "resolve_query_path",
-    "default_query_path", "reshard", "restore", "save", "saved_spec",
+    "default_query_path", "reshard", "restore", "save", "saved_extra",
+    "saved_spec", "PoolFullError", "TenantPool",
 ]

@@ -27,11 +27,20 @@ MANIFEST_KEY = "sketch_spec"
 
 
 def save(spec: SketchSpec, state: ShardedState, directory, step: int = 0,
-         keep: int = 3, blocking: bool = True) -> CheckpointManager:
-    """Checkpoint a handle (atomic; async when ``blocking=False``)."""
+         keep: int = 3, blocking: bool = True,
+         extra: dict | None = None) -> CheckpointManager:
+    """Checkpoint a handle (atomic; async when ``blocking=False``).
+
+    ``extra`` entries ride in the manifest next to the spec (the tenant
+    pool records ``{"tenant_id": ...}`` here, DESIGN.md §11); the
+    ``sketch_spec`` key is reserved.
+    """
     mgr = CheckpointManager(directory, keep=keep)
-    mgr.save(step, state, extra={MANIFEST_KEY: spec.to_json()},
-             blocking=blocking)
+    meta = dict(extra) if extra else {}
+    if MANIFEST_KEY in meta:
+        raise ValueError(f"extra key {MANIFEST_KEY!r} is reserved")
+    meta[MANIFEST_KEY] = spec.to_json()
+    mgr.save(step, state, extra=meta, blocking=blocking)
     return mgr
 
 
@@ -39,6 +48,15 @@ def saved_spec(directory, step: int | None = None) -> SketchSpec:
     """The spec recorded in a sketch checkpoint's manifest."""
     meta = CheckpointManager(directory).manifest(step)
     return SketchSpec.from_json(meta["extra"][MANIFEST_KEY])
+
+
+def saved_extra(directory, step: int | None = None) -> dict:
+    """The caller-side ``extra`` entries of a sketch checkpoint's manifest
+    (the reserved spec key stripped) — e.g. the tenant id a ``TenantPool``
+    eviction recorded."""
+    meta = dict(CheckpointManager(directory).manifest(step)["extra"])
+    meta.pop(MANIFEST_KEY, None)
+    return meta
 
 
 def restore(spec: SketchSpec, directory, step: int | None = None, mesh=None,

@@ -204,11 +204,77 @@ def pad_all(n: int, *arrays, floor: int = 32):
         for a in arrays)
 
 
+def normalize_query(spec: SketchSpec, q: QueryBatch):
+    """Shared query-frontend normalization: int32 arrays, broadcast,
+    GSS degeneration (labels/window normalized away), bucket padding with
+    the ``EMPTY`` sentinel. Returns ``(arrays, with_le, last, n)`` where
+    ``arrays`` is the padded per-kind tuple — ``(src, dst, la, lb, les)``
+    for edges, ``(v, lv, les)`` for vertices, ``(lv, les)`` for labels —
+    and ``n`` the unpadded row count (slice answers to ``[:n]``). Used by
+    both ``query`` here and the pooled multi-tenant frontend
+    (``repro.sketch.tenant``), so every dispatch path pads identically.
+    """
+    if q.kind == "edge":
+        src, dst = as_i32(q.src), as_i32(q.dst)
+        n = max(src.shape[0], dst.shape[0])
+        src, dst = as_i32(src, n), as_i32(dst, n)
+        la, lb = as_i32(q.src_label, n), as_i32(q.dst_label, n)
+        le, last = q.edge_label, q.last
+        if spec.kind == "gss":  # degenerate: no labels, no window
+            la, lb, le, last = (jnp.zeros_like(la), jnp.zeros_like(lb),
+                                None, None)
+        with_le = le is not None
+        les = as_i32(le, n) if with_le else jnp.zeros_like(src)
+        return pad_all(n, src, dst, la, lb, les), with_le, last, n
+    if q.kind == "vertex":
+        v = as_i32(q.vertex)
+        n = v.shape[0]
+        lv = as_i32(q.vertex_label, n)
+        le, last = q.edge_label, q.last
+        if spec.kind == "gss":
+            lv, le, last = jnp.zeros_like(lv), None, None
+        with_le = le is not None
+        les = as_i32(le, n) if with_le else jnp.zeros_like(v)
+        return pad_all(n, v, lv, les), with_le, last, n
+    if q.kind == "label":
+        if spec.kind == "lgs":
+            raise NotImplementedError(
+                "LGS stores no label blocks; label aggregates need "
+                "LSketch/GSS")
+        lv = as_i32(q.vertex_label)
+        n = lv.shape[0]
+        le, last = q.edge_label, q.last
+        if spec.kind == "gss":
+            lv, le, last = jnp.zeros_like(lv), None, None
+        with_le = le is not None
+        les = as_i32(le, n) if with_le else jnp.zeros_like(lv)
+        return pad_all(n, lv, les), with_le, last, n
+    raise ValueError(f"unknown query kind {q.kind!r}")
+
+
+def _with_group_window(shards, groups: int = 1):
+    """Every shard queries under its window group's newest subwindow index.
+
+    One group (the default) is the plain sharded handle: the whole fleet
+    reconciles to one global ``cur_widx``. A pooled multi-tenant handle
+    (``repro.sketch.tenant``, DESIGN.md §11) stacks ``groups`` tenants'
+    shard blocks on the leading axis — tenant timelines are independent,
+    so each tenant's block reconciles only within itself (the max lifts
+    over axis 1 of the ``[groups, S//groups]`` view), exactly matching
+    what ``groups`` independent handles would each compute.
+    """
+    cw = shards.cur_widx
+    S = cw.shape[0]
+    per = S // groups
+    gm = jnp.max(cw.reshape((groups, per) + cw.shape[1:]), axis=1,
+                 keepdims=True)
+    g = jnp.broadcast_to(gm, (groups, per) + cw.shape[1:]).reshape(cw.shape)
+    return dataclasses.replace(shards, cur_widx=g)
+
+
 def _with_global_window(shards):
     """Every shard queries under the fleet-wide newest subwindow index."""
-    g = jnp.max(shards.cur_widx, axis=0)
-    return dataclasses.replace(
-        shards, cur_widx=jnp.broadcast_to(g, shards.cur_widx.shape))
+    return _with_group_window(shards, 1)
 
 
 def _lift(shards, stacked: bool):
@@ -225,10 +291,10 @@ def _lift(shards, stacked: bool):
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=(0,),
-                   static_argnames=("horizon", "stacked"))
-def _build_planes(spec, shards, *, horizon, stacked=True):
+                   static_argnames=("horizon", "stacked", "groups"))
+def _build_planes(spec, shards, *, horizon, stacked=True, groups=1):
     _count("planes", "build")
-    shards = _with_global_window(_lift(shards, stacked))
+    shards = _with_group_window(_lift(shards, stacked), groups)
     return _q.build_query_planes(spec.config, shards, horizon)
 
 
@@ -256,14 +322,16 @@ def _build_planes_collective(spec, mesh, axis, shards, *, horizon):
                      check_rep=False)(shards)
 
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("horizon",))
-def _apply_planes_delta(spec, shards, planes, delta, *, horizon):
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("horizon", "groups"))
+def _apply_planes_delta(spec, shards, planes, delta, *, horizon, groups=1):
     """Fold one flush's ``PlanesDelta`` into cached host planes — the warm
-    path of an ingest-flush cache miss. Same global-``cur_widx``
-    reconciliation as ``_build_planes`` (unchanged by construction when
-    ``delta.ok`` held, so the masks match the cached planes')."""
+    path of an ingest-flush cache miss. Same ``cur_widx`` reconciliation
+    as ``_build_planes`` — global for a plain handle, per tenant group for
+    a pooled one (unchanged by construction when ``delta.ok`` held on the
+    coupled rows, so the masks match the cached planes')."""
     _count("planes", "delta")
-    shards = _with_global_window(shards)
+    shards = _with_group_window(shards, groups)
     return _q.apply_planes_delta(spec.config, shards, planes, delta, horizon)
 
 
@@ -273,9 +341,9 @@ def _apply_planes_delta_collective(spec, mesh, axis, shards, planes, delta,
                                    *, horizon):
     """Device-resident delta apply: each device folds its local shard
     block's increment into its local plane block — mesh planes survive a
-    flush without a device-wide rebuild. ``delta.ok`` is a scalar, so the
-    delta's in_specs are spelled per leaf (everything else shards on the
-    mesh axis like the planes)."""
+    flush without a device-wide rebuild. Every delta leaf — ``ok`` is
+    per shard row like ``slot`` — shards on the mesh axis with the
+    planes."""
     _count("planes", "delta")
 
     def body(sh, pl, dl):
@@ -284,7 +352,7 @@ def _apply_planes_delta_collective(spec, mesh, axis, shards, planes, delta,
             sh, cur_widx=jnp.broadcast_to(g, sh.cur_widx.shape))
         return _q.apply_planes_delta(spec.config, sh, pl, dl, horizon)
 
-    dspec = _q.PlanesDelta(ok=P(), slot=P(axis), d_c=P(axis), d_p=P(axis),
+    dspec = _q.PlanesDelta(ok=P(axis), slot=P(axis), d_c=P(axis), d_p=P(axis),
                            d_pool_c=P(axis), d_pool_p=P(axis))
     return shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), dspec),
                      out_specs=P(axis), check_rep=False)(shards, planes,
@@ -314,13 +382,20 @@ def attach_planes_delta(state, base: dict, chain: list, delta) -> None:
     object.__setattr__(state, _PENDING_ATTR, (base, chain + [delta]))
 
 
-def _resolve_pending(spec, state, ckey, horizon, collective):
+def _resolve_pending(spec, state, ckey, horizon, collective, groups=1):
     """Try to serve a plane-cache miss by folding the handle's pending
     flush deltas into the parent's cached planes. Returns the planes, or
     None when incrementality does not hold (any link's flush reset a ring
-    slot / advanced the window / spanned several subwindows — the ring
-    moved, so the chain is useless for *every* horizon and is dropped) or
-    the parent never cached this horizon."""
+    slot / advanced the window / spanned several subwindows on any shard
+    row — the ring moved, so the chain is useless for *every* horizon and
+    is dropped) or the parent never cached this horizon.
+
+    ``delta.ok`` is per shard row; the chain applies only when every row
+    of every link held (all rows' rings unchanged => every group's
+    reconciled mask unchanged). A pooled handle whose groups moved
+    independently could in principle delta-apply the untouched groups and
+    rebuild only the moved ones, but a partial rebuild costs the same full
+    counter reduction — so a single bad row drops the whole chain."""
     pend = getattr(state, _PENDING_ATTR, None)
     if pend is None:
         return None
@@ -330,7 +405,7 @@ def _resolve_pending(spec, state, ckey, horizon, collective):
     for d in deltas:
         # one device read per link, paid on the first query of the handle
         # (which was about to block on the flush results anyway)
-        if not bool(d.ok):
+        if not bool(jnp.all(d.ok)):
             object.__setattr__(state, _PENDING_ATTR, None)
             return None
     planes = base[ckey]
@@ -345,13 +420,13 @@ def _resolve_pending(spec, state, ckey, horizon, collective):
     else:
         for d in deltas:
             planes = _apply_planes_delta(spec, state.shards, planes, d,
-                                         horizon=horizon)
+                                         horizon=horizon, groups=groups)
     PLANES_BUILD_COUNTS["delta"] += 1
     return planes
 
 
 def query_planes(spec: SketchSpec, state, last=None, *,
-                 collective: bool = False):
+                 collective: bool = False, groups: int = 1):
     """The window-reduced ``QueryPlanes`` for ``(state, last)``, memoized
     on the state object (handles are immutable — every ingest/restore/
     merge returns a new one, so a hit is always exact). Horizons that
@@ -364,17 +439,29 @@ def query_planes(spec: SketchSpec, state, last=None, *,
     and kept under the handle's mesh sharding (one device-resident entry
     per horizon, same identity contract — the cache key just gains the
     layout; the delta path applies device-locally via ``shard_map``).
-    Public so serving loops can pre-warm the cache after a flush.
+    With ``groups > 1`` (a pooled multi-tenant handle, DESIGN.md §11) the
+    window reconciliation lifts per tenant group instead of globally, and
+    the entry is keyed apart from the global-lift planes. Public so
+    serving loops can pre-warm the cache after a flush.
     """
+    if collective and groups != 1:
+        raise ValueError("pooled (grouped) planes are host-resident: "
+                         "collective=True requires groups=1")
     k = spec.config.effective_k
     horizon = k if last is None else min(int(last), k)
     cache = getattr(state, _PLANES_ATTR, None)
     if cache is None:
         cache = {}
         object.__setattr__(state, _PLANES_ATTR, cache)
-    ckey = ("collective", horizon) if collective else horizon
+    if collective:
+        ckey = ("collective", horizon)
+    elif groups != 1:
+        ckey = ("pooled", groups, horizon)
+    else:
+        ckey = horizon
     if ckey not in cache:
-        planes = _resolve_pending(spec, state, ckey, horizon, collective)
+        planes = _resolve_pending(spec, state, ckey, horizon, collective,
+                                  groups=groups)
         if planes is None:
             PLANES_BUILD_COUNTS["build"] += 1
             if collective:
@@ -385,7 +472,7 @@ def query_planes(spec: SketchSpec, state, last=None, *,
                 stacked = isinstance(state, ShardedState)
                 shards = state.shards if stacked else state
                 planes = _build_planes(spec, shards, horizon=horizon,
-                                       stacked=stacked)
+                                       stacked=stacked, groups=groups)
         cache[ckey] = planes
     return cache[ckey]
 
@@ -577,18 +664,10 @@ def query(spec: SketchSpec, state, q: QueryBatch,
     stacked = isinstance(state, ShardedState)
     shards = state.shards if stacked else state
     interpret = jax.default_backend() != "tpu"
+    arrays, with_le, last, n = normalize_query(spec, q)
 
     if q.kind == "edge":
-        src, dst = as_i32(q.src), as_i32(q.dst)
-        n = max(src.shape[0], dst.shape[0])
-        src, dst = as_i32(src, n), as_i32(dst, n)
-        la, lb = as_i32(q.src_label, n), as_i32(q.dst_label, n)
-        le, last = q.edge_label, q.last
-        if spec.kind == "gss":  # degenerate: no labels, no window
-            la, lb, le, last = jnp.zeros_like(la), jnp.zeros_like(lb), None, None
-        with_le = le is not None
-        les = as_i32(le, n) if with_le else jnp.zeros_like(src)
-        src, dst, la, lb, les = pad_all(n, src, dst, la, lb, les)
+        src, dst, la, lb, les = arrays
         if path == "collective":
             ctx = _collective_ctx(spec, state)
             planes = query_planes(spec, state, last, collective=True)
@@ -604,15 +683,7 @@ def query(spec: SketchSpec, state, q: QueryBatch,
         return out[:n]
 
     if q.kind == "vertex":
-        v = as_i32(q.vertex)
-        n = v.shape[0]
-        lv = as_i32(q.vertex_label, n)
-        le, last = q.edge_label, q.last
-        if spec.kind == "gss":
-            lv, le, last = jnp.zeros_like(lv), None, None
-        with_le = le is not None
-        les = as_i32(le, n) if with_le else jnp.zeros_like(v)
-        v, lv, les = pad_all(n, v, lv, les)
+        v, lv, les = arrays
         if path == "collective":
             ctx = _collective_ctx(spec, state)
             planes = query_planes(spec, state, last, collective=True)
@@ -630,18 +701,7 @@ def query(spec: SketchSpec, state, q: QueryBatch,
         return out[:n]
 
     if q.kind == "label":
-        if spec.kind == "lgs":
-            raise NotImplementedError(
-                "LGS stores no label blocks; label aggregates need "
-                "LSketch/GSS")
-        lv = as_i32(q.vertex_label)
-        n = lv.shape[0]
-        le, last = q.edge_label, q.last
-        if spec.kind == "gss":
-            lv, le, last = jnp.zeros_like(lv), None, None
-        with_le = le is not None
-        les = as_i32(le, n) if with_le else jnp.zeros_like(lv)
-        lv, les = pad_all(n, lv, les)
+        lv, les = arrays
         if path == "collective":
             ctx = _collective_ctx(spec, state)
             planes = query_planes(spec, state, last, collective=True)

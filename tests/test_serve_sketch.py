@@ -1,9 +1,10 @@
 """SketchServer: flush guard, request grouping, sharded end-to-end serving,
-and the plane-cache prewarm loop (DESIGN.md §10)."""
+the plane-cache prewarm loop (DESIGN.md §10), and pool mode (§11)."""
 
 import importlib
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -175,3 +176,86 @@ def test_serve_sketch_main_no_prewarm_flag(capsys):
           "--requests", "32", "--ingest-batch", "256", "--no-prewarm"])
     out = capsys.readouterr().out
     assert "answered 32 edge queries" in out
+
+
+# --------------------------------------------------------------------------
+# pool mode (DESIGN.md §11): one server fronting a TenantPool
+# --------------------------------------------------------------------------
+
+def test_pool_mode_answers_match_per_tenant_servers():
+    spec = skt.SketchSpec(kind="lsketch", config=_SERVE_CFG, n_shards=2)
+    pool = skt.TenantPool(spec, n_slots=3)
+    pooled = SketchServer(pool=pool, query_path="scan")
+    singles = {t: SketchServer(spec, query_path="scan") for t in range(3)}
+    rng = np.random.default_rng(3)
+    for rnd in range(3):
+        batches = [(t, _mk_batch(np.random.default_rng(10 * rnd + t),
+                                 256, 0, 2400)) for t in range(3)]
+        pooled.ingest_many(batches)
+        for t, b in batches:
+            singles[t].ingest(b)
+    reqs, refs = [], []
+    for t in range(3):
+        for v in range(0, 24, 3):
+            reqs.append(pooled.submit("vertex", tenant=t, v=v, lv=v % 3))
+            refs.append(singles[t].submit("vertex", v=v, lv=v % 3))
+        reqs.append(pooled.submit("edge", tenant=t, src=1, la=1, dst=2,
+                                  lb=2))
+        refs.append(singles[t].submit("edge", src=1, la=1, dst=2, lb=2))
+    assert pooled.flush() == len(reqs)
+    for s in singles.values():
+        s.flush()
+    for r, ref in zip(reqs, refs):
+        assert r.answer == ref.answer
+
+
+def test_pool_mode_tenant_argument_validation():
+    spec = skt.SketchSpec(kind="lsketch", config=_SERVE_CFG, n_shards=1)
+    pool = skt.TenantPool(spec, n_slots=2)
+    pooled = SketchServer(pool=pool, query_path="scan")
+    single = SketchServer(spec, query_path="scan")
+    rng = np.random.default_rng(4)
+    b = _mk_batch(rng, 32, 0, 100)
+    with pytest.raises(ValueError, match="tenant="):
+        pooled.ingest(b)                      # pool mode needs tenant=
+    with pytest.raises(ValueError, match="pool"):
+        single.ingest(b, tenant=0)            # tenant= needs pool mode
+    with pytest.raises(ValueError, match="tenant="):
+        pooled.submit("vertex", v=1, lv=0)
+    with pytest.raises(ValueError, match="tenant="):
+        single.submit("vertex", tenant=0, v=1, lv=0)
+    with pytest.raises(ValueError, match="ingest_many"):
+        single.ingest_many([(0, b)])
+    with pytest.raises(ValueError):
+        SketchServer(spec=skt.SketchSpec(kind="lsketch", config=_SERVE_CFG,
+                                         n_shards=4), pool=pool)
+    with pytest.raises(ValueError, match="collective"):
+        SketchServer(pool=pool, query_path="collective")
+
+
+def test_pool_mode_ingest_many_order_invariant():
+    """The §7.3/§11 flush contract via the server frontend: cross-tenant
+    arrival order never changes the pooled state."""
+    spec = skt.SketchSpec(kind="lsketch", config=_SERVE_CFG, n_shards=2)
+    batches = {t: _mk_batch(np.random.default_rng(40 + t), 128, 0, 2400)
+               for t in range(3)}
+
+    def run(order):
+        pool = skt.TenantPool(spec, n_slots=3)
+        for t in range(3):
+            pool.attach(t)
+        srv = SketchServer(pool=pool, query_path="scan")
+        srv.ingest_many([(t, batches[t]) for t in order])
+        return srv.state
+
+    s1, s2 = run([0, 1, 2]), run([2, 0, 1])
+    for x, y in zip(jax.tree.leaves(s1.shards), jax.tree.leaves(s2.shards)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_serve_sketch_main_pool_mode_smoke(capsys):
+    main(["--sketch", "lsketch", "--shards", "1", "--tenants", "4",
+          "--edges", "1024", "--requests", "16", "--ingest-batch", "256"])
+    out = capsys.readouterr().out
+    assert "4 tenants" in out
+    assert "answered 16 edge queries" in out

@@ -1,0 +1,328 @@
+"""TenantPool conformance (DESIGN.md §11).
+
+The acceptance property: a pool of T tenants ingesting interleaved
+streams answers **every** query bit-identically to T independent
+``n_shards``-matched single-tenant handles — across window advances,
+ring wraparound, and additional-pool overflow, on both query paths.
+Plus the admission/eviction state machine (evict mid-window, readmit
+into a *different* slot, round-trip bit-identity), the cross-tenant
+flush-order contract, and the pooled plane cache's incremental
+(PlanesDelta) maintenance.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from conftest import random_stream
+from repro import sketch as skt
+from repro.core import LSketchConfig
+from repro.core.gss import gss_config
+from repro.core.types import EdgeBatch
+from repro.sketch.query import PLANES_BUILD_COUNTS
+from repro.sketch.tenant import PoolFullError, TenantPool
+
+LS_CFG = LSketchConfig(d=32, n_blocks=2, F=256, r=4, s=4, c=4, k=4,
+                       window_size=400, pool_capacity=256, pool_probes=8)
+GSS_CFG = gss_config(d=32)
+
+
+def _batch(arrays) -> EdgeBatch:
+    return EdgeBatch(*[jnp.asarray(x, jnp.int32) for x in arrays])
+
+
+def _stream(seed, n=300, tmax=1200, n_vertices=50):
+    return random_stream(np.random.default_rng(seed), n=n, tmax=tmax,
+                         n_vertices=n_vertices)
+
+
+def _query_suite(kind, n_queries=24, seed=7):
+    rng = np.random.default_rng(seed)
+    qs = rng.integers(0, 60, n_queries).astype(np.int32)
+    qd = rng.integers(0, 60, n_queries).astype(np.int32)
+    la, lb = (qs % 3).astype(np.int32), (qd % 3).astype(np.int32)
+    le = rng.integers(0, 5, n_queries).astype(np.int32)
+    vs = np.arange(40, dtype=np.int32)
+    lvs = (vs % 3).astype(np.int32)
+    lasts = (None,) if kind == "gss" else (None, 2)
+    for last in lasts:
+        yield skt.QueryBatch.edges(qs, la, qd, lb, last=last)
+        yield skt.QueryBatch.edges(qs, la, qd, lb, edge_label=le, last=last)
+        yield skt.QueryBatch.vertices(vs, lvs, direction="out", last=last)
+        yield skt.QueryBatch.vertices(vs, lvs, direction="in", last=last)
+        if kind != "lgs":
+            yield skt.QueryBatch.labels(np.arange(3, dtype=np.int32),
+                                        direction="out", last=last)
+
+
+def _assert_pool_matches_independent(spec, pool, indep, kind, paths=("scan",
+                                                                    "pallas"),
+                                     ctx=""):
+    """Every tenant x suite query x path: pooled answer == standalone."""
+    for qb in _query_suite(kind):
+        for path in paths:
+            pairs = [(t, qb) for t in sorted(indep)]
+            got = pool.query_many(pairs, path=path)
+            for (t, _), a in zip(pairs, got):
+                ref = skt.query(spec, indep[t], qb, path=path)
+                assert np.array_equal(np.asarray(a), np.asarray(ref)), (
+                    f"{ctx}: pool != independent for tenant {t} "
+                    f"{qb.kind} path={path} last={qb.last}")
+
+
+def _ingest_interleaved(spec, pool, indep, stage_arrays):
+    """One round of per-tenant chunks through both the pool (as a single
+    cross-tenant submit) and the independent handles."""
+    pool.submit(list(stage_arrays.items()))
+    for t, b in stage_arrays.items():
+        indep[t] = skt.ingest(spec, indep[t], b)
+    pool.flush()
+    return indep
+
+
+# --------------------------------------------------------------------------
+# the acceptance property: kinds x shards x window positions
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,ns", [("lsketch", 1), ("lsketch", 2),
+                                     ("gss", 1), ("lgs", 2)])
+def test_pool_bit_identical_across_window_positions(kind, ns):
+    cfg = {"lsketch": LS_CFG, "gss": GSS_CFG, "lgs": None}[kind]
+    spec = (skt.make_spec(kind, n_shards=ns) if cfg is None
+            else skt.make_spec(kind, n_shards=ns, config=cfg))
+    T = 3
+    pool = TenantPool(spec, n_slots=4)
+    indep = {t: skt.create(spec) for t in range(T)}
+    streams = {t: _stream(seed=20 + t) for t in range(T)}
+    if kind == "gss":
+        streams = {t: (s[0], s[1], np.zeros_like(s[2]), np.zeros_like(s[3]),
+                       np.zeros_like(s[4]), s[5], np.zeros_like(s[6]))
+                   for t, s in streams.items()}
+    n = len(streams[0][0])
+    step = -(-n // 3)
+    paths = ("scan",) if kind == "lgs" else ("scan", "pallas")
+    for stage, a in enumerate(range(0, n, step)):
+        chunks = {t: _batch(tuple(x[a:a + step] for x in streams[t]))
+                  for t in range(T)}
+        indep = _ingest_interleaved(spec, pool, indep, chunks)
+        _assert_pool_matches_independent(
+            spec, pool, indep, kind, paths=paths,
+            ctx=f"{kind} x{ns} stage {stage}")
+
+
+def test_pool_window_isolation_on_wraparound():
+    """One tenant's ring wraps far ahead; the others' windows must NOT
+    advance — the per-group cur_widx lift keeps tenant timelines
+    independent (the one cross-tenant coupling the stacked layout could
+    introduce)."""
+    spec = skt.make_spec("lsketch", n_shards=2, config=LS_CFG)
+    pool = TenantPool(spec, n_slots=3)
+    indep = {t: skt.create(spec) for t in range(2)}
+    base = {t: _batch(_stream(seed=30 + t, n=200,
+                              tmax=LS_CFG.window_size - 1))
+            for t in range(2)}
+    indep = _ingest_interleaved(spec, pool, indep, base)
+    late = _batch(tuple(np.asarray(x, np.int32) for x in
+                        ([9999], [0], [9998], [0], [0], [1],
+                         [LS_CFG.subwindow_size * 40])))
+    indep = _ingest_interleaved(spec, pool, indep, {0: late})
+    # tenant 0 wrapped; tenant 1 must still answer its full (unexpired)
+    # window — identical to its standalone handle
+    _assert_pool_matches_independent(spec, pool, indep, "lsketch",
+                                     ctx="wraparound isolation")
+
+
+def test_pool_bit_identical_under_pool_overflow():
+    cfg = LSketchConfig(d=8, n_blocks=2, F=256, r=2, s=2, c=4, k=4,
+                        window_size=400, pool_capacity=8, pool_probes=2)
+    spec = skt.make_spec("lsketch", n_shards=2, config=cfg)
+    pool = TenantPool(spec, n_slots=2)
+    indep = {t: skt.create(spec) for t in range(2)}
+    chunks = {t: _batch(_stream(seed=40 + t, n=400, tmax=1500,
+                                n_vertices=400))
+              for t in range(2)}
+    indep = _ingest_interleaved(spec, pool, indep, chunks)
+    assert int(jnp.sum(pool.state.shards.pool_lost)) > 0, "pool must saturate"
+    _assert_pool_matches_independent(spec, pool, indep, "lsketch",
+                                     ctx="additional-pool overflow")
+
+
+# --------------------------------------------------------------------------
+# admission / eviction
+# --------------------------------------------------------------------------
+
+def test_evict_readmit_round_trip_different_slot(tmp_path):
+    spec = skt.make_spec("lsketch", n_shards=2, config=LS_CFG)
+    pool = TenantPool(spec, n_slots=3, directory=tmp_path)
+    indep = {t: skt.create(spec) for t in ("a", "b")}
+    chunks = {t: _batch(_stream(seed=50 + i, n=250))
+              for i, t in enumerate(("a", "b"))}
+    indep = _ingest_interleaved(spec, pool, indep, chunks)
+    # prime the pooled plane cache so the surgery below must invalidate it
+    pool.query("a", skt.QueryBatch.vertices(
+        np.arange(8, dtype=np.int32), np.zeros(8, np.int32),
+        direction="out"), path="pallas")
+
+    slot_a = pool.slot_of("a")
+    pool.evict("a")
+    assert "a" not in pool.tenants
+    assert skt.saved_extra(tmp_path / "tenant-a") == {"tenant_id": "a"}
+
+    # occupy a's old slot so readmission must land elsewhere
+    pool.ingest("c", _batch(_stream(seed=60, n=100)))
+    assert pool.slot_of("c") == slot_a
+
+    # readmission restores the checkpoint bit-identically into a new slot
+    pool.attach("a")
+    assert pool.slot_of("a") != slot_a
+    _assert_pool_matches_independent(spec, pool, {"a": indep["a"],
+                                                  "b": indep["b"]},
+                                     "lsketch", ctx="post-readmit")
+
+    # and the round-trip survives further mid-window ingest on both sides
+    more = {"a": _batch(_stream(seed=70, n=150, tmax=2000)),
+            "b": _batch(_stream(seed=71, n=150, tmax=2000))}
+    indep = _ingest_interleaved(spec, pool, indep, more)
+    _assert_pool_matches_independent(spec, pool, indep, "lsketch",
+                                     ctx="post-readmit ingest")
+
+
+def test_handle_of_is_standalone_equivalent():
+    spec = skt.make_spec("lsketch", n_shards=2, config=LS_CFG)
+    pool = TenantPool(spec, n_slots=2)
+    b = _batch(_stream(seed=80, n=200))
+    pool.ingest("t", b)
+    ref = skt.ingest(spec, skt.create(spec), b)
+    hspec, hstate = pool.handle_of("t")
+    assert hspec == spec
+    for got, want in zip(jax.tree.leaves(hstate.shards),
+                         jax.tree.leaves(ref.shards)):
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+    qb = skt.QueryBatch.vertices(np.arange(16, dtype=np.int32),
+                                 np.zeros(16, np.int32), direction="out")
+    assert np.array_equal(np.asarray(skt.query(hspec, hstate, qb)),
+                          np.asarray(skt.query(spec, ref, qb)))
+
+
+def test_pool_full_raises_without_directory():
+    spec = skt.make_spec("lsketch", n_shards=1, config=LS_CFG)
+    pool = TenantPool(spec, n_slots=2)
+    pool.attach("a")
+    pool.attach("b")
+    with pytest.raises(PoolFullError):
+        pool.attach("c")
+    assert sorted(pool.tenants) == ["a", "b"]  # pool unchanged
+
+
+def test_pool_full_lru_auto_evicts_with_directory(tmp_path):
+    spec = skt.make_spec("lsketch", n_shards=1, config=LS_CFG)
+    pool = TenantPool(spec, n_slots=2, directory=tmp_path)
+    pool.ingest("a", _batch(_stream(seed=90, n=50)))
+    pool.ingest("b", _batch(_stream(seed=91, n=50)))
+    pool.query("a", skt.QueryBatch.vertices(          # b is now coldest
+        np.arange(4, dtype=np.int32), np.zeros(4, np.int32),
+        direction="out"))
+    slot_b = pool.slot_of("b")
+    pool.attach("c")
+    assert "b" not in pool.tenants and pool.slot_of("c") == slot_b
+    assert skt.saved_extra(tmp_path / "tenant-b") == {"tenant_id": "b"}
+    pool.attach("b")  # readmits from checkpoint (evicting the next-coldest)
+    assert "b" in pool.tenants
+
+
+# --------------------------------------------------------------------------
+# flush-order contract
+# --------------------------------------------------------------------------
+
+def test_cross_tenant_flush_order_deterministic():
+    """Same per-tenant submission order, different cross-tenant
+    interleavings -> bit-identical pooled state (DESIGN.md §7.3 extended
+    to §11: rows are disjoint across tenants, and the pool normalizes the
+    cross-tenant layout by slot order)."""
+    spec = skt.make_spec("lsketch", n_shards=2, config=LS_CFG)
+    b = {t: [_batch(_stream(seed=100 + 10 * i + t, n=80))
+             for i in range(2)] for t in range(3)}
+
+    def run(pair_order):
+        pool = TenantPool(spec, n_slots=3)
+        for t in range(3):  # slot assignment fixed by first touch
+            pool.attach(t)
+        for rnd in pair_order:
+            pool.submit(rnd)
+        return pool.state
+
+    s1 = run([[(0, b[0][0]), (1, b[1][0]), (2, b[2][0])],
+              [(0, b[0][1]), (1, b[1][1]), (2, b[2][1])]])
+    s2 = run([[(2, b[2][0]), (0, b[0][0]), (1, b[1][0])],
+              [(1, b[1][1]), (2, b[2][1]), (0, b[0][1])]])
+    for x, y in zip(jax.tree.leaves(s1.shards), jax.tree.leaves(s2.shards)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_within_tenant_submission_order_preserved():
+    """Two batches for one tenant in a single round apply in submission
+    order — the pair order, not arrival interleaving, is the contract."""
+    spec = skt.make_spec("lsketch", n_shards=1, config=LS_CFG)
+    b1 = _batch(_stream(seed=110, n=60, tmax=300))
+    b2 = _batch(_stream(seed=111, n=60, tmax=300))
+    pool = TenantPool(spec, n_slots=1)
+    pool.submit([(0, b1), (0, b2)])
+    ref = skt.ingest(spec, skt.ingest(spec, skt.create(spec), b1), b2)
+    for x, y in zip(jax.tree.leaves(pool.state.shards),
+                    jax.tree.leaves(ref.shards)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------
+# pooled plane cache: incremental maintenance engages
+# --------------------------------------------------------------------------
+
+def test_pooled_planes_delta_maintenance():
+    spec = skt.make_spec("lsketch", n_shards=2, config=LS_CFG)
+    pool = TenantPool(spec, n_slots=2)
+    sub = LS_CFG.subwindow_size
+    # seed BOTH tenants before the plane build: an untouched slot's first
+    # batch lifts its rows off the NEVER sentinel (a window advance), which
+    # rightly drops any delta chain
+    pool.submit([(0, _batch(_stream(seed=120, n=200, tmax=sub - 1))),
+                 (1, _batch(_stream(seed=121, n=100, tmax=sub - 1)))])
+    pool.flush()
+    qb = skt.QueryBatch.vertices(np.arange(8, dtype=np.int32),
+                                 np.zeros(8, np.int32), direction="out")
+    before = dict(PLANES_BUILD_COUNTS)
+    pool.query(0, qb, path="pallas")                   # cold: full build
+    assert PLANES_BUILD_COUNTS["build"] == before["build"] + 1
+    pool.query(0, qb, path="pallas")                   # cached: no work
+    assert dict(PLANES_BUILD_COUNTS) == {**before,
+                                         "build": before["build"] + 1}
+    # a flush confined to every row's current subwindow (all rows sit at
+    # widx 0; times < subwindow_size never advance it) keeps the
+    # PlanesDelta chain applicable — the cache refreshes by delta-apply
+    pool.ingest(1, _batch(_stream(seed=122, n=150, tmax=sub - 1)))
+    pool.query(1, qb, path="pallas")                   # delta, not rebuild
+    assert PLANES_BUILD_COUNTS["delta"] == before["delta"] + 1
+    assert PLANES_BUILD_COUNTS["build"] == before["build"] + 1
+
+
+# --------------------------------------------------------------------------
+# frontend validation
+# --------------------------------------------------------------------------
+
+def test_query_many_rejects_mixed_static_axes():
+    spec = skt.make_spec("lsketch", n_shards=1, config=LS_CFG)
+    pool = TenantPool(spec, n_slots=2)
+    pool.ingest(0, _batch(_stream(seed=130, n=40)))
+    v = np.arange(4, dtype=np.int32)
+    lv = np.zeros(4, np.int32)
+    vq = skt.QueryBatch.vertices(v, lv, direction="out")
+    eq = skt.QueryBatch.edges(v, lv, v, lv)
+    with pytest.raises(ValueError, match="kind/direction/last"):
+        pool.query_many([(0, vq), (0, eq)])
+    with pytest.raises(ValueError, match="edge_label presence"):
+        pool.query_many([
+            (0, skt.QueryBatch.vertices(v, lv, direction="out")),
+            (0, skt.QueryBatch.vertices(v, lv, edge_label=lv,
+                                        direction="out"))])
+    with pytest.raises(ValueError, match="collective"):
+        pool.query_many([(0, vq)], path="collective")
