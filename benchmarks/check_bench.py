@@ -46,6 +46,9 @@ GATES = [
     # for the ingest round and for the grouped query (serve_bench.py)
     ("tenant_pool_ingest_x8", "tenant_independent_ingest_x8"),
     ("tenant_pool_query_x8", "tenant_independent_query_x8"),
+    # §12 heavy hitters: the plane-cached decode kernel + segment top-k
+    # must beat the per-shard host decode loop computing the same ranking
+    ("hh_vertex_kernel_x4", "hh_vertex_host_x4"),
 ]
 
 METRIC = "total_s"

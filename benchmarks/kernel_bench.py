@@ -315,6 +315,82 @@ def query_path_throughput(n=16384, q=2048, shard_counts=(1, 4)):
     return rows
 
 
+def heavy_hitter_throughput(n=49152, k=16, n_shards=4):
+    """Heavy-hitter path comparison (DESIGN.md §12): exact global top-k
+    vertices on one loaded 4-shard handle via
+
+      * ``hh_vertex_host_x{S}``   — the fixed host reference
+                                    (``core.analytics.heavy_hitter_vertices``
+                                    per unstacked shard under the reconciled
+                                    window, dict-merged): the decode loop a
+                                    paper-literal implementation runs;
+      * ``hh_vertex_kernel_x{S}`` — the handle-layer pallas path: cell-decode
+                                    kernel over cached ``QueryPlanes`` +
+                                    the segment top-k epilogue, one dispatch.
+
+    Both compute the same exact ranking (pinned bit-identical in
+    tests/test_analytics.py). Same ``_timed_medians`` same-run A/B
+    discipline; ``check_bench.py`` gates kernel < host.
+
+    The workload is a *loaded* sketch (wide vertex range, ~40% matrix
+    occupancy) and is deliberately NOT scaled down by ``--quick``: the
+    host loop's cost is per-live-cell while the kernel path is
+    shape-bound, so a near-empty sketch measures nothing but dispatch
+    overhead. Only the one-time ingest grows with n.
+    """
+    import dataclasses
+    from repro import sketch as skt
+    from repro.core.analytics import heavy_hitter_vertices
+
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=1024)
+    rng = np.random.default_rng(0)
+    batch = EdgeBatch(
+        src=jnp.asarray(rng.integers(0, 5000, n), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, 5000, n), jnp.int32),
+        src_label=jnp.asarray(rng.integers(0, 32, n), jnp.int32),
+        dst_label=jnp.asarray(rng.integers(0, 32, n), jnp.int32),
+        edge_label=jnp.asarray(rng.integers(0, 6, n), jnp.int32),
+        weight=jnp.asarray(rng.integers(1, 4, n), jnp.int32),
+        time=jnp.asarray(np.full(n, 3), jnp.int32))
+    spec = skt.make_spec("lsketch", n_shards=n_shards, config=cfg)
+    state = skt.ingest(spec, skt.create(spec), batch, path="scan")
+    jax.block_until_ready(state.shards.C)
+    gw = jnp.asarray(int(np.asarray(state.shards.cur_widx).max()), jnp.int32)
+
+    def run_host():
+        # exact truth the host way: rank *all* identities per shard, merge
+        agg: dict = {}
+        for s in range(n_shards):
+            sh = dataclasses.replace(skt.unstack_state(state, s),
+                                     cur_widx=gw)
+            for vid, w in heavy_hitter_vertices(cfg, sh, k=10 ** 6):
+                agg[vid] = agg.get(vid, 0) + w
+        return sorted(agg.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+
+    def run_kernel():
+        out = skt.heavy_vertices(spec, state, k, path="pallas")
+        jax.block_until_ready(out)
+        return out
+
+    run_kernel()  # pre-warm: compile + plane cache
+    medians = _timed_medians([("hh_vertex_host", run_host),
+                              ("hh_vertex_kernel", run_kernel)],
+                             warmup=1, iters=7)
+    rows, result = [], {}
+    for tag in ("hh_vertex_host", "hh_vertex_kernel"):
+        dt = medians[tag]
+        rows.append([f"{tag}_x{n_shards}", k, n_shards,
+                     f"{dt * 1e3:.3f}", f"{dt:.4f}"])
+        result[f"{tag}_x{n_shards}"] = {
+            "k": k, "shards": n_shards, "ingested_edges": n,
+            "ms_per_call": dt * 1e3, "total_s": dt}
+    write_csv("heavy_hitter_throughput",
+              ["impl", "k", "shards", "ms_per_call", "total_s"], rows)
+    _merge_bench(result)
+    return rows
+
+
 def mixed_serve_throughput(n=4096, q=1024, rounds=6, n_shards=4):
     """Mixed ingest/query serving loop (DESIGN.md §10): alternating
     flush+query rounds on one sharded handle — the paper's time-sensitive
@@ -652,6 +728,10 @@ def main(argv=None):
         print("impl,rounds,queries,shards,us_q_p50,us_q_p99,total_s")
         for r in mrows:
             print(",".join(str(x) for x in r))
+        hrows = heavy_hitter_throughput(k=16)
+        print("impl,k,shards,ms_per_call,total_s")
+        for r in hrows:
+            print(",".join(str(x) for x in r))
         from .serve_bench import run_all as _serve_rows
         _serve_rows(quick=args.quick)
         if not args.no_mesh:
@@ -679,6 +759,10 @@ def main(argv=None):
                                    rounds=4 if args.quick else 6)
     print("impl,rounds,queries,shards,us_q_p50,us_q_p99,total_s")
     for r in mrows:
+        print(",".join(str(x) for x in r))
+    hrows = heavy_hitter_throughput(k=16)
+    print("impl,k,shards,ms_per_call,total_s")
+    for r in hrows:
         print(",".join(str(x) for x in r))
     from .serve_bench import run_all as _serve_rows
     _serve_rows(quick=args.quick)

@@ -100,7 +100,36 @@ with tempfile.TemporaryDirectory() as d:
     print(f"\ncheckpoint restored 4 shards -> 8 shards (balanced reshard): "
           f"weight(a->b) {same} vs {grown} (both >= truth)")
 
-# 7. many tenants, one compiled program (DESIGN.md §11): a TenantPool
+# 7. reversible-sketch analytics (DESIGN.md §12): every occupied cell and
+#    pool entry decodes back to its (src, dst) vertex identities, so the
+#    handle answers enumeration queries the paper never shipped — windowed
+#    heavy hitters, top-k edges, label rankings, batched reachability —
+#    straight off the cached QueryPlanes. Identities come back as packed
+#    vids (`precompute(cfg, v, label).vid`); weights are one-sided
+#    (est >= truth), so any truly-heavy vertex must appear in the top-k.
+print("\n-- analytics (heavy hitters over the live window) --")
+from jax import numpy as jnp
+from repro.core.lsketch import precompute
+
+uniq = np.unique(np.stack([np.concatenate([stream.src, stream.dst]),
+                           np.concatenate([stream.src_label,
+                                           stream.dst_label])]), axis=1)
+vid_of = dict(zip(uniq[0].tolist(),
+                  np.asarray(precompute(cfg, jnp.asarray(uniq[0]),
+                                        jnp.asarray(uniq[1])).vid).tolist()))
+v_of_vid = {vid: v for v, vid in vid_of.items()}
+ids, ws = skt.heavy_vertices(spec, state, k=3)          # path="pallas" on TPU
+for vid, w in zip(np.asarray(ids).tolist(), np.asarray(ws).tolist()):
+    v = v_of_vid[vid]
+    print(f"heavy out-vertex {v:5d}  est: {w:5d}  true: "
+          f"{gt.vertex_weight(v)}")
+s, t, ew = skt.heavy_edges(spec, state, k=1)
+print("heaviest edge           est:", int(ew[0]), "  (src, dst) =",
+      (v_of_vid[int(s[0])], v_of_vid[int(t[0])]))
+ok = skt.reachable_many(spec, state, [a], [la], [b], [lb], max_hops=4)
+print("reachable(a -> b)?      est:", bool(ok[0]), "true:", gt.reachable(a, b))
+
+# 8. many tenants, one compiled program (DESIGN.md §11): a TenantPool
 #    packs same-spec tenants onto one stacked state, so a cross-tenant
 #    ingest round or query group is a single dispatch — and every answer
 #    is bit-identical to the tenant's standalone sketch

@@ -1,15 +1,25 @@
-"""Higher-level LSketch-powered analytics (paper §1: "finding top-k items,
+"""Host-side analytics reference (paper §1: "finding top-k items,
 finding heavy-hitters, approximate weight estimation, triangle counting").
 
 These build on the primitive queries of §4 exactly the way the paper
 suggests ("our algorithm can be applied as a black box") — each is a
 vectorized matrix/pool scan plus primitive edge queries, all windowed.
 
+This module is the **fixed host reference twin** of the handle-layer
+portfolio (``repro.sketch.analytics``, DESIGN.md §12): single-sketch,
+numpy dict aggregation, deliberately simple. The kernel path must match
+it bit-for-bit (pinned in tests/test_analytics.py), which fixes the
+semantics under collisions and pool overflow:
+
   * heavy_hitter_vertices — top-k vertices by windowed out/in weight. Scans
     every occupied cell once, aggregates by the recoverable vertex identity
     (block, address, fingerprint) via the same H^-1 reversibility the BFS
-    uses, merges the pool, then takes top-k. One-sided estimates.
-  * heavy_hitter_edges — top-k (src, dst) cells by windowed weight.
+    uses (``hashing.decode_line_vid``), merges the pool, then takes top-k.
+    One-sided estimates; ties break by ascending packed vid.
+  * heavy_hitter_edges — top-k (src_vid, dst_vid) pairs by windowed weight,
+    matrix cells and pool entries aggregated together (an edge that
+    overflowed to the pool ranks with full weight); ties break by ascending
+    (src_vid, dst_vid).
   * triangle_estimate — approximate directed-triangle count: for each heavy
     edge (u, v), intersect successors(v) with successors(u)'s targets via
     batched edge-existence checks (the sketch-native wedge-closure check).
@@ -43,20 +53,13 @@ def _cell_weights_by_vertex(cfg: LSketchConfig, state: LSketchState,
     starts, widths = cfg.block_start_width()
     d = cfg.d
     rows = jnp.arange(d, dtype=jnp.int32)
-    line_block = jnp.searchsorted(starts, rows, side="right") - 1
-    line_rel = rows - starts[line_block]
-    wB = widths[line_block]
     if direction == "out":
         # owner = source vertex: row line, index ia, print fa
-        offs = hsh.candidate_offsets(fa, cfg.r)  # [d,d,2,r]
-        sel = jnp.take_along_axis(offs, ia[..., None], axis=-1)[..., 0]
-        s_v = (line_rel[:, None, None] - sel) % wB[:, None, None]
-        vid = hsh.pack_vertex_id(line_block[:, None, None], s_v, fa, cfg.F)
+        vid = hsh.decode_line_vid(rows[:, None, None], ia, fa, starts,
+                                  widths, cfg.r, cfg.F)
     else:
-        offs = hsh.candidate_offsets(fb, cfg.r)
-        sel = jnp.take_along_axis(offs, ib[..., None], axis=-1)[..., 0]
-        s_v = (line_rel[None, :, None] - sel) % wB[None, :, None]
-        vid = hsh.pack_vertex_id(line_block[None, :, None], s_v, fb, cfg.F)
+        vid = hsh.decode_line_vid(rows[None, :, None], ib, fb, starts,
+                                  widths, cfg.r, cfg.F)
     vid = jnp.where(occupied & (w > 0), vid, -1)
     return vid.reshape(-1), w.reshape(-1)
 
@@ -79,28 +82,62 @@ def heavy_hitter_vertices(cfg: LSketchConfig, state: LSketchState, k: int = 10,
     agg: dict = {}
     for v, ww in zip(vid[live].tolist(), w[live].tolist()):
         agg[v] = agg.get(v, 0) + ww
-    return sorted(agg.items(), key=lambda kv: -kv[1])[:k]
+    return sorted(agg.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
 
 
 def heavy_hitter_edges(cfg: LSketchConfig, state: LSketchState, k: int = 10,
                        last: int | None = None):
-    """Top-k matrix cells by windowed weight: [(src_vid, dst_vid, w)]."""
+    """Top-k (src_vid, dst_vid) pairs by windowed weight: [(src, dst, w)].
+
+    Aggregates every occupied matrix cell *and* every pool entry (an edge
+    that overflowed to the additional pool ranks with its full weight) and
+    sorts the complete aggregate — no prefix truncation, so a heavy pair is
+    never missed however many zero-weight cells outrank it in address
+    order. Ties break by ascending (src_vid, dst_vid).
+    """
     mask = np.asarray(valid_slot_mask(cfg, state, last)).astype(np.int64)
-    w = (np.asarray(state.C) * mask).sum(-1)  # [d,d,2]
+    w = ((np.asarray(state.C) * mask).sum(-1)).reshape(-1)  # [d*d*2]
     src_vid, _ = _cell_weights_by_vertex(cfg, state, "out", last)
     dst_vid, _ = _cell_weights_by_vertex(cfg, state, "in", last)
     src_vid = np.asarray(src_vid)
     dst_vid = np.asarray(dst_vid)
-    flat = w.reshape(-1)
-    order = np.argsort(-flat)[: 4 * k]
-    out = []
-    for i in order:
-        if flat[i] <= 0 or src_vid[i] < 0:
-            continue
-        out.append((int(src_vid[i]), int(dst_vid[i]), int(flat[i])))
-        if len(out) == k:
-            break
-    return out
+    # pool entries: packed endpoint vids are the stored keys
+    pw = (np.asarray(state.pool_C) * mask).sum(-1)
+    pk = np.asarray(state.pool_key)
+    plive = (pk[:, 0] != EMPTY) & (pw > 0)
+    src_vid = np.concatenate([src_vid, np.where(plive, pk[:, 0], -1)])
+    dst_vid = np.concatenate([dst_vid, np.where(plive, pk[:, 1], -1)])
+    w = np.concatenate([w, pw])
+    live = (src_vid >= 0) & (w > 0)
+    agg: dict = {}
+    for a, b, ww in zip(src_vid[live].tolist(), dst_vid[live].tolist(),
+                        w[live].tolist()):
+        agg[(a, b)] = agg.get((a, b), 0) + ww
+    top = sorted(agg.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+    return [(a, b, ww) for (a, b), ww in top]
+
+
+def top_label_blocks(cfg: LSketchConfig, state: LSketchState, k: int = 10,
+                     direction: str = "out", last: int | None = None
+                     ) -> List[Tuple[int, int]]:
+    """Top-k (vertex-label block, weight) by windowed out/in weight — the
+    decoded owner vid's block id is its label block; matrix cells and pool
+    entries aggregate together. Ties break by ascending block id."""
+    vid, w = _cell_weights_by_vertex(cfg, state, direction, last)
+    vid = np.asarray(vid)
+    w = np.asarray(w)
+    mask = np.asarray(valid_slot_mask(cfg, state, last)).astype(np.int64)
+    pw = (np.asarray(state.pool_C) * mask).sum(-1)
+    col = 0 if direction == "out" else 1
+    pvid = np.asarray(state.pool_key[:, col])
+    vid = np.concatenate([vid, np.where(pw > 0, pvid, -1)])
+    w = np.concatenate([w, pw])
+    live = (vid >= 0) & (w > 0)
+    blk = vid[live] // (2048 * cfg.F)
+    agg: dict = {}
+    for m, ww in zip(blk.tolist(), w[live].tolist()):
+        agg[m] = agg.get(m, 0) + ww
+    return sorted(agg.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
 
 
 def triangle_estimate(cfg: LSketchConfig, state: LSketchState,

@@ -134,6 +134,35 @@ def unpack_vertex_id(vid: jnp.ndarray, F: int):
     return m, s, f
 
 
+def decode_line_vid(lines, idx, f, starts, widths, r: int, F: int) -> jnp.ndarray:
+    """Invert one stored key side back to its packed vertex identity.
+
+    The reversibility seam (gMatrix trick): a cell on absolute line
+    ``lines`` (row for the source side, column for the destination side)
+    whose key stores candidate index ``idx`` and fingerprint ``f`` was
+    addressed as ``line = start_m + (s + offs(f)[idx]) % width_m``, so
+
+        s = (line - start_m - offs(f)[idx]) mod width_m
+
+    and ``pack_vertex_id(m, s, f)`` recovers the endpoint. Exact whenever
+    block widths divide 2^32 (every power-of-two layout). Shared by
+    resharding (``sketch/reshard.py``), the successor scan / BFS
+    (``core/queries.py``), the host analytics reference
+    (``core/analytics.py``), and the heavy-hitter decode kernels
+    (``kernels/heavy_hitters``) — one implementation, bit-identical
+    everywhere. Inputs broadcast against each other; ``starts``/``widths``
+    are the per-block partition from ``LSketchConfig.block_start_width``.
+    """
+    lines, idx, f = jnp.broadcast_arrays(
+        jnp.asarray(lines, jnp.int32), jnp.asarray(idx, jnp.int32),
+        jnp.asarray(f, jnp.int32))
+    m = jnp.searchsorted(starts, lines, side="right") - 1
+    off = jnp.take_along_axis(candidate_offsets(f, r), idx[..., None],
+                              axis=-1)[..., 0]
+    s = (lines - starts[m] - off) % widths[m]
+    return pack_vertex_id(m, s, f, F)
+
+
 # ---- label hashing -------------------------------------------------------
 
 def vertex_label_block(label, n_blocks: int, seed: int) -> jnp.ndarray:

@@ -369,18 +369,12 @@ def successor_scan(cfg: LSketchConfig, state: LSketchState, vertex, vlabel):
     want_i = jnp.arange(cfg.r, dtype=jnp.int32)[None, :, None, None]
     live = jnp.sum(state.C[lines] * mask.astype(state.C.dtype), -1) > 0
     match = occupied & (ia == want_i) & (fa == pre.f[:, None, None, None]) & live
-    # reconstruct the successor address from its column j
+    # reconstruct the successor address from its column j: the shared
+    # reversibility seam (same implementation reshard and analytics use)
     starts, widths = cfg.block_start_width()
     cols = jnp.arange(cfg.d, dtype=jnp.int32)
-    # block id of every column (uniform or skewed): searchsorted over starts
-    col_block = jnp.searchsorted(starts, cols, side="right") - 1
-    col_rel = cols - starts[col_block]
-    wB = widths[col_block]
-    offsB = hsh.candidate_offsets(fb, cfg.r)  # [B, r, d, 2, r]
-    off_sel = jnp.take_along_axis(offsB, ib[..., None].astype(jnp.int32), axis=-1)[..., 0]
-    sB = (col_rel[None, None, :, None] - off_sel) % wB[None, None, :, None]
-    vid = hsh.pack_vertex_id(col_block[None, None, :, None], sB, fb, cfg.F)
-    B = vertex.shape[0] if jnp.ndim(vertex) else 1
+    vid = hsh.decode_line_vid(cols[None, None, :, None], ib, fb, starts,
+                              widths, cfg.r, cfg.F)
     vids_m = vid.reshape(keys.shape[0], -1)
     valid_m = match.reshape(keys.shape[0], -1)
     # pool successors
@@ -476,13 +470,8 @@ def _successors_by_vid(cfg: LSketchConfig, state: LSketchState, vids):
     live = jnp.sum(state.C[lines] * mask.astype(state.C.dtype), -1) > 0
     match = occupied & (ia == want_i) & (fan == pre.f[:, None, None, None]) & live
     cols = jnp.arange(cfg.d, dtype=jnp.int32)
-    col_block = jnp.searchsorted(starts, cols, side="right") - 1
-    col_rel = cols - starts[col_block]
-    wB = widths[col_block]
-    offsB = hsh.candidate_offsets(fb, cfg.r)
-    off_sel = jnp.take_along_axis(offsB, ib[..., None].astype(jnp.int32), axis=-1)[..., 0]
-    sB = (col_rel[None, None, :, None] - off_sel) % wB[None, None, :, None]
-    vid = hsh.pack_vertex_id(col_block[None, None, :, None], sB, fb, cfg.F)
+    vid = hsh.decode_line_vid(cols[None, None, :, None], ib, fb, starts,
+                              widths, cfg.r, cfg.F)
     vids_m = vid.reshape(keys.shape[0], -1)
     valid_m = match.reshape(keys.shape[0], -1)
     pm = (state.pool_key[:, 0][None, :] == vids[:, None])

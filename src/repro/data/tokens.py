@@ -110,18 +110,41 @@ class TokenPipeline:
         return {"cursor": self.cursor}
 
 
-def bigram_stream(tokens: np.ndarray, n_bands: int = 4):
+# fixed vocab reference for frequency banding when the caller has no
+# pipeline config in hand (GPT-2-family vocab width)
+DEFAULT_BAND_VOCAB = 50304
+
+
+def token_band(t, n_bands: int, vocab_size: int) -> np.ndarray:
+    """Frequency band of a token id against a *fixed* vocab reference.
+
+    The one banding function shared by ``bigram_stream`` ingest and
+    ``BigramSketch.bigram_weight`` queries: both sides must derive the
+    identical vertex label or edge-weight telemetry probes the wrong rows.
+    Keyed on ``vocab_size`` — never on a per-batch ``tokens.max()``, which
+    would make a token's band drift with whatever else shared its batch.
+    Log-spaced: band = floor(log1p(t) / log1p(vocab) * n_bands), clipped.
+    Accepts scalars or arrays; returns int32.
+    """
+    t = np.asarray(t)
+    raw = (np.log1p(t.astype(np.float64)) / np.log1p(float(vocab_size))
+           * n_bands).astype(np.int32)
+    return np.minimum(np.int32(n_bands - 1), raw).astype(np.int32)
+
+
+def bigram_stream(tokens: np.ndarray, n_bands: int = 4,
+                  vocab_size: int = DEFAULT_BAND_VOCAB):
     """Token bigrams as a labeled graph stream (telemetry for dense LMs):
-    vertices = tokens, vertex label = frequency band (token id magnitude),
-    edge label = position bucket. Returns dict of stream arrays."""
+    vertices = tokens, vertex label = frequency band (``token_band`` on the
+    fixed ``vocab_size`` reference), edge label = position bucket. Returns
+    dict of stream arrays."""
     flat = tokens.reshape(-1)
     src, dst = flat[:-1], flat[1:]
-    band = lambda t: (np.log1p(t.astype(np.float64)) /
-                      np.log1p(tokens.max() + 1) * (n_bands - 1)).astype(np.int32)
     pos = np.arange(len(src), dtype=np.int32)
     return {
         "src": src.astype(np.int32), "dst": dst.astype(np.int32),
-        "src_label": band(src), "dst_label": band(dst),
+        "src_label": token_band(src, n_bands, vocab_size),
+        "dst_label": token_band(dst, n_bands, vocab_size),
         "edge_label": (pos % 8).astype(np.int32),
         "weight": np.ones(len(src), np.int32),
         "time": (pos // max(1, len(src) // 64)).astype(np.int32),

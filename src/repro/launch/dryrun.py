@@ -158,6 +158,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per partition
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     rep = hlo_analyze(hlo_text)  # per-device, scan-aware (hlo_analysis.py)
 

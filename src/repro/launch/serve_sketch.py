@@ -281,6 +281,52 @@ class SketchServer:
         self.pending.clear()
         return done
 
+    # ---- analytics (DESIGN.md §12) ----
+    def top_k(self, kind: str = "vertex", k: int = 10, *,
+              direction: str = "out", last=None, tenant=None):
+        """Windowed heavy-hitter top-k over the served sketch — ``kind``
+        "vertex" -> (vids, weights), "edge" -> (src, dst, weights),
+        "label" -> (blocks, weights), each a ``[k]`` tuple padded with
+        (-1, 0). Pool mode answers for one tenant (``tenant=``). Flushes
+        pending queries first so the ranking reflects every prior submit;
+        the dispatch reuses the same plane cache the query path keeps hot.
+        """
+        self.flush()
+        if self.pool is not None:
+            if tenant is None:
+                raise ValueError("pool-mode top_k needs tenant=")
+            return self.pool.top_k(tenant, kind=kind, k=k,
+                                   direction=direction, last=last)
+        if tenant is not None:
+            raise ValueError("tenant= needs a pool-mode server (pool=)")
+        st = self.state
+        if kind == "vertex":
+            return skt.heavy_vertices(self.spec, st, k, direction=direction,
+                                      last=last, path=self.query_path)
+        if kind == "edge":
+            return skt.heavy_edges(self.spec, st, k, last=last,
+                                   path=self.query_path)
+        if kind == "label":
+            return skt.top_labels(self.spec, st, k, direction=direction,
+                                  last=last, path=self.query_path)
+        raise ValueError(f"unknown top_k kind {kind!r}")
+
+    def reachable(self, src, src_label, dst, dst_label, *,
+                  max_hops: int = 8, tenant=None):
+        """Batched multi-hop reachability (bool [B]) over the served
+        sketch; pool mode extracts the tenant's standalone handle."""
+        self.flush()
+        if self.pool is not None:
+            if tenant is None:
+                raise ValueError("pool-mode reachable needs tenant=")
+            spec, st = self.pool.handle_of(tenant)
+            return skt.reachable_many(spec, st, src, src_label, dst,
+                                      dst_label, max_hops=max_hops)
+        if tenant is not None:
+            raise ValueError("tenant= needs a pool-mode server (pool=)")
+        return skt.reachable_many(self.spec, self.state, src, src_label,
+                                  dst, dst_label, max_hops=max_hops)
+
 
 def _batch_axis(reqs: List[QueryRequest], k: str) -> bool:
     """Request fields that batch into arrays (vs the static grouping axes)."""
@@ -328,6 +374,9 @@ def main(argv=None):
                     help="skip keeping the plane cache hot across ingest "
                          "flushes; the first query after a flush pays the "
                          "delta-apply or rebuild inline")
+    ap.add_argument("--topk", type=int, default=5,
+                    help="heavy-hitter summary size printed after serving "
+                         "(reversible-sketch analytics, DESIGN.md §12)")
     ap.add_argument("--tenants", type=int, default=0, metavar="T",
                     help="serve T independent tenant sketches from one "
                          "TenantPool (stream split round-robin; each "
@@ -408,6 +457,22 @@ def main(argv=None):
     print(f"answered {len(reqs)} edge queries in {dt_q:.2f}s "
           f"({len(reqs) / dt_q:.0f} q/s)")
     print("sample answers:", [r.answer for r in reqs[:8]])
+
+    if args.sketch != "lgs":  # LGS stores no keys: no reversible analytics
+        tenant = 0 if args.tenants else None
+        t0 = time.time()
+        vids, vws = server.top_k("vertex", args.topk, tenant=tenant)
+        es, ed, ews = server.top_k("edge", args.topk, tenant=tenant)
+        dt_a = time.time() - t0
+        vtop = [(int(v), int(w)) for v, w in zip(np.asarray(vids),
+                                                 np.asarray(vws)) if v >= 0]
+        etop = [((int(a), int(b)), int(w)) for a, b, w in
+                zip(np.asarray(es), np.asarray(ed), np.asarray(ews))
+                if a >= 0]
+        print(f"top-{args.topk} heavy vertices (vid, w): {vtop} "
+              + (f"[tenant {tenant}] " if args.tenants else "")
+              + f"({dt_a:.2f}s)")
+        print(f"top-{args.topk} heavy edges ((src, dst), w): {etop}")
 
 
 if __name__ == "__main__":

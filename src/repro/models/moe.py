@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import jax
 from jax.ad_checkpoint import checkpoint_name
+from jax.experimental.shard_map import shard_map
 import jax.numpy as jnp
 
 from repro.distributed.sharding_ctx import constrain
@@ -103,11 +104,11 @@ def moe(params, x, cfg: ModelConfig, token_ids=None,
         from jax.sharding import PartitionSpec as P
         dp = ctx.logical["dp"]
         dspec = dp if len(dp) > 1 else dp[0]
-        xe, fe, pos_c, keep = jax.shard_map(
+        xe, fe, pos_c, keep = shard_map(
             dispatch_local, mesh=ctx.mesh,
             in_specs=(P(dspec, None), P(dspec, None)),
             out_specs=(P(None, dspec, None), P(dspec), P(dspec), P(dspec)),
-            check_vma=False,
+            check_rep=False,
         )(xf, expert_ids)
     else:
         xe, fe, pos_c, keep = dispatch_local(xf, expert_ids)
@@ -136,12 +137,12 @@ def moe(params, x, cfg: ModelConfig, token_ids=None,
         from jax.sharding import PartitionSpec as P
         dp = ctx.logical["dp"]
         dspec = dp if len(dp) > 1 else dp[0]
-        y = jax.shard_map(
+        y = shard_map(
             combine_local, mesh=ctx.mesh,
             in_specs=(P(None, dspec, None), P(dspec), P(dspec), P(dspec),
                       P(dspec, None)),
             out_specs=P(dspec, None),
-            check_vma=False,
+            check_rep=False,
         )(ye, fe, pos_c, keep, gate_vals)
     else:
         y = combine_local(ye, fe, pos_c, keep, gate_vals)

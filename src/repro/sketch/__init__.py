@@ -26,6 +26,8 @@ from .state import (MeshContext, ShardedState, create, merge_all,
 from .ingest import AsyncIngestor, ingest, ingest_single
 from .query import (QueryBatch, clear_plane_cache, default_query_path, query,
                     query_planes, resolve_query_path)
+from .analytics import (heavy_edges, heavy_vertices, reachable_many,
+                        top_labels)
 from .reshard import reshard
 from .checkpoint import restore, save, saved_extra, saved_spec
 from .tenant import PoolFullError, TenantPool
@@ -38,6 +40,7 @@ __all__ = [
     "unstack_state", "with_mesh",
     "AsyncIngestor", "ingest", "ingest_single", "QueryBatch", "query",
     "query_planes", "clear_plane_cache", "resolve_query_path",
-    "default_query_path", "reshard", "restore", "save", "saved_extra",
+    "default_query_path", "heavy_vertices", "heavy_edges", "top_labels",
+    "reachable_many", "reshard", "restore", "save", "saved_extra",
     "saved_spec", "PoolFullError", "TenantPool",
 ]

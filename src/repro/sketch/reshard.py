@@ -77,21 +77,15 @@ def _addressing_from_vids(cfg, vids):
 def _cell_vids(cfg, rows, cols, keys):
     """Invert (cell address, packed key) -> (vid_src, vid_dst): the stored
     (ia, fa) fields identify the row as the ia-th candidate of the source,
-    so ``s(A) = (row_rel - offs(fA)[iA]) mod width`` (successor-scan math);
-    symmetrically for the column with (ib, fb)."""
+    symmetrically for the column with (ib, fb) — ``hashing.decode_line_vid``
+    is the shared reversibility implementation."""
     k = jnp.asarray(keys, jnp.int32)
     ia, ib, fa, fb = hsh.unpack_key(k, cfg.F)
     starts, widths = cfg.block_start_width()
-
-    def one(lines, idx, f):
-        m = jnp.searchsorted(starts, lines, side="right") - 1
-        off = jnp.take_along_axis(hsh.candidate_offsets(f, cfg.r),
-                                  idx[:, None].astype(jnp.int32), -1)[:, 0]
-        s = (lines - starts[m] - off) % widths[m]
-        return hsh.pack_vertex_id(m, s, f, cfg.F)
-
-    return (np.asarray(one(jnp.asarray(rows, jnp.int32), ia, fa)),
-            np.asarray(one(jnp.asarray(cols, jnp.int32), ib, fb)))
+    return (np.asarray(hsh.decode_line_vid(rows, ia, fa, starts, widths,
+                                           cfg.r, cfg.F)),
+            np.asarray(hsh.decode_line_vid(cols, ib, fb, starts, widths,
+                                           cfg.r, cfg.F)))
 
 
 def _decode_records(cfg, shards):
@@ -114,13 +108,19 @@ def _decode_records(cfg, shards):
 
     pool_key = np.asarray(shards.pool_key)  # [S, Q, 2]
     sp, slots = np.nonzero(pool_key[:, :, 0] != EMPTY)
-    return (
-        np.concatenate([vid_src, pool_key[sp, slots, 0]]),
-        np.concatenate([vid_dst, pool_key[sp, slots, 1]]),
-        np.concatenate([C, np.asarray(shards.pool_C)[sp, slots] * keep[sp]]),
-        np.concatenate([Pm, np.asarray(shards.pool_P)[sp, slots]
-                        * keep[sp][:, :, None]]),
-    )
+    vid_src = np.concatenate([vid_src, pool_key[sp, slots, 0]])
+    vid_dst = np.concatenate([vid_dst, pool_key[sp, slots, 1]])
+    C = np.concatenate([C, np.asarray(shards.pool_C)[sp, slots] * keep[sp]])
+    Pm = np.concatenate([Pm, np.asarray(shards.pool_P)[sp, slots]
+                         * keep[sp][:, :, None]])
+    # drop fully-expired records: a lagging shard's counters the keep-mask
+    # zeroed entirely carry no queryable weight (every query multiplies by
+    # the same mask), yet replayed they would claim matrix cells and pool
+    # slots — inflating occupancy and pushing live records toward
+    # ``pool_lost``. P zeroes with C (same per-slot mask), so C alone
+    # decides liveness.
+    live = C.sum(axis=1) > 0
+    return vid_src[live], vid_dst[live], C[live], Pm[live]
 
 
 def _replay(cfg, n_shards, assign, vid_src, vid_dst, rec_C, rec_P, d):

@@ -237,6 +237,34 @@ def _label_pooled_planes(spec, planes, lv, les, *, with_le, direction,
     return jax.vmap(per_group)(_grouped(planes, groups), lv, les)
 
 
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("kind", "k", "direction", "interpret",
+                                    "groups"))
+def _topk_pooled_planes(spec, planes, *, kind, k, direction, interpret,
+                        groups):
+    """Per-tenant heavy-hitter top-k over grouped pooled planes — the
+    analytics portfolio (DESIGN.md §12) vmapped across tenant blocks, one
+    dispatch for the whole pool. Each group's epilogue sees only its own
+    tenant's rows, so results are bit-identical to the tenant's standalone
+    handle."""
+    _count("hh_" + kind, "pooled")
+    from repro.kernels.heavy_hitters.ops import (
+        heavy_edges_planes, heavy_vertices_planes, top_labels_planes)
+
+    def per_group(gpl):
+        if kind == "vertex":
+            return heavy_vertices_planes(spec.config, gpl, k,
+                                         direction=direction,
+                                         interpret=interpret)
+        if kind == "edge":
+            return heavy_edges_planes(spec.config, gpl, k,
+                                      interpret=interpret)
+        return top_labels_planes(spec.config, gpl, k, direction=direction,
+                                 interpret=interpret)
+
+    return jax.vmap(per_group)(_grouped(planes, groups))
+
+
 # --------------------------------------------------------------------------
 # query-batch combination — many (tenant, QueryBatch) pairs, one dispatch
 # --------------------------------------------------------------------------
@@ -700,3 +728,38 @@ class TenantPool:
                                     with_le=with_le, direction=direction,
                                     last=last, groups=groups)
         return [out[s, off:off + m] for s, off, m in spans]
+
+    def top_k(self, tenant_id, kind: str = "vertex", k: int = 10, *,
+              direction: str = "out", last=None):
+        """One tenant's windowed heavy-hitter top-k (DESIGN.md §12):
+        ``kind`` "vertex" -> (vids [k], weights [k]), "edge" ->
+        (src [k], dst [k], weights [k]), "label" -> (blocks [k],
+        weights [k]); (-1, 0) padding past the live identities."""
+        return self.top_k_many([tenant_id], kind=kind, k=k,
+                               direction=direction, last=last)[0]
+
+    def top_k_many(self, tenant_ids, kind: str = "vertex", k: int = 10, *,
+                   direction: str = "out", last=None):
+        """Heavy-hitter top-k for many tenants in **one** pooled dispatch.
+
+        The grouped planes are the same cached ``query_planes(...,
+        groups=n_slots)`` entry ``query_many`` uses; the top-k epilogue is
+        vmapped across tenant blocks, so every tenant's answer is
+        bit-identical to running ``repro.sketch.heavy_vertices`` (etc.) on
+        its standalone handle. Returns per-tenant result tuples, in input
+        order. Evicted tenants are readmitted on touch."""
+        if self.spec.kind == "lgs":
+            raise NotImplementedError(
+                "LGS cells store no keys — the reversible cell-owner "
+                "decode needs LSketch/GSS")
+        tenant_ids = list(tenant_ids)
+        if not tenant_ids:
+            return []
+        slots = [self._ensure(tid) for tid in tenant_ids]
+        state = self.flush()
+        last = None if self.spec.kind == "gss" else last
+        planes = query_planes(self.spec, state, last, groups=self.n_slots)
+        out = _topk_pooled_planes(
+            self.spec, planes, kind=kind, k=k, direction=direction,
+            interpret=jax.default_backend() != "tpu", groups=self.n_slots)
+        return [jax.tree.map(lambda x: x[s], out) for s in slots]

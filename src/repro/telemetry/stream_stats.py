@@ -13,13 +13,15 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import EdgeBatch, LSketch, LSketchConfig, insert_batch
-from repro.data.tokens import bigram_stream
+from repro.data.tokens import DEFAULT_BAND_VOCAB, bigram_stream, token_band
 
 
 class BigramSketch:
     def __init__(self, window_steps: int = 64, subwindows: int = 8,
-                 d: int = 256, n_bands: int = 4):
+                 d: int = 256, n_bands: int = 4,
+                 vocab_size: int = DEFAULT_BAND_VOCAB):
         self.n_bands = n_bands
+        self.vocab_size = vocab_size
         self.cfg = LSketchConfig(
             d=d, n_blocks=n_bands, F=1024, r=4, s=8, c=8, k=subwindows,
             window_size=window_steps, pool_capacity=8192, seed=77)
@@ -27,7 +29,8 @@ class BigramSketch:
         self._step = 0
 
     def ingest_tokens(self, tokens: np.ndarray, step: int | None = None):
-        st = bigram_stream(tokens, n_bands=self.n_bands)
+        st = bigram_stream(tokens, n_bands=self.n_bands,
+                           vocab_size=self.vocab_size)
         t = self._step if step is None else step
         batch = EdgeBatch(
             src=jnp.asarray(st["src"]), dst=jnp.asarray(st["dst"]),
@@ -42,7 +45,9 @@ class BigramSketch:
         return self
 
     def bigram_weight(self, a: int, b: int, last=None) -> int:
-        band = lambda t: int(min(self.n_bands - 1, np.log1p(t)))
+        # the query-side band MUST be the ingest-side band: one shared
+        # pure function on the fixed vocab reference (regression-tested)
+        band = lambda t: int(token_band(t, self.n_bands, self.vocab_size))
         return self.sketch.edge_weight(a, band(a), b, band(b), last=last)
 
     def band_volume(self, band: int, last=None) -> int:

@@ -226,6 +226,30 @@ def test_collective_query_smoke_and_mesh_residency():
     assert "PARITY_OK" in stdout and "BRANCHES_OK" in stdout
 
 
+def test_collective_analytics_parity():
+    """Top-k analytics, path="collective": the shard_map body (local
+    decode + flatten, all_gather of (identity, weight) rows, replicated
+    epilogue) is bit-identical to the host pallas path on a placed
+    4-shard handle — including a restricted horizon."""
+    stdout = _run(_SKETCH_PRELUDE + """
+        spec = skt.SketchSpec(kind="lsketch", config=LS, n_shards=4)
+        ARRS = stream("lsketch")
+        st = skt.place(spec, skt.create(spec), mesh_over(4))
+        st = skt.ingest(spec, st, batch(ARRS))
+        for fn, kw in ((skt.heavy_vertices, {"direction": "out"}),
+                       (skt.heavy_vertices, {"direction": "in", "last": 1}),
+                       (skt.heavy_edges, {}),
+                       (skt.top_labels, {})):
+            a = fn(spec, st, 6, path="pallas", **kw)
+            b = fn(spec, st, 6, path="collective", **kw)
+            for x, y in zip(a, b):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), \\
+                    (fn.__name__, kw, np.asarray(x), np.asarray(y))
+        print("HH_COLLECTIVE_OK")
+    """)
+    assert "HH_COLLECTIVE_OK" in stdout
+
+
 @pytest.mark.slow
 def test_collective_query_parity_sweep_lsketch():
     """The acceptance sweep, LSketch half: path="collective" is

@@ -333,6 +333,74 @@ def test_wraparound_expires_old_weight_exactly(ns, path):
 
 
 # --------------------------------------------------------------------------
+# top-k analytics: one-sided weights + true-heavy containment
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,ns,path",
+                         [(k, ns, p) for k in ("lsketch", "gss")
+                          for ns in (1, 4) for p in ("scan", "pallas")])
+def test_topk_analytics_one_sided_and_containing(kind, ns, path):
+    """Handle-layer heavy hitters (DESIGN.md §12) vs the oracle: every
+    reported weight >= that identity's exact in-window truth (collisions
+    and the pool only inflate), and — the useful contrapositive — any
+    identity whose TRUE weight beats the k-th reported sketch weight must
+    appear in the top-k (its sketch weight >= truth > kth). Identities
+    aggregate by packed vid, the sketch's own entity notion."""
+    from repro.core.lsketch import precompute
+
+    arrays = _stream(seed=7)
+    *_, (spec, state, oracle) = _ingest_and_truth(kind, ns, path, arrays)
+    cfg = spec.config
+    nv = 50
+    vs = np.arange(nv, dtype=np.int32)
+    lvs = ((vs % 3) if kind == "lsketch" else np.zeros(nv)).astype(np.int32)
+    vids = np.asarray(precompute(cfg, jnp.asarray(vs), jnp.asarray(lvs)).vid)
+    vid_of = {(int(v), int(lv)): int(x) for v, lv, x in zip(vs, lvs, vids)}
+
+    k = 8
+    errs = []
+    for direction in ("out", "in"):
+        vtruth: dict = {}
+        for v, lv in vid_of:
+            vtruth[vid_of[(v, lv)]] = vtruth.get(vid_of[(v, lv)], 0) + \
+                oracle.vertex_weight(v, lv, direction=direction)
+        ids, ws = skt.heavy_vertices(spec, state, k, direction=direction,
+                                     path=path)
+        ids, ws = np.asarray(ids), np.asarray(ws)
+        for vid, w in zip(ids.tolist(), ws.tolist()):
+            if vid < 0:
+                continue
+            truth = vtruth.get(vid, 0)
+            assert w >= truth, (kind, ns, path, direction, vid, w, truth)
+            errs.append((int(w), truth))
+        kth = int(ws[-1]) if int(ids[-1]) >= 0 else 0
+        top = set(int(i) for i in ids if i >= 0)
+        for vid, truth in vtruth.items():
+            if truth > kth:
+                assert vid in top, (kind, ns, path, direction, vid, truth,
+                                    kth)
+
+    etruth: dict = {}
+    for (a, la, b, lb), _ in oracle.edges.items():
+        pair = (vid_of[(a, la)], vid_of[(b, lb)])
+        etruth[pair] = etruth.get(pair, 0) + oracle.edge_weight(a, la, b, lb)
+    es, ed, ews = (np.asarray(x) for x in skt.heavy_edges(spec, state, k,
+                                                          path=path))
+    for s, d, w in zip(es.tolist(), ed.tolist(), ews.tolist()):
+        if s < 0:
+            continue
+        truth = etruth.get((s, d), 0)
+        assert w >= truth, (kind, ns, path, (s, d), w, truth)
+        errs.append((int(w), truth))
+    kth = int(ews[-1]) if int(es[-1]) >= 0 else 0
+    top_e = set(zip(es.tolist(), ed.tolist()))
+    for pair, truth in etruth.items():
+        if truth > kth:
+            assert pair in top_e, (kind, ns, path, pair, truth, kth)
+    _record(f"topk/{kind}/x{ns}/{path}", errs)
+
+
+# --------------------------------------------------------------------------
 # mixed ingest/query serving: delta-maintained planes stay conformant
 # --------------------------------------------------------------------------
 

@@ -177,6 +177,57 @@ def test_reshard_contended_state_exact_vertex_conservation():
                       >= _edge_truths(arrays)), m
 
 
+def test_reshard_drops_fully_expired_records():
+    """Lagging-shard regression: records the window reconciliation zeroes
+    entirely (a shard that stopped receiving traffic while the combined
+    stream advanced a whole window) carry no queryable weight — replaying
+    them must not claim cells or pool slots. Before the live-drop in
+    ``_decode_records`` the dead records of the lagging shard (and every
+    expired-but-keyed cell of the active one) were replayed with zero
+    counters, saturating the tiny matrix + pool and displacing live
+    records toward ``pool_lost``."""
+    spec2 = skt.SketchSpec(kind="lsketch", config=TINY_POOL, n_shards=2)
+    rng = np.random.default_rng(5)
+    # early burst over many vertices: floods both shards' cells and pool
+    n = 600
+    src = rng.integers(0, 400, n).astype(np.int32)
+    dst = rng.integers(0, 400, n).astype(np.int32)
+    z = np.zeros(n, np.int32)
+    early = (src, dst, src % 3, dst % 3, z, np.ones(n, np.int32), z)
+    st = skt.ingest(spec2, skt.create(spec2), _batch(early))
+    # late traffic routed ONLY to shard 0 (source-entity routing), with
+    # timestamps a full window past the burst: shard 1 lags untouched
+    cand = np.arange(1000, 5000, dtype=np.int32)
+    cand = cand[skt.shard_assignment(spec2, cand, cand % 3) == 0]
+    vs, vd = cand[:4], cand[4:8]
+    m = 200
+    ls = rng.choice(vs, m).astype(np.int32)
+    ld = rng.choice(vd, m).astype(np.int32)
+    lt = np.sort(rng.integers(4000, 8000, m)).astype(np.int32)
+    late = (ls, ld, ls % 3, ld % 3, np.zeros(m, np.int32),
+            np.ones(m, np.int32), lt)
+    st = skt.ingest(spec2, st, _batch(late))
+    cw = np.asarray(st.shards.cur_widx)
+    assert cw[1] < cw[0], "shard 1 must lag"
+    assert int(jnp.sum(st.shards.key[1] != EMPTY)) > 0  # stale keys remain
+
+    spec1 = spec2.replace(n_shards=1)
+    r1 = skt.reshard(spec2, st, 1)
+    # only the <= 16 live (src, dst) pairs may occupy the new state —
+    # dead-record replay would claim ~every cell and the whole pool
+    occ = int(jnp.sum(r1.shards.key != EMPTY)) + \
+        int(jnp.sum(r1.shards.pool_key[:, :, 0] != EMPTY))
+    assert occ <= len(vs) * len(vd), occ
+    # no new saturation losses: live records fit comfortably
+    assert int(jnp.sum(r1.shards.pool_lost)) == \
+        int(jnp.sum(st.shards.pool_lost))
+    # live weight stays queryable, bit-for-bit
+    qv = skt.QueryBatch.vertices(np.concatenate([vs, vd]),
+                                 np.concatenate([vs, vd]) % 3)
+    assert np.array_equal(np.asarray(skt.query(spec1, r1, qv)),
+                          np.asarray(skt.query(spec2, st, qv)))
+
+
 def test_reshard_refuses_lgs():
     spec = skt.make_spec("lgs", d=32, copies=2, c=4, k=4, window_size=400)
     with pytest.raises(NotImplementedError, match="key space"):

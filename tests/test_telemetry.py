@@ -97,3 +97,34 @@ def test_bigram_sketch_heavy_hitters():
     assert bs.bigram_weight(7, 9) >= 190
     assert bs.bigram_weight(3, 4) <= 5
     assert bs.band_volume(1) >= 0
+
+
+def test_bigram_band_consistent_between_ingest_and_query():
+    """Regression (label-band mismatch): the query side must derive the
+    same vertex label band the ingest side wrote, for ANY batch
+    composition — banding is keyed on the fixed vocab reference, never on
+    a per-batch max. An ingested bigram queried back returns its weight.
+    """
+    from repro.data.tokens import token_band
+
+    bs = BigramSketch(window_steps=64, subwindows=8, d=128)
+    # high-id tokens: under the old batch-max normalization their band
+    # depended on whatever else shared the batch
+    toks = np.zeros((1, 101), np.int64)
+    toks[:, 0::2] = 50000
+    toks[:, 1::2] = 49000
+    bs.ingest_tokens(toks, step=0)
+    assert bs.bigram_weight(50000, 49000) >= 50
+    # same tokens ingested alongside tiny ids (different batch max):
+    # bands — and therefore answers — must not change
+    bs2 = BigramSketch(window_steps=64, subwindows=8, d=128)
+    mixed = np.zeros((1, 101), np.int64)
+    mixed[:, 0::2] = 50000
+    mixed[:, 1::2] = 49000
+    mixed[0, 1] = 3  # one low token perturbs any batch-dependent banding
+    bs2.ingest_tokens(mixed, step=0)
+    assert bs2.bigram_weight(50000, 49000) >= 49
+    # the shared band function is the single source of truth
+    for t in (0, 3, 7, 49000, 50000):
+        assert 0 <= int(token_band(t, bs.n_bands, bs.vocab_size)) \
+            < bs.n_bands
