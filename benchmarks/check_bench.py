@@ -17,7 +17,10 @@ the noise. Checks:
   * the mixed ingest/query serving loop with incremental plane
     maintenance (DESIGN.md §10: delta-apply each flush into the cached
     planes) beats the flush-rebuild baseline, and the isolated
-    delta-apply step beats the cold plane build, both at 4 shards.
+    delta-apply step beats the cold plane build, both at 4 shards;
+  * skew-aware routing (DESIGN.md §13): on the same Zipf stream, hot-key
+    splitting beats the plain hash partition on ingest time AND on
+    hot-key query error at identical memory (``METRIC_GATES``).
 
 ``python -m benchmarks.check_bench [path-to-json]`` — exits nonzero with
 a diagnostic when a gate fails or the rows are missing.
@@ -49,9 +52,21 @@ GATES = [
     # §12 heavy hitters: the plane-cached decode kernel + segment top-k
     # must beat the per-shard host decode loop computing the same ranking
     ("hh_vertex_kernel_x4", "hh_vertex_host_x4"),
+    # §13 skew-aware routing: hot-key splitting must beat the plain hash
+    # partition on the same Zipf stream (the routed partition levels the
+    # bucketed dispatch the hot shard would otherwise size)
+    ("skewed_ingest_routed_x4", "skewed_ingest_x4"),
 ]
 
 METRIC = "total_s"
+
+# non-timing same-run A/Bs: (better_row, worse_row, metric) — better must
+# be strictly lower. The §13 accuracy gate: at identical memory, splitting
+# the hot vertex across replica shards must strictly reduce hot-key edge
+# query error vs the plain hash partition of the same stream.
+METRIC_GATES = [
+    ("skewed_ingest_routed_x4", "skewed_ingest_x4", "mean_rel_err"),
+]
 
 # sustained-serving rows (concurrent_serve_throughput): the sojourn
 # latency percentiles must exist and be real numbers — a driver that
@@ -61,6 +76,7 @@ METRIC = "total_s"
 LATENCY_ROWS = {
     "tenant_serve_pooled_x8": ("ms_q_p50", "ms_q_p99"),
     "tenant_serve_independent_x8": ("ms_q_p50", "ms_q_p99"),
+    "tenant_serve_pooled_zipf_x8": ("ms_q_p50", "ms_q_p99"),
 }
 
 
@@ -76,6 +92,16 @@ def check(bench: dict) -> list[str]:
             failures.append(
                 f"{fast} ({tf * 1e3:.2f} ms) did not beat "
                 f"{slow} ({ts * 1e3:.2f} ms) in the same-run A/B")
+    for better, worse, metric in METRIC_GATES:
+        if better not in bench or worse not in bench:
+            failures.append(f"missing bench rows for gate {better} < "
+                            f"{worse} on {metric} (have: {sorted(bench)})")
+            continue
+        vb, vw = bench[better][metric], bench[worse][metric]
+        if not vb < vw:
+            failures.append(
+                f"{better}.{metric} ({vb:.4f}) did not beat "
+                f"{worse}.{metric} ({vw:.4f}) in the same-run A/B")
     for row, metrics in LATENCY_ROWS.items():
         if row not in bench:
             failures.append(f"missing bench row {row} "
@@ -107,6 +133,10 @@ def main(argv=None) -> int:
         for fast, slow in GATES:
             print(f"check_bench: OK: {fast} ({bench[fast][METRIC] * 1e3:.2f} "
                   f"ms) < {slow} ({bench[slow][METRIC] * 1e3:.2f} ms)")
+        for better, worse, metric in METRIC_GATES:
+            print(f"check_bench: OK: {better}.{metric} "
+                  f"({bench[better][metric]:.4f}) < {worse}.{metric} "
+                  f"({bench[worse][metric]:.4f})")
         for row, metrics in LATENCY_ROWS.items():
             vals = ", ".join(f"{m}={bench[row][m]:.2f}" for m in metrics)
             print(f"check_bench: OK: {row} latencies finite ({vals})")

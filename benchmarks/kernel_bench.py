@@ -185,6 +185,126 @@ def sharded_ingest_throughput(n=16384, shard_counts=(1, 4),
     return rows
 
 
+def skewed_ingest_throughput(n=16384, n_shards=4, zipf_a=1.5,
+                             heat_threshold=0.05, vocab=4096):
+    """Skew-aware routing A/B on a Zipf-skewed stream (DESIGN.md §13):
+    the same power-law batch (``zipf_unigram`` sources — at ``a=1.5`` the
+    head vertex alone carries ~38% of the edges) ingested under
+
+      * ``skewed_ingest_x{S}``        — the plain endpoint-hash partition:
+        the head vertex's whole traffic lands on one shard, whose bucket
+        sizes the entire stacked dispatch (every other shard pads to it);
+      * ``skewed_ingest_routed_x{S}`` — a ``HeavyKeyDetector`` pass over
+        the stream picks the hot keys and ``spec.with_splits`` scatters
+        each across all ``S`` replica shards by the salted ``(src, dst)``
+        hash — the leveled partition buckets ~2x smaller.
+
+    Each row also carries the ``PARTITION_STATS`` load counters for its
+    own partition rounds (max/mean bucket fill, pad ratio) and
+    ``mean_rel_err``: the mean |est - truth| / truth of hot-key edge
+    queries on a small *identical-memory* sketch fed the same stream both
+    ways — splitting gives the head vertex's neighbors ``S``x the
+    candidate rows and pool headroom at unchanged total bytes, so the
+    routed error is strictly lower (gated same-run by check_bench.py,
+    like the throughput pair). Sizes are deliberately NOT scaled down by
+    ``--quick``: the comparison lives in the padding gap between bucketed
+    batch shapes, which a small n collapses into timing noise.
+    """
+    from repro import sketch as skt
+    from repro.data.tokens import zipf_unigram
+    from repro.telemetry.stream_stats import PARTITION_STATS
+
+    rng = np.random.default_rng(0)
+    p = zipf_unigram(vocab, zipf_a)
+    src = rng.choice(vocab, size=n, p=p).astype(np.int32)
+    dst = rng.choice(vocab, size=n, p=p).astype(np.int32)
+    la, lb = (src % 8).astype(np.int32), (dst % 8).astype(np.int32)
+    batch = EdgeBatch(
+        src=jnp.asarray(src), dst=jnp.asarray(dst),
+        src_label=jnp.asarray(la), dst_label=jnp.asarray(lb),
+        edge_label=jnp.asarray(rng.integers(0, 6, n).astype(np.int32)),
+        weight=jnp.asarray(np.ones(n, np.int32)),
+        time=jnp.asarray(np.full(n, 3, np.int32)))
+
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=4,
+                        window_size=100, pool_capacity=8192)
+    spec = skt.make_spec("lsketch", n_shards=n_shards, config=cfg)
+    det = skt.HeavyKeyDetector()
+    det.update(src, la)
+    hot = det.hot_keys(heat_threshold)
+    spec_r = spec.with_splits([(s, l, n_shards) for s, l, _ in hot])
+
+    variants = (("skewed_ingest", spec), ("skewed_ingest_routed", spec_r))
+    warmup, iters = 1, 5
+    states = {tag: [skt.create(spec) for _ in range(warmup + iters)]
+              for tag, _ in variants}
+    snaps = {tag: [] for tag, _ in variants}
+
+    def run(tag, sp):
+        # per-call reset/snapshot: the variants alternate inside
+        # _timed_medians, so the global accumulator must be scoped to
+        # exactly this call's partition round
+        PARTITION_STATS.reset()
+        st = skt.ingest(sp, states[tag].pop(), batch, path="scan")
+        jax.block_until_ready(st.shards.C)
+        snaps[tag].append(PARTITION_STATS.snapshot())
+        return st
+
+    medians = _timed_medians(
+        [(tag, (lambda t, s: lambda: run(t, s))(tag, sp))
+         for tag, sp in variants], warmup=warmup, iters=iters)
+
+    # identical-memory error A/B: a small sketch fed the same stream both
+    # ways, judged on hot-key edge queries against exact numpy truth
+    # (|.| keeps the score honest under pool_lost undercount)
+    err_cfg = LSketchConfig(d=32, n_blocks=2, F=512, r=4, s=4, c=4, k=4,
+                            window_size=400, pool_capacity=64,
+                            pool_probes=8)
+    err_spec = skt.make_spec("lsketch", n_shards=n_shards, config=err_cfg)
+    err_spec_r = err_spec.replace(routing=spec_r.routing)
+    hotset = {(int(s), int(l)) for s, l, _ in hot}
+    pairs: dict = {}
+    for e in zip(src.tolist(), la.tolist(), dst.tolist(), lb.tolist()):
+        if (e[0], e[1]) in hotset:
+            pairs[e] = pairs.get(e, 0) + 1
+    qs = sorted(pairs.items())[:1024]
+    qb = skt.QueryBatch.edges(
+        np.asarray([k[0] for k, _ in qs], np.int32),
+        np.asarray([k[1] for k, _ in qs], np.int32),
+        np.asarray([k[2] for k, _ in qs], np.int32),
+        np.asarray([k[3] for k, _ in qs], np.int32))
+    truth = np.asarray([c for _, c in qs], np.float64)
+    mean_rel_err = {}
+    for tag, sp in (("skewed_ingest", err_spec),
+                    ("skewed_ingest_routed", err_spec_r)):
+        st = skt.ingest(sp, skt.create(err_spec), batch, path="scan")
+        est = np.asarray(skt.query(sp, st, qb, path="scan"), np.float64)
+        mean_rel_err[tag] = float(
+            (np.abs(est - truth) / np.maximum(truth, 1.0)).mean())
+
+    rows, result = [], {}
+    for tag, sp in variants:
+        dt = medians[tag]
+        snap = snaps[tag][-1]  # per-call scoped: any round is the round
+        rows.append([f"{tag}_x{n_shards}", n, n_shards,
+                     len(sp.routing.splits) if sp.routing else 0,
+                     f"{snap['max_fill']:.3f}", f"{snap['pad_ratio']:.3f}",
+                     f"{mean_rel_err[tag]:.4f}",
+                     f"{dt / n * 1e6:.3f}", f"{dt:.3f}"])
+        result[f"{tag}_x{n_shards}"] = {
+            "edges": n, "shards": n_shards, "zipf_a": zipf_a,
+            "split_keys": len(sp.routing.splits) if sp.routing else 0,
+            "max_fill": snap["max_fill"], "mean_fill": snap["mean_fill"],
+            "pad_ratio": snap["pad_ratio"], "imbalance": snap["imbalance"],
+            "mean_rel_err": mean_rel_err[tag],
+            "us_per_edge": dt / n * 1e6, "total_s": dt}
+    write_csv("skewed_ingest_throughput",
+              ["impl", "edges", "shards", "split_keys", "max_fill",
+               "pad_ratio", "mean_rel_err", "us_per_edge", "total_s"], rows)
+    _merge_bench(result)
+    return rows
+
+
 def pipelined_ingest_throughput(n=16384, n_batches=8, n_shards=4):
     """Pipelined vs eager sharded ingest over a stream of batches: the
     ``AsyncIngestor`` overlaps each batch's host hash-partition with the
@@ -732,6 +852,11 @@ def main(argv=None):
         print("impl,k,shards,ms_per_call,total_s")
         for r in hrows:
             print(",".join(str(x) for x in r))
+        krows = skewed_ingest_throughput()
+        print("impl,edges,shards,split_keys,max_fill,pad_ratio,"
+              "mean_rel_err,us_per_edge,total_s")
+        for r in krows:
+            print(",".join(str(x) for x in r))
         from .serve_bench import run_all as _serve_rows
         _serve_rows(quick=args.quick)
         if not args.no_mesh:
@@ -746,6 +871,11 @@ def main(argv=None):
                                       include_pallas=not args.no_pallas)
     print("impl,edges,shards,us_per_edge,total_s")
     for r in srows:
+        print(",".join(str(x) for x in r))
+    krows = skewed_ingest_throughput()
+    print("impl,edges,shards,split_keys,max_fill,pad_ratio,mean_rel_err,"
+          "us_per_edge,total_s")
+    for r in krows:
         print(",".join(str(x) for x in r))
     prows = pipelined_ingest_throughput(n=n)
     print("impl,edges,batches,shards,us_per_edge,total_s")

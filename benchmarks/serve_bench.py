@@ -46,10 +46,18 @@ _CFG = LSketchConfig(d=64, n_blocks=2, F=512, r=4, s=4, c=4, k=4,
                      window_size=400, pool_capacity=512, pool_probes=8)
 
 
-def _mk_batch(rng, n, t_lo=0, t_hi=99):
+def _mk_batch(rng, n, t_lo=0, t_hi=99, zipf_a=None):
+    if zipf_a:
+        # power-law endpoints (the skewed-traffic serving row): same
+        # Zipf machinery as the corpus + the kernel_bench skew rows
+        from repro.data.tokens import zipf_unigram
+        p = zipf_unigram(400, zipf_a)
+        src, dst = rng.choice(400, size=n, p=p), rng.choice(400, size=n, p=p)
+    else:
+        src, dst = rng.integers(0, 400, n), rng.integers(0, 400, n)
     return EdgeBatch(
-        src=jnp.asarray(rng.integers(0, 400, n), jnp.int32),
-        dst=jnp.asarray(rng.integers(0, 400, n), jnp.int32),
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
         src_label=jnp.asarray(rng.integers(0, 8, n), jnp.int32),
         dst_label=jnp.asarray(rng.integers(0, 8, n), jnp.int32),
         edge_label=jnp.asarray(rng.integers(0, 4, n), jnp.int32),
@@ -157,14 +165,15 @@ def tenant_dispatch_throughput(T=8, n_per_tenant=2048, q=16, n_shards=1):
     return rows
 
 
-def _client_ops(rng, T, rounds, edges_per_op, queries_per_op, q_rows):
+def _client_ops(rng, T, rounds, edges_per_op, queries_per_op, q_rows,
+                zipf_a=None):
     """One client's op script: each round interleaves one ingest op and
     ``queries_per_op`` query ops, round-robin across tenants."""
     ops = []
     for r in range(rounds):
         tid = int(rng.integers(0, T))
         ops.append({"kind": "ingest", "tenant": tid,
-                    "batch": _mk_batch(rng, edges_per_op)})
+                    "batch": _mk_batch(rng, edges_per_op, zipf_a=zipf_a)})
         for _ in range(queries_per_op):
             t2 = int(rng.integers(0, T))
             vs = rng.integers(0, 400, q_rows).astype(np.int32)
@@ -244,20 +253,28 @@ def _prewarm_shapes(srv_ingest, srv_query, T, clients, edges_per_op,
 
 
 def concurrent_serve_throughput(T=8, clients=4, rounds=6, edges_per_op=512,
-                                queries_per_op=4, q_rows=64, n_shards=1):
+                                queries_per_op=4, q_rows=64, n_shards=1,
+                                zipf_a=None,
+                                variants=("pooled", "independent"),
+                                suffix=""):
     """Sustained mixed ingest+query traffic from ``clients`` concurrent
     client threads over T tenants: one pool-mode ``SketchServer`` (every
     drain's ingests -> one pooled round, every drain's queries -> one
     pooled group dispatch) vs T independent servers (per-tenant dispatch
     fan-out). Emits throughput (edges/s, queries/s) and query sojourn
-    p50/p99 rows for both variants, same-run."""
+    p50/p99 rows for both variants, same-run. ``zipf_a`` makes the ingest
+    endpoints power-law (the skewed-traffic row — ``--zipf-a``; ``suffix``
+    tags its rows, e.g. ``tenant_serve_pooled_zipf_x8``); ``variants``
+    restricts the run (a single-variant run is timed alone — only the
+    latency sanity checks apply, not an A/B gate)."""
     from repro import sketch as skt
     from repro.launch.serve_sketch import SketchServer
 
     spec = skt.make_spec("lsketch", n_shards=n_shards, config=_CFG)
     rng = np.random.default_rng(1)
     scripts = [_client_ops(np.random.default_rng(100 + c), T, rounds,
-                           edges_per_op, queries_per_op, q_rows)
+                           edges_per_op, queries_per_op, q_rows,
+                           zipf_a=zipf_a)
                for c in range(clients)]
 
     def make_pooled():
@@ -307,7 +324,8 @@ def concurrent_serve_throughput(T=8, clients=4, rounds=6, edges_per_op=512,
         return ingest, query, drain
 
     warmup, iters = 1, 5
-    stats = {"pooled": [], "independent": []}
+    stats = {key: [] for key in variants}
+    makers = {"pooled": make_pooled, "independent": make_independent}
 
     def run(tag, make):
         out = _drive(make, scripts, T)
@@ -317,14 +335,13 @@ def concurrent_serve_throughput(T=8, clients=4, rounds=6, edges_per_op=512,
     # is _drive's own clock (serving only — server construction and shape
     # prewarm excluded, identically for both variants)
     timed_medians(
-        [("tenant_serve_pooled", lambda: run("pooled", make_pooled)),
-         ("tenant_serve_independent",
-          lambda: run("independent", make_independent))],
+        [(f"tenant_serve_{key}{suffix}",
+          (lambda k: lambda: run(k, makers[k]))(key)) for key in variants],
         warmup=warmup, iters=iters)
 
     rows, result = [], {}
-    for tag, key in (("tenant_serve_pooled", "pooled"),
-                     ("tenant_serve_independent", "independent")):
+    for key in variants:
+        tag = f"tenant_serve_{key}{suffix}"
         runs = stats[key][warmup:]
         dt = float(np.median([r[0] for r in runs]))
         n_edges = runs[0][1]
@@ -347,7 +364,7 @@ def concurrent_serve_throughput(T=8, clients=4, rounds=6, edges_per_op=512,
     return rows
 
 
-def run_all(quick: bool = False):
+def run_all(quick: bool = False, zipf_a: float = 1.5):
     rows = tenant_dispatch_throughput(
         T=8, n_per_tenant=512 if quick else 2048, q=16)
     print("impl,tenants,items,shards,us_per_item,total_s")
@@ -361,14 +378,27 @@ def run_all(quick: bool = False):
           "ms_q_p50,ms_q_p99,total_s")
     for r in rows:
         print(",".join(str(x) for x in r))
+    # skewed-traffic serving row (DESIGN.md §13): same driver, power-law
+    # ingest endpoints — pooled only (the pooled-vs-independent A/B is the
+    # uniform pair above; this row tracks latency health under skew)
+    rows = concurrent_serve_throughput(
+        T=8, clients=4, rounds=3 if quick else 6,
+        edges_per_op=256 if quick else 512,
+        queries_per_op=3 if quick else 4, q_rows=32 if quick else 64,
+        zipf_a=zipf_a, variants=("pooled",), suffix="_zipf")
+    for r in rows:
+        print(",".join(str(x) for x in r))
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--zipf-a", type=float, default=1.5,
+                    help="Zipf exponent for the skewed-traffic serving "
+                         "row (tenant_serve_pooled_zipf_x8)")
     args = ap.parse_args(argv)
-    run_all(quick=args.quick)
+    run_all(quick=args.quick, zipf_a=args.zipf_a)
 
 
 if __name__ == "__main__":

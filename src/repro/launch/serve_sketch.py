@@ -88,7 +88,9 @@ class SketchServer:
                  state: "skt.ShardedState | None" = None,
                  pipeline: bool = True, query_path: str = "auto",
                  mesh=None, axis: str = "data", prewarm: bool = True,
-                 pool: "skt.TenantPool | None" = None):
+                 pool: "skt.TenantPool | None" = None,
+                 heat_threshold: float | None = None,
+                 split_replicas: int | None = None):
         self.pool = pool
         if pool is not None:
             if spec is not None and spec != pool.spec:
@@ -102,6 +104,9 @@ class SketchServer:
                 raise ValueError(
                     "query_path='collective' serves one mesh-placed "
                     "sketch, not a TenantPool")
+            if heat_threshold is not None:
+                raise ValueError("heat_threshold= tracks a single handle's "
+                                 "stream; pool tenants route per-spec")
             self.spec = pool.spec
             self.pipeline = pipeline
             self.query_path = query_path
@@ -109,6 +114,7 @@ class SketchServer:
             self._ingestor = None
             self.max_batch = max_batch
             self.pending: List[QueryRequest] = []
+            self.query_shard_counts = np.zeros(pool.spec.n_shards, np.int64)
             return
         if spec is None:
             raise ValueError("SketchServer needs a spec= or a pool=")
@@ -138,9 +144,15 @@ class SketchServer:
             # the first dispatch; ingest keeps the residency (DESIGN.md §9)
             state = skt.place(spec, state if state is not None
                               else skt.create(spec), mesh, axis=axis)
-        self._ingestor = skt.AsyncIngestor(spec, state=state)
+        self._ingestor = skt.AsyncIngestor(spec, state=state,
+                                           heat_threshold=heat_threshold,
+                                           split_replicas=split_replicas)
         self.max_batch = max_batch
         self.pending: List[QueryRequest] = []
+        # per-shard query-endpoint log (DESIGN.md §13): every answered
+        # edge/vertex request increments its endpoint's *home* shard — the
+        # gSketch workload signal ``budget_report`` blends with ingest load
+        self.query_shard_counts = np.zeros(spec.n_shards, np.int64)
 
     @property
     def state(self) -> "skt.ShardedState":
@@ -148,6 +160,46 @@ class SketchServer:
         if self.pool is not None:
             return self.pool.state
         return self._ingestor.state
+
+    @property
+    def live_spec(self) -> "skt.SketchSpec":
+        """The spec carrying the *live* routing table — the constructor's
+        spec plus any splits the heavy-key detector applied since
+        (DESIGN.md §13). Same identity as ``self.spec`` (routing is
+        compare-excluded); checkpoint with this one so the manifest
+        records the table."""
+        if self.pool is not None:
+            return self.pool.spec
+        return self._ingestor.spec
+
+    def budget_report(self, alpha: float = 0.5) -> "skt.BudgetReport":
+        """Workload-aware sizing report (``skt.recommend_budget``): the
+        ingest-side heavy-key summary blended with this server's
+        query-endpoint log into per-shard load fractions plus the routing
+        table that levels them. Apply to stored history with
+        ``skt.reshard(spec, state, n_shards, routing=report.routing)``
+        and to future ingest by serving with
+        ``spec.replace(routing=report.routing)``."""
+        if self.pool is not None:
+            raise ValueError("budget_report() sizes a single handle; pool "
+                             "tenants carry per-spec routing")
+        det = self._ingestor.detector
+        if det is None:
+            raise ValueError("budget_report() needs the heavy-key detector "
+                             "(construct with heat_threshold=...)")
+        return skt.recommend_budget(self.live_spec, det,
+                                    self.query_shard_counts, alpha=alpha)
+
+    def _log_query_endpoints(self, kind: str, q: "skt.QueryBatch") -> None:
+        if kind == "edge":
+            v, lv = q.src, q.src_label
+        elif kind == "vertex":
+            v, lv = q.vertex, q.vertex_label
+        else:  # label aggregates touch every shard equally: no signal
+            return
+        self.query_shard_counts += np.bincount(
+            skt.shard_assignment(self.spec, np.asarray(v), np.asarray(lv)),
+            minlength=self.spec.n_shards).astype(np.int64)
 
     # ---- ingest ----
     def ingest(self, batch, tenant=None) -> None:
@@ -273,6 +325,7 @@ class SketchServer:
                 done += len(reqs)
                 continue
             q = self._group_batch(kind, reqs, with_le, last, direction)
+            self._log_query_endpoints(kind, q)
             out = np.asarray(skt.query(self.spec, self.state, q,
                                        path=self.query_path))
             for r, v in zip(reqs, out):
@@ -377,6 +430,12 @@ def main(argv=None):
     ap.add_argument("--topk", type=int, default=5,
                     help="heavy-hitter summary size printed after serving "
                          "(reversible-sketch analytics, DESIGN.md §12)")
+    ap.add_argument("--heat-threshold", type=float, default=0.0,
+                    help="skew-aware routing (DESIGN.md §13): split any "
+                         "source key carrying more than this fraction of "
+                         "the ingest stream across replica shards (0 = "
+                         "off); prints the workload-aware budget report "
+                         "after serving")
     ap.add_argument("--tenants", type=int, default=0, metavar="T",
                     help="serve T independent tenant sketches from one "
                          "TenantPool (stream split round-robin; each "
@@ -387,6 +446,9 @@ def main(argv=None):
     if args.tenants and (args.mesh or args.collective):
         raise SystemExit("--tenants is host-resident: drop --mesh/"
                          "--collective")
+    if args.tenants and args.heat_threshold:
+        raise SystemExit("--heat-threshold tracks a single handle's "
+                         "stream: drop --tenants")
     if args.collective:
         args.query_path = "collective"
 
@@ -417,7 +479,8 @@ def main(argv=None):
     else:
         server = SketchServer(sk_spec, pipeline=not args.no_pipeline,
                               query_path=args.query_path, mesh=mesh,
-                              prewarm=not args.no_prewarm)
+                              prewarm=not args.no_prewarm,
+                              heat_threshold=args.heat_threshold or None)
 
     from repro.engine.insert import TRACE_COUNTS
     traces_before = TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]
@@ -473,6 +536,14 @@ def main(argv=None):
               + (f"[tenant {tenant}] " if args.tenants else "")
               + f"({dt_a:.2f}s)")
         print(f"top-{args.topk} heavy edges ((src, dst), w): {etop}")
+
+    if args.heat_threshold and not args.tenants:
+        rep = server.budget_report()
+        splits = server.live_spec.routing.splits \
+            if server.live_spec.routing else ()
+        print(f"routing: {len(splits)} split keys live; recommended "
+              f"splits {len(rep.routing.splits)}; per-shard combined "
+              f"load {['%.3f' % f for f in rep.combined]}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,9 @@ from __future__ import annotations
 
 from .spec import (KINDS, SketchSpec, make_spec, shard_assignment,
                    shard_assignment_vids)
+from .routing import (BudgetReport, HeavyKeyDetector, RoutingTable,
+                      recommend_budget, routed_assignment,
+                      routed_assignment_vids)
 from .state import (MeshContext, ShardedState, create, merge_all,
                     mesh_context, named_shardings, place, shards_compatible,
                     stack_states, unstack_state, with_mesh)
@@ -35,6 +38,8 @@ from .tenant import PoolFullError, TenantPool
 __all__ = [
     "KINDS", "SketchSpec", "make_spec", "shard_assignment",
     "shard_assignment_vids",
+    "BudgetReport", "HeavyKeyDetector", "RoutingTable", "recommend_budget",
+    "routed_assignment", "routed_assignment_vids",
     "MeshContext", "ShardedState", "create", "merge_all", "mesh_context",
     "named_shardings", "place", "shards_compatible", "stack_states",
     "unstack_state", "with_mesh",

@@ -88,7 +88,12 @@ def restore(spec: SketchSpec, directory, step: int | None = None, mesh=None,
     state, _ = mgr.restore(create(saved), step=step)
     if saved.n_shards != spec.n_shards:
         if spec.kind != "lgs":
-            state = reshard(saved, state, spec.n_shards)
+            # re-place under the *requested* spec's routing table (falling
+            # back to the saved one, which rode the manifest): a split-key
+            # checkpoint reshards the way its future ingest will route
+            routing = spec.routing if spec.routing is not None \
+                else saved.routing
+            state = reshard(saved, state, spec.n_shards, routing=routing)
         else:
             base = _init_one(spec)
             if spec.n_shards > saved.n_shards:

@@ -56,7 +56,8 @@ from repro.core.types import EdgeBatch
 from repro.engine import insert as eng_insert
 from repro.engine.window import pad_to_bucket
 
-from .spec import SketchSpec, shard_assignment
+from .spec import SketchSpec
+from .routing import HeavyKeyDetector, routed_assignment
 from .state import ShardedState, create, mesh_context, with_mesh
 from . import query as _query
 
@@ -118,13 +119,24 @@ def _shard_bucket(n: int, floor: int = 64) -> int:
 def _partition_stack(spec: SketchSpec, batch: EdgeBatch):
     """Host-side stable hash partition -> (stacked EdgeBatch [n_shards, L],
     n_valid int32 [n_shards]). Pure numpy — this is the half the
-    ``AsyncIngestor`` overlaps with the in-flight device dispatch."""
+    ``AsyncIngestor`` overlaps with the in-flight device dispatch.
+
+    Routing-aware (DESIGN.md §13): a spec carrying a ``RoutingTable``
+    scatters split hot keys over their replica shards via the salted
+    ``(src, dst)`` hash; without one, ``routed_assignment`` degenerates
+    to the plain endpoint hash bit-for-bit. Every round's shard counts
+    feed the process-wide ``telemetry.stream_stats.PARTITION_STATS``
+    load-imbalance counters (max/mean bucket fill, pad ratio).
+    """
+    from repro.telemetry.stream_stats import PARTITION_STATS
     fields = {f: np.asarray(getattr(batch, f)) for f in _FIELDS}
-    sid = shard_assignment(spec, fields["src"], fields["src_label"])
+    sid = routed_assignment(spec, fields["src"], fields["dst"],
+                            fields["src_label"])
     n_sh = spec.n_shards
     index = [np.flatnonzero(sid == s) for s in range(n_sh)]
     counts = np.array([len(ix) for ix in index], np.int32)
     L = _shard_bucket(max(int(counts.max()), 1), floor=64)
+    PARTITION_STATS.record(counts, L)
     out = {f: np.zeros((n_sh, L), np.int32) for f in _FIELDS}
     for s, ix in enumerate(index):
         m = len(ix)
@@ -258,14 +270,48 @@ class AsyncIngestor:
     before the next ``submit``, or snapshot it first
     (``jax.tree.map(jnp.copy, st.shards)``) if it must outlive the
     pipeline.
+
+    Skew-aware routing (DESIGN.md §13): with ``heat_threshold`` set, a
+    ``HeavyKeyDetector`` (space-saving summary) rides the host partition
+    pass; any source endpoint past the threshold fraction of the stream
+    is **split** — its edges scatter over ``split_replicas`` consecutive
+    shards by a salted ``(src, dst)`` hash from this batch on. The split
+    mutates ``self.spec``'s routing table only (identity-preserving:
+    routing is excluded from spec equality/hash, so no recompiles and no
+    plane-cache misses); already-placed history stays where it is, which
+    is safe because queries sum every shard's one-sided partial. Read the
+    live table back via ``.spec.routing`` — checkpoint with ``.spec`` so
+    the manifest carries it.
     """
 
     def __init__(self, spec: SketchSpec, state: ShardedState | None = None,
-                 path: str = "auto"):
+                 path: str = "auto", heat_threshold: float | None = None,
+                 detector: HeavyKeyDetector | None = None,
+                 split_replicas: int | None = None):
         self.spec = spec
         self.path = path
+        self.heat_threshold = heat_threshold
+        self.detector = detector
+        if detector is None and heat_threshold is not None:
+            self.detector = HeavyKeyDetector()
+        self.split_replicas = split_replicas
         self._state = state if state is not None else create(spec)
         self._staged = None  # (stacked EdgeBatch, n_valid) awaiting dispatch
+
+    def _observe(self, batch: EdgeBatch) -> None:
+        """Update the heavy-key summary and apply any new splits before
+        this batch partitions (a key crossing the threshold re-routes
+        from the current batch forward)."""
+        self.detector.update(np.asarray(batch.src),
+                             np.asarray(batch.src_label))
+        split = {(s, l) for s, l, _ in self.spec.routing.splits} \
+            if self.spec.routing else set()
+        reps = self.split_replicas or self.spec.n_shards
+        new = [(s, l, reps) for s, l, _ in
+               self.detector.hot_keys(self.heat_threshold)
+               if (s, l) not in split]
+        if new:
+            self.spec = self.spec.with_splits(new)
 
     def submit(self, batch: EdgeBatch) -> None:
         """Enqueue a time-ordered batch (partition now, dispatch on the
@@ -274,6 +320,9 @@ class AsyncIngestor:
             return
         if self.spec.kind == "gss":
             batch = _degenerate_batch(batch)
+        if self.detector is not None and self.heat_threshold is not None \
+                and self.spec.n_shards > 1:
+            self._observe(batch)
         self._dispatch_staged()  # async: device chews batch N ...
         self._staged = _partition_stack(self.spec, batch)  # ... host N+1
 

@@ -60,7 +60,8 @@ from repro.core import hashing as hsh
 from repro.core.lsketch import VertexAddressing, edge_probes
 from repro.core.types import EMPTY
 
-from .spec import SketchSpec, shard_assignment_vids
+from .routing import routed_assignment_vids
+from .spec import SketchSpec
 from .state import ShardedState
 
 
@@ -183,8 +184,8 @@ def _replay(cfg, n_shards, assign, vid_src, vid_dst, rec_C, rec_P, d):
     return key, C, Pn, pool_key, pool_C, pool_P, pool_lost
 
 
-def reshard(spec: SketchSpec, state: ShardedState,
-            n_shards: int) -> ShardedState:
+def reshard(spec: SketchSpec, state: ShardedState, n_shards: int,
+            routing=None) -> ShardedState:
     """Re-partition a handle's contents across ``n_shards`` balanced
     shards (see module docstring for the algorithm and guarantees).
 
@@ -192,6 +193,16 @@ def reshard(spec: SketchSpec, state: ShardedState,
     n_shards)``; the input handle is not consumed. Like every producer,
     the result is a fresh handle (cold plane cache, no MeshContext —
     ``place`` it again if it should stay mesh-resident).
+
+    ``routing`` (a ``routing.RoutingTable``; defaults to the spec's own
+    table) applies hot-key splits during the replay (DESIGN.md §13):
+    a split source's records spread over its replica shards by the
+    key-space twin of the ingest-time ``(src, dst)`` replica hash, so a
+    workload-aware recommendation (``routing.recommend_budget``) can be
+    applied to stored history — hot shards shed their crowding at
+    constant total memory — with the same conservation/one-sidedness
+    guarantees as the unrouted replay (replica partials sum under every
+    query path).
     """
     if spec.kind == "lgs":
         raise NotImplementedError(
@@ -204,7 +215,9 @@ def reshard(spec: SketchSpec, state: ShardedState,
     shards = state.shards
     vid_src, vid_dst, rec_C, rec_P = _decode_records(cfg, shards)
     target = spec.replace(n_shards=n_shards)
-    assign = shard_assignment_vids(target, vid_src)
+    if routing is not None:
+        target = target.replace(routing=routing)
+    assign = routed_assignment_vids(target, vid_src, vid_dst)
     d = np.asarray(shards.key).shape[1]
     key, C, Pn, pool_key, pool_C, pool_P, pool_lost = _replay(
         cfg, n_shards, assign, vid_src, vid_dst, rec_C, rec_P, d)

@@ -19,7 +19,7 @@ stable across processes, restarts, and re-partitioned replays.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any
 
 import jax.numpy as jnp
@@ -43,11 +43,20 @@ class SketchSpec:
     kind     : "lsketch" | "lgs" | "gss"
     config   : LSketchConfig (lsketch/gss) or LGSConfig (lgs)
     n_shards : number of hash-partitioned shards (leading state axis)
+    routing  : optional ``routing.RoutingTable`` of hot-key splits
+               (DESIGN.md §13). **Host-only** state: it changes which
+               shard an edge's rows land on, never what the device
+               computes, so it is excluded from equality/hash
+               (``compare=False``) — two specs differing only in routing
+               share every jit cache entry, plane cache, and merge
+               program. It still rides ``to_json`` into checkpoint
+               manifests so restore/reshard recover the live table.
     """
 
     kind: str
     config: Any
     n_shards: int = 1
+    routing: Any = field(default=None, compare=False)
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -59,6 +68,9 @@ class SketchSpec:
             raise TypeError(
                 f"{self.kind} spec requires a {want.__name__}, "
                 f"got {type(self.config).__name__}")
+        if self.routing is not None and not hasattr(self.routing, "splits"):
+            raise TypeError(f"routing must be a RoutingTable or None, "
+                            f"got {type(self.routing).__name__}")
 
     @property
     def seed(self) -> int:
@@ -66,6 +78,16 @@ class SketchSpec:
 
     def replace(self, **kw) -> "SketchSpec":
         return dataclasses.replace(self, **kw)
+
+    def with_splits(self, entries) -> "SketchSpec":
+        """Spec with ``(src, src_label, n_replicas)`` split entries merged
+        into the routing table (DESIGN.md §13) — the split transition of
+        the hot-key state machine. Same identity (routing is
+        ``compare=False``): existing handles, plane caches, and compiled
+        programs all keep serving."""
+        from .routing import RoutingTable
+        base = self.routing if self.routing is not None else RoutingTable()
+        return self.replace(routing=base.merged(entries))
 
     def compatible(self, other: "SketchSpec") -> bool:
         """Same sketch identity up to the shard count (states merge exactly
@@ -85,11 +107,18 @@ class SketchSpec:
             cfg["count_dtype"] = jnp.dtype(self.config.count_dtype).name
             if cfg["block_bounds"] is not None:
                 cfg["block_bounds"] = [list(b) for b in cfg["block_bounds"]]
-        return {"kind": self.kind, "n_shards": self.n_shards, "config": cfg}
+        out = {"kind": self.kind, "n_shards": self.n_shards, "config": cfg}
+        if self.routing is not None and self.routing:
+            out["routing"] = self.routing.to_json()
+        return out
 
     @classmethod
     def from_json(cls, d: dict) -> "SketchSpec":
         cfg = dict(d["config"])
+        routing = None
+        if d.get("routing") is not None:
+            from .routing import RoutingTable
+            routing = RoutingTable.from_json(d["routing"])
         if d["kind"] == "lgs":
             config = LGSConfig(**cfg)
         else:
@@ -100,7 +129,8 @@ class SketchSpec:
             if cfg.get("block_bounds") is not None:
                 cfg["block_bounds"] = tuple(tuple(b) for b in cfg["block_bounds"])
             config = LSketchConfig(**cfg)
-        return cls(kind=d["kind"], config=config, n_shards=int(d["n_shards"]))
+        return cls(kind=d["kind"], config=config, n_shards=int(d["n_shards"]),
+                   routing=routing)
 
 
 def make_spec(kind: str, n_shards: int = 1, config: Any = None,

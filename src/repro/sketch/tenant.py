@@ -13,7 +13,7 @@ plain sharded handle already uses.
 
 Row layout and routing::
 
-    pooled row = slot * n_shards + shard_assignment(tenant_spec, src, la)
+    pooled row = slot * n_shards + routed_assignment(tenant_spec, ...)
 
 i.e. the tenant id folds into the routing exactly like the shard partition
 does — a tenant's block of rows receives precisely the rows an independent
@@ -74,7 +74,8 @@ from .ingest import (_FIELDS, _degenerate_batch, _dispatch_stacked,
                      _shard_bucket)
 from .query import (QueryBatch, _count, _with_group_window, query_planes,
                     resolve_query_path)
-from .spec import SketchSpec, shard_assignment
+from .routing import routed_assignment
+from .spec import SketchSpec
 from .state import ShardedState, _init_one, create
 
 
@@ -597,7 +598,11 @@ class TenantPool:
         max_count = 1
         for slot in sorted(per_slot):
             fs = per_slot[slot]
-            sid = shard_assignment(self.spec, fs["src"], fs["src_label"])
+            # routing-aware like ingest._partition_stack: the tenant spec's
+            # split table must steer pooled rows exactly as a standalone
+            # handle's, or pooled answers stop being bit-identical to it
+            sid = routed_assignment(self.spec, fs["src"], fs["dst"],
+                                    fs["src_label"])
             for s in range(n_sh):
                 ix = np.flatnonzero(sid == s)
                 if len(ix):

@@ -250,6 +250,43 @@ def test_collective_analytics_parity():
     assert "HH_COLLECTIVE_OK" in stdout
 
 
+def test_collective_query_parity_routed_split_key():
+    """Skew-aware routing (DESIGN.md §13) on a placed mesh handle: a spec
+    with a split hot key partitions ingest across replica shards, and the
+    collective query path stays bit-identical to the host scan — the
+    replica fan-out is just the existing probe-every-shard-and-sum, so no
+    plane rebuilds or collective changes are needed."""
+    stdout = _run(_SKETCH_PRELUDE + """
+        HOT = 7
+        ARRS = list(stream("lsketch", seed=23))
+        n = ARRS[0].shape[0]
+        take = np.random.default_rng(5).random(n) < 0.5
+        ARRS[0] = np.where(take, HOT, ARRS[0]).astype(np.int32)
+        ARRS[2] = (ARRS[0] % 3).astype(np.int32)
+        ARRS = tuple(ARRS)
+
+        spec = skt.SketchSpec(kind="lsketch", config=LS, n_shards=4)
+        routed = spec.with_splits([(HOT, HOT % 3, 4)])
+        assert routed == spec  # routing is host-only: jit caches shared
+        st = skt.place(routed, skt.create(routed), mesh_over(4))
+        st = skt.ingest(routed, st, batch(ARRS))
+        assert skt.mesh_context(st) is not None
+        # placed routed ingest must match the host routed ingest bit-for-bit
+        host = skt.ingest(routed, skt.create(routed), batch(ARRS))
+        assert all(bool(jnp.array_equal(x, y)) for x, y in zip(
+            jax.tree.leaves(st.shards), jax.tree.leaves(host.shards))), \\
+            "placed routed ingest diverged from host routed ingest"
+        # tier-1 compile budget: full-horizon half of the suite, like the
+        # unrouted smoke test
+        for qb in [q for q in suite("lsketch", ARRS) if q.last is None]:
+            a = np.asarray(skt.query(routed, st, qb, path="scan"))
+            b = np.asarray(skt.query(routed, st, qb, path="collective"))
+            assert np.array_equal(a, b), (qb.kind, qb.direction, a[:6], b[:6])
+        print("ROUTED_PARITY_OK")
+    """)
+    assert "ROUTED_PARITY_OK" in stdout
+
+
 @pytest.mark.slow
 def test_collective_query_parity_sweep_lsketch():
     """The acceptance sweep, LSketch half: path="collective" is

@@ -185,11 +185,16 @@ def _stream(seed, n=600, tmax=2400, n_vertices=50):
                          n_vertices=n_vertices)
 
 
-def _ingest_and_truth(kind, ns, path, arrays, cfg=None, chunks=4):
+def _ingest_and_truth(kind, ns, path, arrays, cfg=None, chunks=4,
+                      splits=None):
     """Feed the stream in ``chunks`` ingest calls; yield (handle, oracle)
-    after each chunk so callers probe several window positions."""
+    after each chunk so callers probe several window positions.
+    ``splits``: hot-key routing entries applied to the spec (DESIGN.md
+    §13) — the partition scatters those keys across replica shards."""
     cfg = KIND_CFG[kind] if cfg is None else cfg
     spec = skt.SketchSpec(kind=kind, config=cfg, n_shards=ns)
+    if splits:
+        spec = spec.with_splits(splits)
     if kind == "gss":  # degenerate: no labels, no time
         src, dst, la, lb, le, w, t = arrays
         z = np.zeros_like(la)
@@ -512,3 +517,124 @@ def test_pool_overflow_keeps_honest_bound(ns, path):
         np.array([e[3] for e in present], np.int32)), path=path))
     for i, e in enumerate(present):
         assert est[i] >= oracle.edge_weight(*e) - lost
+
+
+# --------------------------------------------------------------------------
+# skew-aware routing (DESIGN.md §13): split keys stay conformant
+# --------------------------------------------------------------------------
+
+HOT = 7  # the planted heavy source vertex (label HOT % 3 = 1)
+
+
+def _heavy_stream(seed, n=600, tmax=2400, n_vertices=50):
+    """Stream where vertex ``HOT`` sources ~half the edges — the skew
+    regime hot-key splitting targets."""
+    src, dst, la, lb, le, w, t = (np.array(x) for x in _stream(
+        seed, n=n, tmax=tmax, n_vertices=n_vertices))
+    take = np.random.default_rng(seed + 1).random(n) < 0.5
+    src[take] = HOT
+    la = (src % 3).astype(np.int32)  # keep the stream's label convention
+    return src, dst, la, lb, le, w, t
+
+
+@pytest.mark.parametrize("kind,ns,path",
+                         [(k, ns, p) for k in ("lsketch", "gss")
+                          for ns in (1, 4) for p in ("scan", "pallas")])
+def test_routed_estimates_overestimate_only(kind, ns, path):
+    """With the hot key split across every shard, estimates stay
+    one-sided vs the oracle at every stream stage (the replica-sum
+    argument: each shard's partial is one-sided over what it holds), and
+    the pallas read path stays bit-identical to the scan reference —
+    routing changes placement, never device semantics."""
+    _skip_unused(kind, path)
+    arrays = _heavy_stream(seed=11)
+    hot_lab = 0 if kind == "gss" else HOT % 3  # gss degenerates labels
+    splits = [(HOT, hot_lab, max(ns, 2))]
+    errs = []
+    for stage, (spec, state, oracle) in enumerate(
+            _ingest_and_truth(kind, ns, path, arrays, splits=splits)):
+        assert spec.routing is not None and spec.routing.splits
+        present, absent = _sample_edges(oracle, arrays)
+        edges = present[::3] + absent
+        qb = skt.QueryBatch.edges(
+            np.array([e[0] for e in edges], np.int32),
+            np.array([e[1] for e in edges], np.int32),
+            np.array([e[2] for e in edges], np.int32),
+            np.array([e[3] for e in edges], np.int32))
+        est = np.asarray(skt.query(spec, state, qb, path=path))
+        ref = np.asarray(skt.query(spec, state, qb, path="scan"))
+        assert np.array_equal(est, ref), (
+            f"{kind} x{ns} stage={stage}: routed {path} diverged from scan")
+        for i, e in enumerate(edges):
+            truth = oracle.edge_weight(*e)
+            assert est[i] >= truth, (
+                f"{kind} x{ns} {path} stage={stage}: split-key edge {e} "
+                f"est {est[i]} < truth {truth}")
+            errs.append((int(est[i]), truth))
+    _record(f"routing/{kind}/x{ns}/{path}", errs)
+
+
+@pytest.mark.parametrize("ns,path", [(4, "scan"), (4, "pallas")])
+def test_routed_pool_overflow_keeps_honest_bound(ns, path):
+    """Pool saturation under routing: the weakened bound
+    ``est >= truth - pool_lost`` must hold with the hot key split."""
+    cfg = LSketchConfig(d=8, n_blocks=2, F=256, r=2, s=2, c=4, k=4,
+                        window_size=400, pool_capacity=8, pool_probes=2)
+    arrays = _heavy_stream(seed=13, n=500, tmax=1500, n_vertices=400)
+    spec = skt.SketchSpec(kind="lsketch", config=cfg,
+                          n_shards=ns).with_splits([(HOT, HOT % 3, ns)])
+    state = skt.ingest(spec, skt.create(spec), _batch(arrays), path=path)
+    lost = int(jnp.sum(state.shards.pool_lost))
+    assert lost > 0, "stream must saturate the pool"
+    oracle = ExactGraph(cfg.effective_k, cfg.subwindow_size)
+    oracle.insert_batch(arrays)
+    present = list(oracle.edges.keys())[::5]
+    est = np.asarray(skt.query(spec, state, skt.QueryBatch.edges(
+        np.array([e[0] for e in present], np.int32),
+        np.array([e[1] for e in present], np.int32),
+        np.array([e[2] for e in present], np.int32),
+        np.array([e[3] for e in present], np.int32)), path=path))
+    for i, e in enumerate(present):
+        assert est[i] >= oracle.edge_weight(*e) - lost
+
+
+@pytest.mark.parametrize("path", ["scan", "pallas"])
+def test_split_key_checkpoint_restore_and_reshard(tmp_path, path):
+    """Split-key checkpoints restore exactly: the manifest carries the
+    routing table, a same-spec restore is bit-identical, and a
+    cross-shard-count restore (reshard replays records through the routed
+    vid hash) keeps every estimate one-sided vs the oracle."""
+    cfg = LS_CFG
+    arrays = _heavy_stream(seed=12)
+    spec = skt.SketchSpec(kind="lsketch", config=cfg,
+                          n_shards=4).with_splits([(HOT, HOT % 3, 4)])
+    state = skt.ingest(spec, skt.create(spec), _batch(arrays), path=path)
+    skt.save(spec, state, str(tmp_path))
+    saved = skt.saved_spec(str(tmp_path))
+    assert saved.routing == spec.routing  # manifest round-trips the table
+
+    restored = skt.restore(spec, str(tmp_path))
+    import jax
+    for a, b in zip(jax.tree.leaves(state.shards),
+                    jax.tree.leaves(restored.shards)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "same-spec restore of a split-key checkpoint must be exact"
+
+    oracle = ExactGraph(cfg.effective_k, cfg.subwindow_size)
+    oracle.insert_batch(arrays)
+    present = list(oracle.edges.keys())[::4]
+    qb = skt.QueryBatch.edges(
+        np.array([e[0] for e in present], np.int32),
+        np.array([e[1] for e in present], np.int32),
+        np.array([e[2] for e in present], np.int32),
+        np.array([e[3] for e in present], np.int32))
+    for ns2 in (1, 2):
+        spec2 = spec.replace(n_shards=ns2)
+        rest2 = skt.restore(spec2, str(tmp_path))
+        lost = int(jnp.sum(rest2.shards.pool_lost))
+        est = np.asarray(skt.query(spec2, rest2, qb, path=path))
+        for i, e in enumerate(present):
+            truth = oracle.edge_weight(*e)
+            assert est[i] >= truth - lost, (
+                f"x4 -> x{ns2} {path}: split-key edge {e} est {est[i]} "
+                f"< truth {truth} - lost {lost}")

@@ -1,0 +1,311 @@
+"""Unit tests for skew-aware shard routing (DESIGN.md §13).
+
+Fast-tier coverage of the routing layer itself: the space-saving
+``HeavyKeyDetector`` (one-sided counts, hot-key recall), ``RoutingTable``
+normalization and JSON round-trip, ``routed_assignment`` (fallback
+bit-identity, deterministic replica spread), identity preservation on the
+``SketchSpec`` (routing must not change equality/hash — no recompiles, no
+plane-cache misses), the ``AsyncIngestor`` auto-split state machine, and
+the routed interactions with planes delta maintenance, the tenant pool,
+checkpoints, resharding, and ``recommend_budget``. The heavier oracle
+conformance of split-key estimates rides tests/test_oracle_conformance.py
+(slow tier).
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from conftest import random_stream
+from repro import sketch as skt
+from repro.core import LSketchConfig
+from repro.core.types import EdgeBatch
+from repro.sketch.routing import RoutingTable
+
+CFG = LSketchConfig(d=32, n_blocks=2, F=256, r=4, s=4, c=4, k=4,
+                    window_size=400, pool_capacity=512, pool_probes=8)
+
+HOT = 7  # planted heavy source vertex (label HOT % 3 = 1)
+
+
+def _heavy_arrays(seed=0, n=400, frac=0.5):
+    # timestamps confined to one window: the dict truth below has no
+    # expiry semantics (the windowed oracle lives in the slow-tier
+    # conformance suite)
+    src, dst, la, lb, le, w, t = random_stream(
+        np.random.default_rng(seed), n=n, tmax=CFG.window_size - 1)
+    take = np.random.default_rng(seed + 1).random(n) < frac
+    src = np.array(src)
+    src[take] = HOT
+    la = (src % 3).astype(np.int32)
+    return src, dst, la, lb, le, w, t
+
+
+def _batch(arrays) -> EdgeBatch:
+    return EdgeBatch(*[jnp.asarray(x, jnp.int32) for x in arrays])
+
+
+def _truth(arrays) -> dict:
+    """Exact (src, la, dst, lb) -> total weight (whole-window streams)."""
+    out: dict = {}
+    src, dst, la, lb, _, w, _ = arrays
+    for i in range(len(src)):
+        key = (int(src[i]), int(la[i]), int(dst[i]), int(lb[i]))
+        out[key] = out.get(key, 0) + int(w[i])
+    return out
+
+
+def _edges_qb(keys):
+    return skt.QueryBatch.edges(
+        np.array([k[0] for k in keys], np.int32),
+        np.array([k[1] for k in keys], np.int32),
+        np.array([k[2] for k in keys], np.int32),
+        np.array([k[3] for k in keys], np.int32))
+
+
+# --------------------------------------------------------------------------
+# HeavyKeyDetector
+# --------------------------------------------------------------------------
+
+def test_detector_counts_one_sided_and_total_exact():
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 64, 2000)
+    lab = src % 3
+    true: dict = {}
+    for s, l in zip(src.tolist(), lab.tolist()):
+        true[(s, l)] = true.get((s, l), 0) + 1
+    det = skt.HeavyKeyDetector(capacity=16)  # far below 64 distinct keys
+    for a in range(0, 2000, 500):  # batched updates
+        det.update(src[a:a + 500], lab[a:a + 500])
+    assert det.total == 2000
+    assert len(det.counts) <= 16
+    for key, c in det.counts.items():
+        # space-saving invariant: tracked count never undercounts
+        assert c >= true[key], (key, c, true[key])
+
+
+def test_detector_hot_keys_finds_planted_head():
+    src, _, la, *_ = _heavy_arrays(seed=1, frac=0.5)
+    det = skt.HeavyKeyDetector(capacity=32)
+    det.update(src, la)
+    hot = det.hot_keys(0.3)
+    assert hot and hot[0][:2] == (HOT, HOT % 3)  # hottest first
+    assert hot[0][2] >= int((np.asarray(src) == HOT).sum())
+    assert det.hot_keys(1.1) == []  # nothing carries >100% of the stream
+
+
+# --------------------------------------------------------------------------
+# RoutingTable
+# --------------------------------------------------------------------------
+
+def test_routing_table_normalization_and_validation():
+    a = RoutingTable(((5, 1, 4), (2, 0, 2)))
+    b = RoutingTable(((2, 0, 2), (5, 1, 4)))
+    assert a == b and hash(a) == hash(b)  # construction order is erased
+    assert bool(a) and not bool(RoutingTable())
+    with pytest.raises(ValueError, match="duplicate"):
+        RoutingTable(((5, 1, 4), (5, 1, 2)))
+    with pytest.raises(ValueError, match="n_replicas"):
+        RoutingTable(((5, 1, 1),))
+    merged = a.merged([(5, 1, 8), (9, 2, 2)])
+    assert dict((s, l) for s, l, _ in merged.splits) == \
+        {5: 1, 2: 0, 9: 2}
+    assert (5, 1, 8) in merged.splits  # replica count replaced
+    reps = merged.replicas(np.array([5, 2, 9, 77]), np.array([1, 0, 2, 0]))
+    assert reps.tolist() == [8, 2, 2, 1]
+
+
+def test_routing_is_identity_excluded_and_json_carried():
+    spec = skt.SketchSpec(kind="lsketch", config=CFG, n_shards=4)
+    routed = spec.with_splits([(HOT, HOT % 3, 4)])
+    # host-only state: same identity -> same jit cache, same plane cache
+    assert spec == routed and hash(spec) == hash(routed)
+    assert routed.routing.splits == ((HOT, HOT % 3, 4),)
+    # ... but the manifest JSON carries it
+    back = skt.SketchSpec.from_json(routed.to_json())
+    assert back.routing == routed.routing
+    assert skt.SketchSpec.from_json(spec.to_json()).routing is None
+
+
+# --------------------------------------------------------------------------
+# routed_assignment
+# --------------------------------------------------------------------------
+
+def test_routed_assignment_fallback_bit_identity():
+    spec = skt.SketchSpec(kind="lsketch", config=CFG, n_shards=4)
+    src, dst, la, *_ = _heavy_arrays(seed=2)
+    base = skt.shard_assignment(spec, src, la)
+    # no table at all
+    assert np.array_equal(skt.routed_assignment(spec, src, dst, la), base)
+    # table present but no key matches this stream
+    cold = spec.with_splits([(10_000, 0, 4)])
+    assert np.array_equal(skt.routed_assignment(cold, src, dst, la), base)
+    # single shard: routing is vacuous
+    one = skt.SketchSpec(kind="lsketch", config=CFG,
+                         n_shards=1).with_splits([(HOT, HOT % 3, 2)])
+    assert np.array_equal(skt.routed_assignment(one, src, dst, la),
+                          np.zeros(len(src), np.int32))
+
+
+def test_routed_assignment_spreads_split_key_deterministically():
+    spec = skt.SketchSpec(kind="lsketch", config=CFG,
+                          n_shards=4).with_splits([(HOT, HOT % 3, 3)])
+    src, dst, la, *_ = _heavy_arrays(seed=3, n=800)
+    sid = skt.routed_assignment(spec, src, dst, la)
+    assert np.array_equal(sid, skt.routed_assignment(spec, src, dst, la))
+    hot = np.asarray(src) == HOT
+    base = int(skt.shard_assignment(spec, np.array([HOT]),
+                                    np.array([HOT % 3]))[0])
+    allowed = {(base + j) % 4 for j in range(3)}
+    used = set(sid[hot].tolist())
+    assert used <= allowed and len(used) == 3, (used, allowed)
+    # non-split rows are untouched
+    plain = skt.shard_assignment(spec, src, la)
+    assert np.array_equal(sid[~hot], plain[~hot])
+
+
+# --------------------------------------------------------------------------
+# routed ingest: path bit-identity, one-sidedness, planes delta
+# --------------------------------------------------------------------------
+
+def test_routed_ingest_paths_bit_identical_and_one_sided():
+    arrays = _heavy_arrays(seed=4)
+    spec = skt.SketchSpec(kind="lsketch", config=CFG,
+                          n_shards=4).with_splits([(HOT, HOT % 3, 4)])
+    truth = _truth(arrays)
+    keys = sorted(truth)[::2]
+    qb = _edges_qb(keys)
+    outs = {}
+    for path in ("scan", "pallas"):
+        state = skt.ingest(spec, skt.create(spec), _batch(arrays), path=path)
+        outs[path] = np.asarray(skt.query(spec, state, qb, path=path))
+    assert np.array_equal(outs["scan"], outs["pallas"])
+    for i, k in enumerate(keys):
+        assert outs["scan"][i] >= truth[k], (k, outs["scan"][i], truth[k])
+
+
+def test_routed_flush_rides_planes_delta_not_rebuild():
+    """Routing must not disturb §10 incremental plane maintenance: a
+    live-subwindow flush after a cached query resolves via delta-apply,
+    not a full rebuild, with a split key in play."""
+    import importlib
+    q_mod = importlib.import_module("repro.sketch.query")
+
+    arrays = _heavy_arrays(seed=5)
+    t_live = np.full(len(arrays[0]), 3, np.int32)
+    arrays = arrays[:6] + (t_live,)
+    spec = skt.SketchSpec(kind="lsketch", config=CFG,
+                          n_shards=4).with_splits([(HOT, HOT % 3, 4)])
+    state = skt.ingest(spec, skt.create(spec), _batch(arrays))
+    qb = _edges_qb(sorted(_truth(arrays))[:16])
+    jax.block_until_ready(skt.query(spec, state, qb, path="pallas"))
+    b0, d0 = q_mod.PLANES_BUILD_COUNTS["build"], \
+        q_mod.PLANES_BUILD_COUNTS["delta"]
+    state = skt.ingest(spec, state, _batch(arrays))  # same live subwindow
+    jax.block_until_ready(skt.query(spec, state, qb, path="pallas"))
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == b0, \
+        "routed flush must not force a full plane rebuild"
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] == d0 + 1
+
+
+def test_async_ingestor_auto_splits_hot_key():
+    arrays = _heavy_arrays(seed=6, n=600)
+    spec = skt.SketchSpec(kind="lsketch", config=CFG, n_shards=4)
+    ing = skt.AsyncIngestor(spec, heat_threshold=0.2)
+    n = len(arrays[0])
+    for a in range(0, n, 200):
+        ing.submit(_batch(tuple(x[a:a + 200] for x in arrays)))
+    state = ing.flush()
+    assert ing.spec.routing is not None
+    split = {(s, l) for s, l, _ in ing.spec.routing.splits}
+    assert (HOT, HOT % 3) in split
+    # the mid-stream split (history hashed, tail routed) stays one-sided
+    truth = _truth(arrays)
+    keys = sorted(k for k in truth if k[0] == HOT)
+    est = np.asarray(skt.query(ing.spec, state, _edges_qb(keys)))
+    for i, k in enumerate(keys):
+        assert est[i] >= truth[k], (k, est[i], truth[k])
+
+
+def test_async_ingestor_no_detector_without_threshold():
+    spec = skt.SketchSpec(kind="lsketch", config=CFG, n_shards=4)
+    ing = skt.AsyncIngestor(spec)
+    assert ing.detector is None
+    ing.submit(_batch(_heavy_arrays(seed=7, n=64)))
+    ing.flush()
+    assert ing.spec.routing is None  # no observation, no splits
+
+
+# --------------------------------------------------------------------------
+# tenant pool / checkpoint / reshard / budget
+# --------------------------------------------------------------------------
+
+def test_tenant_pool_routed_bit_consistent_with_standalone():
+    """A pooled tenant under a routed spec answers bit-identically to the
+    same spec's standalone handle (the pool partitions via the same
+    ``routed_assignment``)."""
+    arrays = _heavy_arrays(seed=8)
+    spec = skt.SketchSpec(kind="lsketch", config=CFG,
+                          n_shards=2).with_splits([(HOT, HOT % 3, 2)])
+    solo = skt.ingest(spec, skt.create(spec), _batch(arrays), path="scan")
+    pool = skt.TenantPool(spec, n_slots=3)
+    pool.submit([("a", _batch(arrays))])
+    pool.flush()
+    qb = _edges_qb(sorted(_truth(arrays))[::3])
+    want = np.asarray(skt.query(spec, solo, qb, path="scan"))
+    got = np.asarray(pool.query_many([("a", qb)], path="scan")[0])
+    assert np.array_equal(got, want)
+
+
+def test_checkpoint_manifest_round_trips_routing(tmp_path):
+    arrays = _heavy_arrays(seed=9, n=200)
+    spec = skt.SketchSpec(kind="lsketch", config=CFG,
+                          n_shards=2).with_splits([(HOT, HOT % 3, 2)])
+    state = skt.ingest(spec, skt.create(spec), _batch(arrays), path="scan")
+    skt.save(spec, state, str(tmp_path))
+    assert skt.saved_spec(str(tmp_path)).routing == spec.routing
+    restored = skt.restore(spec, str(tmp_path))
+    for a, b in zip(jax.tree.leaves(state.shards),
+                    jax.tree.leaves(restored.shards)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_reshard_with_routing_stays_one_sided():
+    arrays = _heavy_arrays(seed=10)
+    spec = skt.SketchSpec(kind="lsketch", config=CFG, n_shards=2)
+    state = skt.ingest(spec, skt.create(spec), _batch(arrays), path="scan")
+    table = RoutingTable(((HOT, HOT % 3, 4),))
+    wide = skt.reshard(spec, state, 4, routing=table)
+    spec4 = spec.replace(n_shards=4, routing=table)
+    lost = int(np.asarray(wide.shards.pool_lost).sum())
+    truth = _truth(arrays)
+    keys = sorted(truth)[::2]
+    est = np.asarray(skt.query(spec4, wide, _edges_qb(keys), path="scan"))
+    for i, k in enumerate(keys):
+        assert est[i] >= truth[k] - lost, (k, est[i], truth[k], lost)
+
+
+def test_recommend_budget_splits_hot_shard_keys_only():
+    src, _, la, *_ = _heavy_arrays(seed=11, n=1000, frac=0.6)
+    det = skt.HeavyKeyDetector(capacity=64)
+    det.update(src, la)
+    spec = skt.SketchSpec(kind="lsketch", config=CFG, n_shards=4)
+    rep = skt.recommend_budget(spec, det)
+    for loads in (rep.ingest_load, rep.query_load, rep.combined):
+        assert len(loads) == 4 and abs(sum(loads) - 1.0) < 1e-6
+    split = {(s, l): r for s, l, r in rep.routing.splits}
+    assert (HOT, HOT % 3) in split and split[(HOT, HOT % 3)] >= 2
+    # cold keys that merely share the hot shard are not split
+    hot_n = int((np.asarray(src) == HOT).sum())
+    for (s, l), r in split.items():
+        c = det.counts.get((s, l), 0)
+        assert c >= det.total / (2 * 4), (s, l, c)
+    # existing splits survive (merged semantics)
+    spec_pre = spec.with_splits([(9999, 0, 2)])
+    rep2 = skt.recommend_budget(spec_pre, det)
+    assert (9999, 0, 2) in rep2.routing.splits
+    # JSON shape for dashboards
+    j = rep.to_json()
+    assert set(j) == {"ingest_load", "query_load", "combined", "routing"}
+    assert hot_n / det.total > 0.3  # the stream really was skewed
