@@ -635,6 +635,120 @@ def mixed_serve_throughput(n=4096, q=1024, rounds=6, n_shards=4):
     return rows
 
 
+def multi_horizon_throughput(n=16384, H=8, n_shards=4):
+    """Fused multi-horizon plane maintenance A/B (DESIGN.md §14): the
+    time-sensitive sweep — ``H`` distinct ``last`` horizons on one loaded
+    ``k = H`` handle — answered by
+
+      * ``multi_horizon_fused_x{S}`` — one ``query_planes_multi`` pass
+        over the ring: a searchsorted horizon band per slot + one
+        segment-sum/cumsum emits every horizon's planes in one dispatch
+        (O(k + H) slot visits);
+      * ``multi_horizon_loop_x{S}``  — ``H`` independent ``query_planes``
+        builds, one masked k-slot reduction each (the pre-§14 serving
+        pattern, O(H * k)).
+
+    Both start from a cleared cache every call (the build itself is the
+    row). Two more rows isolate the steady-serving refresh — a live
+    flush's ``PlanesDelta`` folded into a cached multi entry — at H=8 vs
+    H=1 (``serve_delta_apply_multi_h{8,1}_x{S}``): one dispatch
+    broadcasts the subwindow update across the horizon axis, so the
+    **per-horizon** cost stays flat in H (the raw seconds can't — the
+    fold writes H plane sets — but the dispatch amortizes) and the whole
+    fold stays well under a cold rebuild of the stacked entry
+    (``check_bench.py`` gates both ratios same-run, alongside
+    fused < loop).
+    """
+    import time as _time
+    from repro import sketch as skt
+    from repro.sketch.query import clear_plane_cache
+
+    cfg = LSketchConfig(d=128, n_blocks=4, F=1024, r=8, s=8, c=8, k=H,
+                        window_size=100, pool_capacity=1024)
+    rng = np.random.default_rng(0)
+    batch = _batch(rng, n, n_vlabels=32)
+    # spread the stream over the whole window so every ring slot is live
+    # and each horizon masks a genuinely different slot subset
+    t = np.sort(rng.integers(0, cfg.window_size, n)).astype(np.int32)
+    batch = EdgeBatch(batch.src, batch.dst, batch.src_label, batch.dst_label,
+                      batch.edge_label, batch.weight, jnp.asarray(t))
+    spec = skt.make_spec("lsketch", n_shards=n_shards, config=cfg)
+    state = skt.ingest(spec, skt.create(spec), batch, path="scan")
+    jax.block_until_ready(state.shards.C)
+    horizons = list(range(1, H + 1))
+
+    def run_fused():
+        clear_plane_cache(state)
+        planes, _ = skt.query_planes_multi(spec, state, horizons)
+        jax.block_until_ready(jax.tree.leaves(planes))
+        return planes
+
+    def run_loop():
+        clear_plane_cache(state)
+        outs = [skt.query_planes(spec, state, last=h) for h in horizons]
+        jax.block_until_ready(jax.tree.leaves(outs))
+        return outs
+
+    run_fused()
+    run_loop()  # compile both outside the timed alternation
+    medians = _timed_medians([("multi_horizon_fused", run_fused),
+                              ("multi_horizon_loop", run_loop)],
+                             warmup=1, iters=7)
+
+    # delta-apply flat in H: live-subwindow flush folded into a cached
+    # multi entry covering 8 horizons vs 1 (same code path, same flush)
+    warmup, iters = 1, 5
+    bs = max(n // 8, 256)
+    lb = _batch(rng, bs, n_vlabels=32)
+    live = EdgeBatch(lb.src, lb.dst, lb.src_label, lb.dst_label,
+                     lb.edge_label, lb.weight,
+                     jnp.asarray(np.full(bs, cfg.window_size - 1, np.int32)))
+    hsets = {"serve_delta_apply_multi_h8": horizons,
+             "serve_delta_apply_multi_h1": [H]}
+
+    def seeded(hs):
+        # fresh lineage per timed call (ingest donates its input); the
+        # seed flush settles the ring, then the multi entry is built so
+        # the timed step resolves exactly one pending delta
+        st = skt.ingest(spec, skt.create(spec), batch, path="scan")
+        planes, _ = skt.query_planes_multi(spec, st, hs)
+        jax.block_until_ready(jax.tree.leaves(planes))
+        return st
+
+    lineages = {tag: [seeded(hs) for _ in range(warmup + iters)]
+                for tag, hs in hsets.items()}
+    apply_t = {tag: [] for tag in hsets}
+    for _ in range(warmup + iters):
+        for tag, hs in hsets.items():  # alternate within each iteration
+            st = skt.ingest(spec, lineages[tag].pop(), live, path="scan")
+            t0 = _time.perf_counter()
+            planes, _ = skt.query_planes_multi(spec, st, hs)
+            jax.block_until_ready(jax.tree.leaves(planes))
+            apply_t[tag].append(_time.perf_counter() - t0)
+
+    rows, result = [], {}
+    for tag in ("multi_horizon_fused", "multi_horizon_loop"):
+        dt = medians[tag]
+        rows.append([f"{tag}_x{n_shards}", H, n_shards,
+                     f"{dt / H * 1e3:.3f}", f"{dt:.4f}"])
+        result[f"{tag}_x{n_shards}"] = {
+            "horizons": H, "shards": n_shards, "ingested_edges": n,
+            "ms_per_horizon": dt / H * 1e3, "total_s": dt}
+    for tag in hsets:
+        dt = float(np.median(apply_t[tag][warmup:]))
+        h = len(hsets[tag])
+        rows.append([f"{tag}_x{n_shards}", h, n_shards,
+                     f"{dt / h * 1e3:.3f}", f"{dt:.5f}"])
+        result[f"{tag}_x{n_shards}"] = {
+            "horizons": h, "shards": n_shards, "edges_per_flush": bs,
+            "ms_per_horizon": dt / h * 1e3, "total_s": dt}
+    write_csv("multi_horizon_throughput",
+              ["impl", "horizons", "shards", "ms_per_horizon", "total_s"],
+              rows)
+    _merge_bench(result)
+    return rows
+
+
 def collective_query_throughput(n=2048, q=1024, n_shards=8):
     """Mesh-resident query comparison on the fake-device mesh (run inside
     the ``--mesh-child`` process): the same label-restricted vertex batch
@@ -852,6 +966,10 @@ def main(argv=None):
         print("impl,k,shards,ms_per_call,total_s")
         for r in hrows:
             print(",".join(str(x) for x in r))
+        xrows = multi_horizon_throughput(n=n)
+        print("impl,horizons,shards,ms_per_horizon,total_s")
+        for r in xrows:
+            print(",".join(str(x) for x in r))
         krows = skewed_ingest_throughput()
         print("impl,edges,shards,split_keys,max_fill,pad_ratio,"
               "mean_rel_err,us_per_edge,total_s")
@@ -893,6 +1011,10 @@ def main(argv=None):
     hrows = heavy_hitter_throughput(k=16)
     print("impl,k,shards,ms_per_call,total_s")
     for r in hrows:
+        print(",".join(str(x) for x in r))
+    xrows = multi_horizon_throughput(n=n)
+    print("impl,horizons,shards,ms_per_horizon,total_s")
+    for r in xrows:
         print(",".join(str(x) for x in r))
     from .serve_bench import run_all as _serve_rows
     _serve_rows(quick=args.quick)

@@ -189,3 +189,22 @@ print(f"out-weight(hot={hot})   est:",
 rep = skt.recommend_budget(ing.spec, ing.detector)  # gSketch-style sizing
 print("recommended splits:", rep.routing.splits,
       " per-shard load:", [round(x, 3) for x in rep.combined])
+
+# 10. time-sensitive horizon sweeps (DESIGN.md §14): the same query at
+#     several `last` horizons localizes *when* an edge appeared or a
+#     vertex went hot. `last=[...]` answers every horizon from ONE fused
+#     pass over the ring (validity masks nest, so the slots sort into
+#     horizon bands: O(k+H) work instead of O(H*k)) — each row is
+#     bit-identical to querying that horizon by itself
+print("\n-- time-sensitive horizon sweep --")
+horizons = [1, 2, 4, 8]
+sweep = skt.query(spec, state,
+                  skt.QueryBatch.edges([a], [la], [b], [lb], last=horizons))
+for h, est in zip(horizons, np.asarray(sweep)[:, 0].tolist()):
+    print(f"weight(a->b, last={h})  est: {int(est):4d}  "
+          f"true: {gt.edge_weight(a, b, last=h)}")
+ids, ws = skt.heavy_vertices(spec, state, k=1, horizons=horizons)
+for h, vid, w in zip(horizons, np.asarray(ids)[:, 0].tolist(),
+                     np.asarray(ws)[:, 0].tolist()):
+    print(f"heaviest out-vertex @ last={h}: v={v_of_vid[int(vid)]:5d} "
+          f"est: {int(w)}  true: {gt.vertex_weight(v_of_vid[int(vid)])}")

@@ -84,6 +84,96 @@ def build_query_planes(cfg: LSketchConfig, state: LSketchState,
 
 
 @pytree_dataclass
+class MultiPlanes:
+    """Horizon-stacked ``QueryPlanes``: the same six leaves with one extra
+    leading ``[H]`` horizon axis, row ``i`` bit-identical to
+    ``build_query_planes(cfg, state, horizons[i])``. Built by ONE pass over
+    the ``k`` ring slots (``build_query_planes_multi``) instead of ``H``
+    independent window reductions; ``key``/``pool_key`` are horizon-
+    independent structural pass-throughs, broadcast so every leaf collapses
+    uniformly through the kernel ops' leading-axis reshape.
+
+    key     : [H, S, 2, d, d]
+    cw      : [H, S, 2, d, d]
+    pw      : [H, S, 2, d, d, c]
+    pool_key: [H, S, Q, 2]
+    pool_cw : [H, S, Q]
+    pool_pw : [H, S, Q, c]
+    """
+
+    key: jax.Array
+    cw: jax.Array
+    pw: jax.Array
+    pool_key: jax.Array
+    pool_cw: jax.Array
+    pool_pw: jax.Array
+
+
+def slice_horizon(planes: MultiPlanes, i: int) -> QueryPlanes:
+    """Row ``i`` of a stacked ``MultiPlanes`` as plain ``QueryPlanes`` —
+    the per-horizon view a single-horizon lookup serves from."""
+    return QueryPlanes(key=planes.key[i], cw=planes.cw[i], pw=planes.pw[i],
+                       pool_key=planes.pool_key[i],
+                       pool_cw=planes.pool_cw[i], pool_pw=planes.pool_pw[i])
+
+
+def build_query_planes_multi(cfg: LSketchConfig, state: LSketchState,
+                             horizons) -> MultiPlanes:
+    """Window-reduce a shard-stacked state for EVERY horizon in one pass
+    over the ``k`` ring slots (DESIGN.md §14).
+
+    ``horizons`` is a static, strictly increasing tuple of ints (each the
+    already-clamped ``min(last, k)``; ``None`` maps to ``k`` upstream).
+    Validity masks nest — ``valid(h) ⊆ valid(h+1)`` because a slot is
+    valid for horizon ``h`` iff its age ``cur_widx - slot_widx`` is
+    ``< h`` — so each slot's counters are read ONCE, scatter-added into
+    the band of the smallest horizon that admits the slot
+    (``segment_sum``, O(k)), and a cumulative sum along the horizon axis
+    (O(H)) turns band totals into per-horizon planes: O(k + H) plane work
+    instead of the per-horizon loop's O(H·k). Bit-identical to the
+    per-horizon builds: int32 addition is exactly associative and
+    commutative, so regrouping the slot sums changes nothing.
+
+    ``cur_widx`` must already carry the fleet-global (or per-group) window,
+    exactly as for ``build_query_planes``. Traced — compose inside a
+    jitted caller.
+    """
+    hs = tuple(int(h) for h in horizons)
+    if list(hs) != sorted(set(hs)):
+        raise ValueError(f"horizons must be strictly increasing, got {hs}")
+    H = len(hs)
+    hs_arr = jnp.asarray(hs, jnp.int32)
+    # per-slot age; NEVER slots get a huge positive age -> no band.
+    # band = index of the smallest horizon h with age < h (searchsorted
+    # right: first entry strictly greater), H+1 segments so out-of-window
+    # slots fall off the end.
+    age = state.cur_widx[:, None] - state.slot_widx  # [S, k]
+    band = jnp.searchsorted(hs_arr, age, side="right").astype(jnp.int32)
+
+    def one_shard(C, P, pool_C, pool_P, b):
+        def bands(x_slots):  # [k, ...] -> cumulative per-horizon [H, ...]
+            seg = jax.ops.segment_sum(x_slots, b, num_segments=H + 1)
+            return jnp.cumsum(seg[:H], axis=0)
+        return (bands(jnp.moveaxis(C, 3, 0)),        # [H, d, d, 2]
+                bands(jnp.moveaxis(P, 3, 0)),        # [H, d, d, 2, c]
+                bands(jnp.moveaxis(pool_C, 1, 0)),   # [H, Q]
+                bands(jnp.moveaxis(pool_P, 1, 0)))   # [H, Q, c]
+
+    cw, pw, pcw, ppw = jax.vmap(one_shard)(state.C, state.P, state.pool_C,
+                                           state.pool_P, band)
+    key = jnp.moveaxis(state.key, 3, 1)  # [S, 2, d, d] (kernel layout)
+    return MultiPlanes(
+        key=jnp.broadcast_to(key[None], (H,) + key.shape),
+        cw=jnp.transpose(cw, (1, 0, 4, 2, 3)),
+        pw=jnp.transpose(pw, (1, 0, 4, 2, 3, 5)),
+        pool_key=jnp.broadcast_to(state.pool_key[None],
+                                  (H,) + state.pool_key.shape),
+        pool_cw=jnp.transpose(pcw, (1, 0, 2)),
+        pool_pw=jnp.transpose(ppw, (1, 0, 2, 3)),
+    )
+
+
+@pytree_dataclass
 class PlanesDelta:
     """Additive contribution of one ingest flush to cached ``QueryPlanes``
     (DESIGN.md §10). The planes are linear in the C/P/pool counters under a
@@ -144,6 +234,39 @@ def apply_planes_delta(cfg: LSketchConfig, state: LSketchState,
         pool_key=state.pool_key,
         pool_cw=planes.pool_cw + delta.d_pool_c * mC[:, None],
         pool_pw=planes.pool_pw + delta.d_pool_p * mC[:, None, None],
+    )
+
+
+def apply_planes_delta_multi(cfg: LSketchConfig, state: LSketchState,
+                             planes: MultiPlanes, delta: PlanesDelta,
+                             horizons) -> MultiPlanes:
+    """Fold one flush's ``PlanesDelta`` into a horizon-stacked cache in a
+    single dispatch — row ``i`` bit-identical to
+    ``apply_planes_delta(cfg, state, slice_horizon(planes, i), delta,
+    horizons[i])``. The touched slot's age against the post-flush window
+    decides, per horizon, whether its increment is in-mask
+    (``age < h``, the same nesting the builder bands on), so the whole
+    update is one broadcast multiply-add per leaf: O(1) in H beyond the
+    write itself, instead of H separate apply dispatches."""
+    hs = tuple(int(h) for h in horizons)
+    hs_arr = jnp.asarray(hs, jnp.int32)
+    slot_w = jnp.take_along_axis(state.slot_widx, delta.slot[:, None],
+                                 axis=1)[:, 0]                      # [S]
+    age = state.cur_widx - slot_w                                   # [S]
+    live = age[None, :] < hs_arr[:, None]                           # [H, S]
+    mC = live.astype(planes.cw.dtype)
+    H = len(hs)
+    key = jnp.moveaxis(state.key, 3, 1)
+    d_cw = jnp.moveaxis(delta.d_c, 3, 1)                            # [S,2,d,d]
+    d_pw = jnp.moveaxis(delta.d_p, 3, 1)                            # [S,2,d,d,c]
+    return MultiPlanes(
+        key=jnp.broadcast_to(key[None], (H,) + key.shape),
+        cw=planes.cw + d_cw[None] * mC[:, :, None, None, None],
+        pw=planes.pw + d_pw[None] * mC[:, :, None, None, None, None],
+        pool_key=jnp.broadcast_to(state.pool_key[None],
+                                  (H,) + state.pool_key.shape),
+        pool_cw=planes.pool_cw + delta.d_pool_c[None] * mC[:, :, None],
+        pool_pw=planes.pool_pw + delta.d_pool_p[None] * mC[:, :, None, None],
     )
 
 
@@ -447,20 +570,22 @@ def path_reachability(cfg: LSketchConfig, state: LSketchState,
         ma, sa, fa = hsh.unpack_vertex_id(jnp.asarray(frontier, jnp.int32), cfg.F)
         # successor_scan takes raw vertex+label; here we already have packed
         # identities, so scan by reconstructing addressing directly:
-        vids, valid = _successors_by_vid(cfg, state, jnp.asarray(frontier, jnp.int32))
+        vids, valid = _successors_by_vid(cfg, state,
+                                         jnp.asarray(frontier, jnp.int32))
         nxt = np.unique(np.asarray(vids)[np.asarray(valid)])
         frontier = np.array([v for v in nxt if v not in visited], np.int64)
         visited.update(int(v) for v in frontier)
     return False
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _successors_by_vid(cfg: LSketchConfig, state: LSketchState, vids):
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _successors_by_vid(cfg: LSketchConfig, state: LSketchState, vids,
+                       last: int | None = None):
     ma, sa, fa = hsh.unpack_vertex_id(vids, cfg.F)
     starts, widths = cfg.block_start_width()
     pre = VertexAddressing(ma, starts[ma], widths[ma], sa, fa,
                            hsh.candidate_offsets(fa, cfg.r), vids)
-    mask = valid_slot_mask(cfg, state, None)
+    mask = valid_slot_mask(cfg, state, last)
     pos = (pre.s[:, None] + pre.offs) % pre.width[:, None]
     lines = pre.start[:, None] + pos
     keys = state.key[lines]

@@ -59,7 +59,27 @@ def edge_query_planes(cfg: LSketchConfig, planes: QueryPlanes, src, dst,
     block ``[S_local, ...]`` and the outputs come back reduced to ``[B]``
     via ``core.merge.psum_partials`` (local sum + cross-device psum) —
     the collective query's one reduction point.
+
+    Horizon-stacked ``MultiPlanes`` (5-dim ``cw``, DESIGN.md §14) are
+    accepted via the same leading-axis collapse the shard stack uses:
+    ``[H, S, ...]`` reshapes to ``[H*S, ...]``, the walk runs once, and
+    the partials fold back per horizon. The multi outputs come back
+    ``[H, B]`` ALREADY shard-reduced (psum-reduced too under
+    ``axis_name``) — callers must not re-sum a shard axis.
     """
+    if planes.cw.ndim == 5:  # horizon-stacked MultiPlanes
+        H, S = planes.cw.shape[:2]
+        flat = jax.tree.map(
+            lambda x: jnp.reshape(x, (H * S,) + x.shape[2:]), planes)
+        w, wl = edge_query_planes(cfg, flat, src, dst, labels,
+                                  with_le=with_le, interpret=interpret,
+                                  _kernel_interpret=_kernel_interpret)
+        w = jnp.sum(w.reshape((H, S) + w.shape[1:]), axis=1)
+        wl = jnp.sum(wl.reshape((H, S) + wl.shape[1:]), axis=1)
+        if axis_name is not None:
+            w = jax.lax.psum(w, axis_name)
+            wl = jax.lax.psum(wl, axis_name)
+        return w, wl
     la, lb, le = labels
     pa = precompute(cfg, src, la)
     pb = precompute(cfg, dst, lb)

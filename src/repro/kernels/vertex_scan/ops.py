@@ -49,7 +49,26 @@ def vertex_query_planes(cfg: LSketchConfig, planes: QueryPlanes, vertex,
     ``shard_map``-compatible entry point returning ``[B]`` outputs reduced
     via ``core.merge.psum_partials`` (DESIGN.md §9).
     Traced — compose inside a jitted caller.
+
+    Horizon-stacked ``MultiPlanes`` (5-dim ``cw``, DESIGN.md §14) collapse
+    their leading ``[H]`` into the shard axis, scan once, and return
+    ``[H, B]`` ALREADY shard-reduced (and psum-reduced under
+    ``axis_name``) — callers must not re-sum a shard axis.
     """
+    if planes.cw.ndim == 5:  # horizon-stacked MultiPlanes
+        H, S = planes.cw.shape[:2]
+        flat = jax.tree.map(
+            lambda x: jnp.reshape(x, (H * S,) + x.shape[2:]), planes)
+        w, wl = vertex_query_planes(cfg, flat, vertex, labels,
+                                    direction=direction, with_le=with_le,
+                                    interpret=interpret,
+                                    _kernel_interpret=_kernel_interpret)
+        w = jnp.sum(w.reshape((H, S) + w.shape[1:]), axis=1)
+        wl = jnp.sum(wl.reshape((H, S) + wl.shape[1:]), axis=1)
+        if axis_name is not None:
+            w = jax.lax.psum(w, axis_name)
+            wl = jax.lax.psum(wl, axis_name)
+        return w, wl
     lv, le = labels
     pre = precompute(cfg, vertex, lv)
     le_idx = hsh.edge_label_bucket(le, cfg.c, cfg.seed) if with_le else None
@@ -108,8 +127,23 @@ def label_aggregate_planes(cfg: LSketchConfig, planes: QueryPlanes, vlabel,
     10-14): sum every occupied cell in the label's block rows (out) /
     columns (in) plus matching pool entries. Returns (w, w_label) [S, B],
     or ``[B]`` psum-reduced when ``axis_name`` is set (the shard_map
-    collective entry, DESIGN.md §9).
+    collective entry, DESIGN.md §9). Horizon-stacked ``MultiPlanes``
+    (5-dim ``cw``) collapse like the other plane ops and return ``[H, B]``
+    ALREADY shard-reduced — callers must not re-sum a shard axis.
     """
+    if planes.cw.ndim == 5:  # horizon-stacked MultiPlanes (DESIGN.md §14)
+        H, S = planes.cw.shape[:2]
+        flat = jax.tree.map(
+            lambda x: jnp.reshape(x, (H * S,) + x.shape[2:]), planes)
+        w, wl = label_aggregate_planes(cfg, flat, vlabel,
+                                       edge_label=edge_label,
+                                       direction=direction, with_le=with_le)
+        w = jnp.sum(w.reshape((H, S) + w.shape[1:]), axis=1)
+        wl = jnp.sum(wl.reshape((H, S) + wl.shape[1:]), axis=1)
+        if axis_name is not None:
+            w = jax.lax.psum(w, axis_name)
+            wl = jax.lax.psum(wl, axis_name)
+        return w, wl
     vlabel = jnp.asarray(vlabel, jnp.int32)
     B = vlabel.shape[0]
     S = planes.cw.shape[0]

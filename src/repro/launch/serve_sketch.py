@@ -90,7 +90,16 @@ class SketchServer:
                  mesh=None, axis: str = "data", prewarm: bool = True,
                  pool: "skt.TenantPool | None" = None,
                  heat_threshold: float | None = None,
-                 split_replicas: int | None = None):
+                 split_replicas: int | None = None,
+                 horizons=None):
+        # registered time-sensitive sweep: prewarm builds ALL of these
+        # horizons in one fused multi-horizon dispatch (DESIGN.md §14) and
+        # per-horizon query groups slice out of the stacked entry
+        self.horizons = [h if h is None else int(h)
+                         for h in (horizons or [])]
+        if any(h is not None and h <= 0 for h in self.horizons):
+            raise ValueError("horizons= entries must be positive (or None "
+                             "for the full window)")
         self.pool = pool
         if pool is not None:
             if spec is not None and spec != pool.spec:
@@ -213,7 +222,7 @@ class SketchServer:
         self._ingestor.submit(batch)
         if not self.pipeline:
             self._ingestor.flush()
-        self._prewarm()
+        self._prewarm_many([None])
 
     def ingest_many(self, batches) -> None:
         """One cross-tenant ingest round (pool mode): ``{tenant: batch}``
@@ -226,7 +235,7 @@ class SketchServer:
         self.pool.submit(batches)
         if not self.pipeline:
             self.pool.flush()
-        self._prewarm()
+        self._prewarm_many([None])
 
     def _prewarm(self, last=None, handle=None) -> None:
         """Keep the plane cache hot off the query path (DESIGN.md §10).
@@ -253,6 +262,58 @@ class SketchServer:
             return
         skt.query_planes(self.spec, h, last,
                          collective=(path == "collective"))
+
+    def _prewarm_many(self, lasts, handle=None) -> None:
+        """Fused multi-horizon prewarm (DESIGN.md §14): when one flush (or
+        the registered ``horizons=`` sweep) needs planes at several
+        horizons, ONE stacked build covers them all — O(k + H) ring work
+        instead of O(H·k) — and per-horizon lookups slice out of the
+        cached ``MultiPlanes`` entry. A single wanted horizon with no
+        registered sweep falls back to the plain per-horizon prewarm."""
+        if not self.prewarm:
+            return
+        path = skt.resolve_query_path(self.spec, self.query_path)
+        if path == "scan":
+            return
+        want = list(dict.fromkeys(lasts))
+        for h in self.horizons:
+            if h not in want:
+                want.append(h)
+        if not want:
+            return
+        if len(want) == 1:
+            self._prewarm(want[0], handle=handle)
+            return
+        if self.pool is not None:
+            h0 = handle if handle is not None else self.pool.dispatched
+            skt.query_planes_multi(self.spec, h0, want,
+                                   groups=self.pool.n_slots)
+            return
+        h0 = handle if handle is not None else self._ingestor.dispatched
+        if h0 is None:
+            return
+        skt.query_planes_multi(self.spec, h0, want,
+                               collective=(path == "collective"))
+
+    def serving_summary(self, alpha: float = 0.5) -> str:
+        """One-line serving-health summary for periodic operator logging:
+        queue depth, plane-cache temperature, and — when the heavy-key
+        detector is on — the workload-aware sizing numbers from
+        ``budget_report()`` so skew shows up in the log before anyone
+        decides to reshard (DESIGN.md §13)."""
+        from repro.sketch.query import PLANES_BUILD_COUNTS as c
+        parts = [f"pending={len(self.pending)}",
+                 f"planes[build={c['build']} delta={c['delta']} "
+                 f"evict={c['evict']}]"]
+        if self.pool is None and self._ingestor.detector is not None:
+            rep = self.budget_report(alpha)
+            live = self.live_spec.routing.splits \
+                if self.live_spec.routing else ()
+            parts.append(
+                f"splits[live={len(live)} recommended="
+                f"{len(rep.routing.splits)}] "
+                f"load=[{' '.join('%.3f' % f for f in rep.combined)}]")
+        return " ".join(parts)
 
     # ---- queries ----
     def submit(self, kind: str, tenant=None, **args) -> QueryRequest:
@@ -294,9 +355,9 @@ class SketchServer:
         groups: Dict[tuple, List[QueryRequest]] = {}
         for r in self.pending:
             groups.setdefault(self._group_key(r), []).append(r)
-        for last in {g[2] for g in groups}:
-            # post-flush handle: .state drains the ingest pipeline first
-            self._prewarm(last, handle=self.state)
+        # post-flush handle: .state drains the ingest pipeline first; a
+        # flush spanning several horizons prewarms them in ONE fused build
+        self._prewarm_many([g[2] for g in groups], handle=self.state)
         for (kind, with_le, last, direction), reqs in groups.items():
             if self.pool is not None:
                 # one pooled dispatch for the whole group: contiguous
@@ -336,49 +397,59 @@ class SketchServer:
 
     # ---- analytics (DESIGN.md §12) ----
     def top_k(self, kind: str = "vertex", k: int = 10, *,
-              direction: str = "out", last=None, tenant=None):
+              direction: str = "out", last=None, horizons=None, tenant=None):
         """Windowed heavy-hitter top-k over the served sketch — ``kind``
         "vertex" -> (vids, weights), "edge" -> (src, dst, weights),
         "label" -> (blocks, weights), each a ``[k]`` tuple padded with
         (-1, 0). Pool mode answers for one tenant (``tenant=``). Flushes
         pending queries first so the ranking reflects every prior submit;
         the dispatch reuses the same plane cache the query path keeps hot.
+        ``horizons=[h1, ..., hH]`` (exclusive with ``last=``) sweeps the
+        ranking across time horizons in one fused dispatch — result
+        leaves gain a leading ``[H]`` axis (DESIGN.md §14).
         """
         self.flush()
         if self.pool is not None:
             if tenant is None:
                 raise ValueError("pool-mode top_k needs tenant=")
             return self.pool.top_k(tenant, kind=kind, k=k,
-                                   direction=direction, last=last)
+                                   direction=direction, last=last,
+                                   horizons=horizons)
         if tenant is not None:
             raise ValueError("tenant= needs a pool-mode server (pool=)")
         st = self.state
         if kind == "vertex":
             return skt.heavy_vertices(self.spec, st, k, direction=direction,
-                                      last=last, path=self.query_path)
+                                      last=last, horizons=horizons,
+                                      path=self.query_path)
         if kind == "edge":
             return skt.heavy_edges(self.spec, st, k, last=last,
-                                   path=self.query_path)
+                                   horizons=horizons, path=self.query_path)
         if kind == "label":
             return skt.top_labels(self.spec, st, k, direction=direction,
-                                  last=last, path=self.query_path)
+                                  last=last, horizons=horizons,
+                                  path=self.query_path)
         raise ValueError(f"unknown top_k kind {kind!r}")
 
     def reachable(self, src, src_label, dst, dst_label, *,
-                  max_hops: int = 8, tenant=None):
+                  max_hops: int = 8, last=None, horizons=None, tenant=None):
         """Batched multi-hop reachability (bool [B]) over the served
-        sketch; pool mode extracts the tenant's standalone handle."""
+        sketch; pool mode extracts the tenant's standalone handle.
+        ``last=`` restricts edges to recent windows; ``horizons=`` sweeps
+        that restriction and returns bool ``[H, B]`` (DESIGN.md §14)."""
         self.flush()
         if self.pool is not None:
             if tenant is None:
                 raise ValueError("pool-mode reachable needs tenant=")
             spec, st = self.pool.handle_of(tenant)
             return skt.reachable_many(spec, st, src, src_label, dst,
-                                      dst_label, max_hops=max_hops)
+                                      dst_label, max_hops=max_hops,
+                                      last=last, horizons=horizons)
         if tenant is not None:
             raise ValueError("tenant= needs a pool-mode server (pool=)")
         return skt.reachable_many(self.spec, self.state, src, src_label,
-                                  dst, dst_label, max_hops=max_hops)
+                                  dst, dst_label, max_hops=max_hops,
+                                  last=last, horizons=horizons)
 
 
 def _batch_axis(reqs: List[QueryRequest], k: str) -> bool:
@@ -436,6 +507,17 @@ def main(argv=None):
                          "the ingest stream across replica shards (0 = "
                          "off); prints the workload-aware budget report "
                          "after serving")
+    ap.add_argument("--horizons", default="", metavar="H1,H2,...",
+                    help="register a time-sensitive horizon sweep (window "
+                         "counts, e.g. 1,2,4,8): prewarm builds every "
+                         "registered horizon in ONE fused multi-horizon "
+                         "plane dispatch (DESIGN.md §14) and a sweep "
+                         "summary prints after serving")
+    ap.add_argument("--summary-every", type=int, default=0, metavar="N",
+                    help="print a serving-health summary every N ingest "
+                         "batches (queue depth, plane-cache counters, and "
+                         "the workload-aware budget report when "
+                         "--heat-threshold is on); 0 = off")
     ap.add_argument("--tenants", type=int, default=0, metavar="T",
                     help="serve T independent tenant sketches from one "
                          "TenantPool (stream split round-robin; each "
@@ -468,6 +550,7 @@ def main(argv=None):
     elif args.query_path == "collective":
         raise SystemExit("--query-path collective needs --mesh N")
 
+    horizons = [int(x) for x in args.horizons.split(",") if x.strip()]
     spec = dataclasses.replace(PHONE, n_edges=args.edges, n_vertices=1000)
     st = generate(spec, seed=0)
     sk_spec = build_spec(args.sketch, spec.window_size, n_shards=args.shards)
@@ -475,12 +558,14 @@ def main(argv=None):
         pool = skt.TenantPool(sk_spec, n_slots=args.tenants)
         server = SketchServer(pool=pool, pipeline=not args.no_pipeline,
                               query_path=args.query_path,
-                              prewarm=not args.no_prewarm)
+                              prewarm=not args.no_prewarm,
+                              horizons=horizons)
     else:
         server = SketchServer(sk_spec, pipeline=not args.no_pipeline,
                               query_path=args.query_path, mesh=mesh,
                               prewarm=not args.no_prewarm,
-                              heat_threshold=args.heat_threshold or None)
+                              heat_threshold=args.heat_threshold or None,
+                              horizons=horizons)
 
     from repro.engine.insert import TRACE_COUNTS
     traces_before = TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]
@@ -495,6 +580,8 @@ def main(argv=None):
         else:
             server.ingest(batch)
         n_batches += 1
+        if args.summary_every and n_batches % args.summary_every == 0:
+            print(f"[batch {n_batches}] {server.serving_summary()}")
     jax.block_until_ready(jax.tree.leaves(server.state.shards))  # drain pipe
     dt_ing = time.time() - t0
     traces = (TRACE_COUNTS["fused"] + TRACE_COUNTS["stacked"]
@@ -520,6 +607,26 @@ def main(argv=None):
     print(f"answered {len(reqs)} edge queries in {dt_q:.2f}s "
           f"({len(reqs) / dt_q:.0f} q/s)")
     print("sample answers:", [r.answer for r in reqs[:8]])
+
+    if horizons:
+        # time-sensitive sweep: every horizon in one fused dispatch
+        # (DESIGN.md §14) — the answer tightens as the window narrows
+        i = int(idx[0])
+        q = skt.QueryBatch.edges(int(st.src[i]), int(st.src_label[i]),
+                                 int(st.dst[i]), int(st.dst_label[i]),
+                                 last=horizons)
+        t0 = time.time()
+        if args.tenants:
+            sw_spec, sw_st = server.pool.handle_of(int(i) % args.tenants)
+            sweep = np.asarray(skt.query(sw_spec, sw_st, q))
+        else:
+            sweep = np.asarray(skt.query(sk_spec, server.state, q,
+                                         path=args.query_path))
+        dt_s = time.time() - t0
+        print(f"horizon sweep (src={int(st.src[i])} dst={int(st.dst[i])}): "
+              + ", ".join(f"last={h}: {int(w)}"
+                          for h, w in zip(horizons, sweep[:, 0]))
+              + f" ({dt_s:.2f}s, one fused dispatch)")
 
     if args.sketch != "lgs":  # LGS stores no keys: no reversible analytics
         tenant = 0 if args.tenants else None

@@ -21,14 +21,14 @@ from __future__ import annotations
 from .spec import (KINDS, SketchSpec, make_spec, shard_assignment,
                    shard_assignment_vids)
 from .routing import (BudgetReport, HeavyKeyDetector, RoutingTable,
-                      recommend_budget, routed_assignment,
+                      prune_routing, recommend_budget, routed_assignment,
                       routed_assignment_vids)
 from .state import (MeshContext, ShardedState, create, merge_all,
                     mesh_context, named_shardings, place, shards_compatible,
                     stack_states, unstack_state, with_mesh)
 from .ingest import AsyncIngestor, ingest, ingest_single
 from .query import (QueryBatch, clear_plane_cache, default_query_path, query,
-                    query_planes, resolve_query_path)
+                    query_planes, query_planes_multi, resolve_query_path)
 from .analytics import (heavy_edges, heavy_vertices, reachable_many,
                         top_labels)
 from .reshard import reshard
@@ -38,13 +38,14 @@ from .tenant import PoolFullError, TenantPool
 __all__ = [
     "KINDS", "SketchSpec", "make_spec", "shard_assignment",
     "shard_assignment_vids",
-    "BudgetReport", "HeavyKeyDetector", "RoutingTable", "recommend_budget",
-    "routed_assignment", "routed_assignment_vids",
+    "BudgetReport", "HeavyKeyDetector", "RoutingTable", "prune_routing",
+    "recommend_budget", "routed_assignment", "routed_assignment_vids",
     "MeshContext", "ShardedState", "create", "merge_all", "mesh_context",
     "named_shardings", "place", "shards_compatible", "stack_states",
     "unstack_state", "with_mesh",
     "AsyncIngestor", "ingest", "ingest_single", "QueryBatch", "query",
-    "query_planes", "clear_plane_cache", "resolve_query_path",
+    "query_planes", "query_planes_multi", "clear_plane_cache",
+    "resolve_query_path",
     "default_query_path", "heavy_vertices", "heavy_edges", "top_labels",
     "reachable_many", "reshard", "restore", "save", "saved_extra",
     "saved_spec", "PoolFullError", "TenantPool",

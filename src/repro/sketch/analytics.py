@@ -42,8 +42,9 @@ from repro.core.lsketch import precompute
 from repro.kernels.heavy_hitters.ops import (
     heavy_edges_planes, heavy_vertices_planes, top_labels_planes)
 
-from .query import (_collective_ctx, _count, _lift, _shmap,
-                    _with_group_window, query_planes, resolve_query_path)
+from .query import (_collective_ctx, _count, _lift, _normalize_horizons,
+                    _shmap, _shmap_multi, _with_group_window, query_planes,
+                    query_planes_multi, resolve_query_path)
 from .spec import SketchSpec
 from .state import ShardedState
 
@@ -92,18 +93,80 @@ def _topk_collective(spec, ctx, planes, *, kind, k, direction, interpret):
     return _shmap(body, ctx, 0)(planes)
 
 
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("kind", "k", "direction", "interpret"))
+def _topk_pallas_multi(spec, planes, *, kind, k, direction, interpret):
+    """Horizon-sweep top-k over a stacked ``MultiPlanes``: the per-horizon
+    decodes unroll inside ONE jitted program (the decode kernel is not
+    vmapped — unrolling keeps the pallas call shapes identical to the
+    single-horizon path), returning ``[H, k]``-stacked rankings."""
+    _count("hh_" + kind, "pallas-multi")
+    H = planes.cw.shape[0]
+    outs = [_planes_topk(spec.config, _cq.slice_horizon(planes, i), kind, k,
+                         direction, interpret=interpret) for i in range(H)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("kind", "k", "direction", "interpret"))
+def _topk_collective_multi(spec, ctx, planes, *, kind, k, direction,
+                           interpret):
+    _count("hh_" + kind, "collective-multi")
+
+    def body(planes):
+        H = planes.cw.shape[0]
+        outs = [_planes_topk(spec.config, _cq.slice_horizon(planes, i), kind,
+                             k, direction, interpret=interpret,
+                             axis_name=ctx.axis) for i in range(H)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    return _shmap_multi(body, ctx, 0)(planes)
+
+
 def _analytics(spec: SketchSpec, state, kind: str, k: int, direction: str,
-               last, path: str):
+               last, path: str, horizons=None):
     if spec.kind == "lgs":
         raise NotImplementedError(
             "LGS cells store no keys — the reversible cell-owner decode "
             "needs LSketch/GSS")
+    if horizons is not None and last is not None:
+        raise ValueError("pass either last= (one horizon) or horizons= "
+                         "(a sweep), not both")
     if spec.kind == "gss":
+        if horizons is not None:  # no window ring: one ranking fits all
+            out = _analytics(spec, state, kind, k, direction, None, path)
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           (len(horizons),) + x.shape), out)
         last = None  # no window ring to restrict
     path = resolve_query_path(spec, path)
     stacked = isinstance(state, ShardedState)
     shards = state.shards if stacked else state
     interpret = jax.default_backend() != "tpu"
+    if horizons is not None:
+        horizons = list(horizons)
+        if not horizons:
+            raise ValueError("horizons= needs at least one horizon")
+        if path == "scan":
+            outs = [_analytics(spec, state, kind, k, direction,
+                               None if h is None else int(h), path)
+                    for h in horizons]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        _, sel = _normalize_horizons(spec, horizons)
+        collective = path == "collective"
+        planes, _ = query_planes_multi(spec, state, horizons,
+                                       collective=collective)
+        if collective:
+            ctx = _collective_ctx(spec, state)
+            out = _topk_collective_multi(spec, ctx, planes, kind=kind, k=k,
+                                         direction=direction,
+                                         interpret=interpret)
+        else:
+            out = _topk_pallas_multi(spec, planes, kind=kind, k=k,
+                                     direction=direction,
+                                     interpret=interpret)
+        sel_arr = jnp.asarray(sel, jnp.int32)
+        return jax.tree.map(lambda x: x[sel_arr], out)
     if path == "collective":
         ctx = _collective_ctx(spec, state)
         planes = query_planes(spec, state, last, collective=True)
@@ -118,52 +181,66 @@ def _analytics(spec: SketchSpec, state, kind: str, k: int, direction: str,
 
 
 def heavy_vertices(spec: SketchSpec, state, k: int = 10, *,
-                   direction: str = "out", last=None, path: str = "auto"):
+                   direction: str = "out", last=None, horizons=None,
+                   path: str = "auto"):
     """Top-k vertices by windowed out/in weight across all shards.
 
     Returns (vids [k] int32, weights [k] int32): packed (block, address,
     fingerprint) identities recovered by key reversibility, descending
     weight, ties ascending vid, (-1, 0) padding. One-sided (over-)
     estimates, same guarantee as ``edge_weight``.
+
+    ``horizons=[h1, ..., hH]`` (exclusive with ``last=``) sweeps the
+    ranking across time horizons in one dispatch — ``([H, k], [H, k])``
+    out, row ``i`` bit-identical to ``last=horizons[i]`` — served from
+    one horizon-stacked plane build (DESIGN.md §14).
     """
-    return _analytics(spec, state, "vertex", k, direction, last, path)
+    return _analytics(spec, state, "vertex", k, direction, last, path,
+                      horizons=horizons)
 
 
 def heavy_edges(spec: SketchSpec, state, k: int = 10, *, last=None,
-                path: str = "auto"):
+                horizons=None, path: str = "auto"):
     """Top-k edges by windowed weight: (src [k], dst [k], weights [k]).
 
     Matrix cells and overflow-pool entries rank together (an edge that
     overflowed to the pool keeps its full weight); ties break by
-    ascending (src_vid, dst_vid).
+    ascending (src_vid, dst_vid). ``horizons=`` sweeps as in
+    ``heavy_vertices`` (``[H, k]`` rows).
     """
-    return _analytics(spec, state, "edge", k, "out", last, path)
+    return _analytics(spec, state, "edge", k, "out", last, path,
+                      horizons=horizons)
 
 
 def top_labels(spec: SketchSpec, state, k: int = 10, *,
-               direction: str = "out", last=None, path: str = "auto"):
+               direction: str = "out", last=None, horizons=None,
+               path: str = "auto"):
     """Top-k vertex-label blocks by windowed out/in weight:
-    (blocks [k], weights [k]) — the decoded vid's block id is its label."""
-    return _analytics(spec, state, "label", k, direction, last, path)
+    (blocks [k], weights [k]) — the decoded vid's block id is its label.
+    ``horizons=`` sweeps as in ``heavy_vertices`` (``[H, k]`` rows)."""
+    return _analytics(spec, state, "label", k, direction, last, path,
+                      horizons=horizons)
 
 
 # --------------------------------------------------------------------------
 # batched reachability
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("stacked",))
-def _exists_batched(spec, shards, pairs, *, stacked=True):
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("stacked", "last"))
+def _exists_batched(spec, shards, pairs, *, stacked=True, last=None):
     shards = _with_group_window(_lift(shards, stacked))
-    hit = jax.vmap(
-        lambda st: _cq._edge_exists_by_vid(spec.config, st, pairs))(shards)
+    hit = jax.vmap(lambda st: _cq._edge_exists_by_vid(
+        spec.config, st, pairs, last))(shards)
     return jnp.any(hit, axis=0)
 
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("stacked",))
-def _succ_batched(spec, shards, vids, *, stacked=True):
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("stacked", "last"))
+def _succ_batched(spec, shards, vids, *, stacked=True, last=None):
     shards = _with_group_window(_lift(shards, stacked))
-    return jax.vmap(
-        lambda st: _cq._successors_by_vid(spec.config, st, vids))(shards)
+    return jax.vmap(lambda st: _cq._successors_by_vid(
+        spec.config, st, vids, last))(shards)
 
 
 def _bucket_i32(xs, fill):
@@ -174,7 +251,8 @@ def _bucket_i32(xs, fill):
 
 
 def reachable_many(spec: SketchSpec, state, src, src_label, dst, dst_label,
-                   *, max_hops: int = 8) -> np.ndarray:
+                   *, max_hops: int = 8, last=None,
+                   horizons=None) -> np.ndarray:
     """Batched multi-hop reachability: bool [B], True where a path of 1..
     ``max_hops`` edges connects (src, src_label) to (dst, dst_label).
 
@@ -183,10 +261,57 @@ def reachable_many(spec: SketchSpec, state, src, src_label, dst, dst_label,
     successor scan over the *union* of active frontiers (each unique
     vertex expanded once, however many queries share it) — the batched
     form of ``core.queries.path_reachability``, unioned across shards.
+
+    ``last=h`` restricts every edge check to the h most recent windows.
+    ``horizons=[h1, ..., hH]`` (exclusive with ``last=``) sweeps that
+    restriction and returns bool ``[H, B]``, row ``i`` identical to
+    ``last=horizons[i]``. Validity masks nest (DESIGN.md §14), so
+    reachable(h) ⊆ reachable(h') for h ≤ h': the sweep evaluates the
+    loosest horizon on the full batch, then re-walks only the
+    still-reachable pairs at each tighter horizon.
     """
     if spec.kind == "lgs":
         raise NotImplementedError(
             "LGS cells store no keys — successor recovery needs LSketch/GSS")
+    if horizons is not None and last is not None:
+        raise ValueError("pass either last= (one horizon) or horizons= "
+                         "(a sweep), not both")
+    if spec.kind == "gss":
+        last = None  # no window ring to restrict
+        if horizons is not None:
+            out = reachable_many(spec, state, src, src_label, dst, dst_label,
+                                 max_hops=max_hops)
+            return np.broadcast_to(out[None],
+                                   (len(horizons),) + out.shape).copy()
+    if horizons is not None:
+        horizons = list(horizons)
+        if not horizons:
+            raise ValueError("horizons= needs at least one horizon")
+        k = spec.config.effective_k
+        clamp = [k if h is None else min(int(h), k) for h in horizons]
+        src_b = np.atleast_1d(np.asarray(src, np.int64))
+        B = src_b.shape[0]
+        sl_b = np.broadcast_to(np.asarray(src_label, np.int64), (B,))
+        dst_b = np.broadcast_to(np.asarray(dst, np.int64), (B,))
+        dl_b = np.broadcast_to(np.asarray(dst_label, np.int64), (B,))
+        by_h: dict[int, np.ndarray] = {}
+        alive: np.ndarray | None = None  # still reachable at looser horizon
+        for h in sorted(set(clamp), reverse=True):
+            if alive is None:  # loosest horizon: full batch
+                by_h[h] = np.asarray(reachable_many(
+                    spec, state, src_b, sl_b, dst_b, dl_b,
+                    max_hops=max_hops, last=h), bool)
+            else:
+                row = np.zeros(B, bool)
+                if alive.size:
+                    row[alive] = np.asarray(reachable_many(
+                        spec, state, src_b[alive], sl_b[alive], dst_b[alive],
+                        dl_b[alive], max_hops=max_hops, last=h), bool)
+                by_h[h] = row
+            alive = np.nonzero(by_h[h])[0]
+        return np.stack([by_h[h] for h in clamp])
+    if last is not None:
+        last = min(int(last), spec.config.effective_k)
     cfg = spec.config
     stacked = isinstance(state, ShardedState)
     shards = state.shards if stacked else state
@@ -213,8 +338,8 @@ def reachable_many(spec: SketchSpec, state, src, src_label, dst, dst_label,
         pairs = jnp.stack([_bucket_i32(fr, -1),
                            _bucket_i32([int(targets[i]) for i in owners],
                                        -2)], axis=1)
-        hit = np.asarray(_exists_batched(spec, shards, pairs,
-                                         stacked=stacked))[:len(fr)]
+        hit = np.asarray(_exists_batched(spec, shards, pairs, stacked=stacked,
+                                         last=last))[:len(fr)]
         for j, i in enumerate(owners):
             if hit[j]:
                 done[i] = True
@@ -223,7 +348,7 @@ def reachable_many(spec: SketchSpec, state, src, src_label, dst, dst_label,
         if not uniq:
             continue
         succ, valid = _succ_batched(spec, shards, _bucket_i32(uniq, -1),
-                                    stacked=stacked)
+                                    stacked=stacked, last=last)
         succ = np.asarray(succ)   # [S, U', L]
         valid = np.asarray(valid)
         succ_of = {}

@@ -57,7 +57,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -75,14 +75,22 @@ from .state import ShardedState, mesh_context
 # trace-time counters keyed by (kind, path) — tests assert one jitted
 # program per (kind, bucket, path) by reading these before/after a
 # workload; ("planes", "build")/("planes", "delta") count plane-builder /
-# delta-apply traces; PLANES_BUILD_COUNTS counts host-side cache misses:
-# "build" full rebuilds, "delta" misses resolved by folding pending flush
-# deltas into the parent handle's planes (DESIGN.md §10).
+# delta-apply traces (the "-multi" variants are the horizon-stacked
+# programs, DESIGN.md §14); PLANES_BUILD_COUNTS counts host-side cache
+# misses: "build" full rebuilds, "delta" misses resolved by folding
+# pending flush deltas into the parent handle's planes (DESIGN.md §10),
+# "evict" LRU drops from a handle's plane cache.
 QUERY_TRACE_COUNTS: dict = {}
-PLANES_BUILD_COUNTS = {"build": 0, "delta": 0}
+PLANES_BUILD_COUNTS = {"build": 0, "delta": 0, "evict": 0}
 
 _PLANES_ATTR = "_query_planes_cache"
 _PENDING_ATTR = "_planes_pending"
+
+# Per-handle plane-cache entry cap (LRU). A horizon-sweep workload would
+# otherwise accumulate one entry per distinct (family, horizon) key for the
+# life of the handle; a stacked MultiPlanes answers a whole sweep as ONE
+# entry, so a small cap never thrashes a realistic serving mix.
+PLANES_CACHE_CAP = 8
 
 # Longest delta chain a handle will resolve before falling back to a full
 # rebuild: N un-queried flushes cost N sequential applies at the next
@@ -99,7 +107,13 @@ def _count(kind: str, path: str) -> None:
 @dataclass(frozen=True)
 class QueryBatch:
     """One homogeneous batch of queries (single kind / window / direction —
-    the static axes of the underlying jitted query programs)."""
+    the static axes of the underlying jitted query programs).
+
+    ``last`` is either one horizon (``int | None``, the classic
+    time-sensitive restriction) or a list/tuple of horizons — a
+    multi-horizon sweep answered as ``[H, B]`` from one horizon-stacked
+    plane build (DESIGN.md §14), rows in the order the horizons were
+    given."""
 
     kind: str  # "edge" | "vertex" | "label"
     src: Any = None
@@ -110,7 +124,7 @@ class QueryBatch:
     vertex_label: Any = None
     edge_label: Any = None
     direction: str = "out"
-    last: Optional[int] = None
+    last: Any = None  # int | None | sequence of (int | None)
 
     @classmethod
     def edges(cls, src, src_label, dst, dst_label, edge_label=None,
@@ -359,6 +373,77 @@ def _apply_planes_delta_collective(spec, mesh, axis, shards, planes, delta,
                                                          delta)
 
 
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("horizons", "stacked", "groups"))
+def _build_planes_multi(spec, shards, *, horizons, stacked=True, groups=1):
+    """Horizon-stacked plane build (DESIGN.md §14): ONE pass over the ring
+    emits every horizon's planes — O(k + H) instead of H single builds'
+    O(H·k). Same window reconciliation as ``_build_planes``."""
+    _count("planes", "build-multi")
+    shards = _with_group_window(_lift(shards, stacked), groups)
+    return _q.build_query_planes_multi(spec.config, shards, horizons)
+
+
+def _multi_pspecs(axis):
+    """PartitionSpecs of a mesh-resident MultiPlanes: the horizon axis is
+    replicated (every device serves every horizon), the shard axis — now
+    second — lays over the mesh axis exactly like single planes."""
+    s = P(None, axis)
+    return _q.MultiPlanes(key=s, cw=s, pw=s, pool_key=s, pool_cw=s,
+                          pool_pw=s)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("horizons",))
+def _build_planes_collective_multi(spec, mesh, axis, shards, *, horizons):
+    """Device-resident horizon-stacked build: each device bands only its
+    local shard block under the pmax-globalized window; the output keeps
+    the state's shard layout on axis 1 with the horizon axis replicated."""
+    _count("planes", "build-multi")
+
+    def body(sh):
+        g = jax.lax.pmax(jnp.max(sh.cur_widx, axis=0), axis)
+        sh = dataclasses.replace(
+            sh, cur_widx=jnp.broadcast_to(g, sh.cur_widx.shape))
+        return _q.build_query_planes_multi(spec.config, sh, horizons)
+
+    return shard_map(body, mesh=mesh, in_specs=P(axis),
+                     out_specs=_multi_pspecs(axis),
+                     check_rep=False)(shards)
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("horizons", "groups"))
+def _apply_planes_delta_multi(spec, shards, planes, delta, *, horizons,
+                              groups=1):
+    """Fold one flush's ``PlanesDelta`` into ALL cached horizons in one
+    dispatch — the reason a horizon-sweep serving loop's per-flush cost is
+    O(1) in H rather than H single applies."""
+    _count("planes", "delta-multi")
+    shards = _with_group_window(shards, groups)
+    return _q.apply_planes_delta_multi(spec.config, shards, planes, delta,
+                                       horizons)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2),
+                   static_argnames=("horizons",))
+def _apply_planes_delta_collective_multi(spec, mesh, axis, shards, planes,
+                                         delta, *, horizons):
+    _count("planes", "delta-multi")
+
+    def body(sh, pl, dl):
+        g = jax.lax.pmax(jnp.max(sh.cur_widx, axis=0), axis)
+        sh = dataclasses.replace(
+            sh, cur_widx=jnp.broadcast_to(g, sh.cur_widx.shape))
+        return _q.apply_planes_delta_multi(spec.config, sh, pl, dl, horizons)
+
+    dspec = _q.PlanesDelta(ok=P(axis), slot=P(axis), d_c=P(axis), d_p=P(axis),
+                           d_pool_c=P(axis), d_pool_p=P(axis))
+    mspec = _multi_pspecs(axis)
+    return shard_map(body, mesh=mesh, in_specs=(P(axis), mspec, dspec),
+                     out_specs=mspec, check_rep=False)(shards, planes, delta)
+
+
 def planes_delta_base(state):
     """The ``(base planes dict, prior delta chain)`` the next ingest flush
     should extend, or None when the handle carries nothing a delta could
@@ -382,13 +467,15 @@ def attach_planes_delta(state, base: dict, chain: list, delta) -> None:
     object.__setattr__(state, _PENDING_ATTR, (base, chain + [delta]))
 
 
-def _resolve_pending(spec, state, ckey, horizon, collective, groups=1):
+def _resolve_pending(state, ckey, apply_one):
     """Try to serve a plane-cache miss by folding the handle's pending
     flush deltas into the parent's cached planes. Returns the planes, or
     None when incrementality does not hold (any link's flush reset a ring
     slot / advanced the window / spanned several subwindows on any shard
     row — the ring moved, so the chain is useless for *every* horizon and
-    is dropped) or the parent never cached this horizon.
+    is dropped) or the parent never cached this entry. ``apply_one`` is
+    the right jitted fold for the entry family — single vs horizon-stacked,
+    host vs collective, global vs per-group window lift.
 
     ``delta.ok`` is per shard row; the chain applies only when every row
     of every link held (all rows' rings unchanged => every group's
@@ -411,18 +498,56 @@ def _resolve_pending(spec, state, ckey, horizon, collective, groups=1):
     planes = base[ckey]
     # all links ok => the ring never moved across the chain, so every
     # link's mask equals the final state's — apply them all under it
-    if collective:
-        ctx = _collective_ctx(spec, state)
-        for d in deltas:
-            planes = _apply_planes_delta_collective(
-                spec, ctx.mesh, ctx.axis, state.shards, planes, d,
-                horizon=horizon)
-    else:
-        for d in deltas:
-            planes = _apply_planes_delta(spec, state.shards, planes, d,
-                                         horizon=horizon, groups=groups)
+    for d in deltas:
+        planes = apply_one(planes, d)
     PLANES_BUILD_COUNTS["delta"] += 1
     return planes
+
+
+def _cache_touch(cache: dict, ckey):
+    """Refresh LRU recency of a hit (dict insertion order is the LRU)."""
+    cache[ckey] = cache.pop(ckey)
+    return cache[ckey]
+
+
+def _cache_put(cache: dict, ckey, planes):
+    """Insert as most-recent; evict the least-recent past the cap. A
+    stacked MultiPlanes is one entry like any other."""
+    cache.pop(ckey, None)
+    while len(cache) >= PLANES_CACHE_CAP:
+        cache.pop(next(iter(cache)))
+        PLANES_BUILD_COUNTS["evict"] += 1
+    cache[ckey] = planes
+
+
+def _multi_horizons_of(ckey, mkey):
+    """The horizon tuple of multi entry ``mkey`` iff it is the stacked
+    family of single-horizon key ``ckey``, else None. Families pair
+    ``horizon``/("multi", hs), ("collective", h)/("multi-collective", hs),
+    ("pooled", g, h)/("multi-pooled", g, hs)."""
+    if not isinstance(mkey, tuple):
+        return None
+    if isinstance(ckey, int):
+        return mkey[1] if mkey[0] == "multi" else None
+    if ckey[0] == "collective":
+        return mkey[1] if mkey[0] == "multi-collective" else None
+    if ckey[0] == "pooled":
+        if mkey[0] == "multi-pooled" and mkey[1] == ckey[1]:
+            return mkey[2]
+    return None
+
+
+def _multi_slice_hit(cache: dict, ckey, horizon):
+    """Serve a single-horizon miss from a same-family stacked entry that
+    covers the horizon: one device-side slice of the MultiPlanes row — no
+    rebuild, no delta walk, neither counter moves. Most-recent stacked
+    entry wins; the hit refreshes its recency."""
+    for mkey in reversed(list(cache)):
+        hs = _multi_horizons_of(ckey, mkey)
+        if hs is not None and horizon in hs:
+            planes = _cache_touch(cache, mkey)
+            return _q.slice_horizon(planes, hs.index(horizon))
+    return None
 
 
 def query_planes(spec: SketchSpec, state, last=None, *,
@@ -431,7 +556,10 @@ def query_planes(spec: SketchSpec, state, last=None, *,
     on the state object (handles are immutable — every ingest/restore/
     merge returns a new one, so a hit is always exact). Horizons that
     alias the same validity mask (``last=None`` vs ``last>=k``) share one
-    entry. A miss on a fresh ingest handle first tries the incremental
+    entry; the cache is a small LRU (``PLANES_CACHE_CAP``). A miss first
+    checks whether a same-family horizon-stacked entry
+    (``query_planes_multi``) covers the horizon — then the answer is one
+    slice of the stacked build, not a rebuild — then tries the incremental
     path — folding the flush's ``PlanesDelta`` chain into the parent
     handle's cached planes (DESIGN.md §10) — and rebuilds from the full
     counters only when the flush moved the ring or the parent had nothing
@@ -459,22 +587,101 @@ def query_planes(spec: SketchSpec, state, last=None, *,
         ckey = ("pooled", groups, horizon)
     else:
         ckey = horizon
-    if ckey not in cache:
-        planes = _resolve_pending(spec, state, ckey, horizon, collective,
-                                  groups=groups)
-        if planes is None:
-            PLANES_BUILD_COUNTS["build"] += 1
-            if collective:
-                ctx = _collective_ctx(spec, state)
-                planes = _build_planes_collective(
-                    spec, ctx.mesh, ctx.axis, state.shards, horizon=horizon)
-            else:
-                stacked = isinstance(state, ShardedState)
-                shards = state.shards if stacked else state
-                planes = _build_planes(spec, shards, horizon=horizon,
-                                       stacked=stacked, groups=groups)
-        cache[ckey] = planes
-    return cache[ckey]
+    if ckey in cache:
+        return _cache_touch(cache, ckey)
+    planes = _multi_slice_hit(cache, ckey, horizon)
+    if planes is None:
+        if collective:
+            ctx = _collective_ctx(spec, state)
+
+            def apply_one(pl, d):
+                return _apply_planes_delta_collective(
+                    spec, ctx.mesh, ctx.axis, state.shards, pl, d,
+                    horizon=horizon)
+        else:
+            def apply_one(pl, d):
+                return _apply_planes_delta(spec, state.shards, pl, d,
+                                           horizon=horizon, groups=groups)
+        planes = _resolve_pending(state, ckey, apply_one)
+    if planes is None:
+        PLANES_BUILD_COUNTS["build"] += 1
+        if collective:
+            ctx = _collective_ctx(spec, state)
+            planes = _build_planes_collective(
+                spec, ctx.mesh, ctx.axis, state.shards, horizon=horizon)
+        else:
+            stacked = isinstance(state, ShardedState)
+            shards = state.shards if stacked else state
+            planes = _build_planes(spec, shards, horizon=horizon,
+                                   stacked=stacked, groups=groups)
+    _cache_put(cache, ckey, planes)
+    return planes
+
+
+def _normalize_horizons(spec: SketchSpec, lasts):
+    """Canonicalize a horizon sweep: each entry clamps exactly like a
+    single-horizon query (``None -> k``, ``min(int(h), k)``), the stacked
+    build runs over the sorted unique tuple (the static key of the jitted
+    multi programs), and ``sel`` maps each user position to its row of the
+    stacked output. Returns ``(uniq, sel)``."""
+    k = spec.config.effective_k
+    hs = [k if h is None else min(int(h), k) for h in lasts]
+    uniq = tuple(sorted(set(hs)))
+    return uniq, [uniq.index(h) for h in hs]
+
+
+def query_planes_multi(spec: SketchSpec, state, lasts, *,
+                       collective: bool = False, groups: int = 1):
+    """The horizon-stacked ``MultiPlanes`` covering every horizon in
+    ``lasts`` — ONE pass over the ring (DESIGN.md §14), memoized on the
+    state object as a single cache entry, one flush delta folding into all
+    horizons in one dispatch on the incremental path. Returns
+    ``(planes, uniq)`` where ``uniq`` is the sorted unique clamped horizon
+    tuple the rows follow (``_normalize_horizons``); per-horizon lookups
+    (``query_planes``) slice into this entry instead of rebuilding.
+    Collective/pooled variants key and shard exactly like their
+    single-horizon counterparts (horizon axis replicated on the mesh).
+    """
+    if collective and groups != 1:
+        raise ValueError("pooled (grouped) planes are host-resident: "
+                         "collective=True requires groups=1")
+    uniq, _ = _normalize_horizons(spec, lasts)
+    cache = getattr(state, _PLANES_ATTR, None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(state, _PLANES_ATTR, cache)
+    if collective:
+        ckey = ("multi-collective", uniq)
+    elif groups != 1:
+        ckey = ("multi-pooled", groups, uniq)
+    else:
+        ckey = ("multi", uniq)
+    if ckey in cache:
+        return _cache_touch(cache, ckey), uniq
+    if collective:
+        ctx = _collective_ctx(spec, state)
+
+        def apply_one(pl, d):
+            return _apply_planes_delta_collective_multi(
+                spec, ctx.mesh, ctx.axis, state.shards, pl, d, horizons=uniq)
+    else:
+        def apply_one(pl, d):
+            return _apply_planes_delta_multi(spec, state.shards, pl, d,
+                                             horizons=uniq, groups=groups)
+    planes = _resolve_pending(state, ckey, apply_one)
+    if planes is None:
+        PLANES_BUILD_COUNTS["build"] += 1
+        if collective:
+            ctx = _collective_ctx(spec, state)
+            planes = _build_planes_collective_multi(
+                spec, ctx.mesh, ctx.axis, state.shards, horizons=uniq)
+        else:
+            stacked = isinstance(state, ShardedState)
+            shards = state.shards if stacked else state
+            planes = _build_planes_multi(spec, shards, horizons=uniq,
+                                         stacked=stacked, groups=groups)
+    _cache_put(cache, ckey, planes)
+    return planes, uniq
 
 
 def clear_plane_cache(state) -> None:
@@ -579,6 +786,46 @@ def _label_pallas(spec, planes, lv, les, *, with_le, direction):
 
 
 # --------------------------------------------------------------------------
+# horizon-stacked dispatches (DESIGN.md §14): the same plane ops over a
+# MultiPlanes — the ops collapse the leading [H] like a shard-axis
+# singleton and return [H, B] already shard-reduced, so these return the
+# op output directly (no outer sum).
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "interpret"))
+def _edge_pallas_multi(spec, planes, src, dst, la, lb, les, *, with_le,
+                       interpret):
+    _count("edge", "pallas-multi")
+    from repro.kernels.sketch_query.ops import edge_query_planes
+    w, wl = edge_query_planes(spec.config, planes, src, dst, (la, lb, les),
+                              with_le=with_le, interpret=interpret)
+    return wl if with_le else w
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "direction", "interpret"))
+def _vertex_pallas_multi(spec, planes, v, lv, les, *, with_le, direction,
+                         interpret):
+    _count("vertex", "pallas-multi")
+    from repro.kernels.vertex_scan.ops import vertex_query_planes
+    w, wl = vertex_query_planes(spec.config, planes, v, (lv, les),
+                                direction=direction, with_le=with_le,
+                                interpret=interpret)
+    return wl if with_le else w
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("with_le", "direction"))
+def _label_pallas_multi(spec, planes, lv, les, *, with_le, direction):
+    _count("label", "pallas-multi")
+    from repro.kernels.vertex_scan.ops import label_aggregate_planes
+    w, wl = label_aggregate_planes(spec.config, planes, lv, edge_label=les,
+                                   direction=direction, with_le=with_le)
+    return wl if with_le else w
+
+
+# --------------------------------------------------------------------------
 # collective dispatches (DESIGN.md §9): the same plane ops inside
 # shard_map over the shard axis — per-device shard blocks, psum reduction
 # --------------------------------------------------------------------------
@@ -640,6 +887,65 @@ def _label_collective(spec, ctx, planes, lv, les, *, with_le, direction):
     return _shmap(body, ctx, 2)(planes, lv, les)
 
 
+def _shmap_multi(body, ctx, n_query_args):
+    """shard_map wrapper for the horizon-stacked collective dispatches:
+    the MultiPlanes shard on their axis-1 shard axis (horizon axis
+    replicated), query arrays replicated, output replicated — the multi
+    plane ops psum their [H, B] answers internally."""
+    return shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(_multi_pspecs(ctx.axis),) + (P(),) * n_query_args,
+        out_specs=P(), check_rep=False)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("with_le", "interpret"))
+def _edge_collective_multi(spec, ctx, planes, src, dst, la, lb, les, *,
+                           with_le, interpret):
+    _count("edge", "collective-multi")
+    from repro.kernels.sketch_query.ops import edge_query_planes
+
+    def body(planes, src, dst, la, lb, les):
+        w, wl = edge_query_planes(spec.config, planes, src, dst,
+                                  (la, lb, les), with_le=with_le,
+                                  interpret=interpret, axis_name=ctx.axis)
+        return wl if with_le else w
+
+    return _shmap_multi(body, ctx, 5)(planes, src, dst, la, lb, les)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("with_le", "direction", "interpret"))
+def _vertex_collective_multi(spec, ctx, planes, v, lv, les, *, with_le,
+                             direction, interpret):
+    _count("vertex", "collective-multi")
+    from repro.kernels.vertex_scan.ops import vertex_query_planes
+
+    def body(planes, v, lv, les):
+        w, wl = vertex_query_planes(spec.config, planes, v, (lv, les),
+                                    direction=direction, with_le=with_le,
+                                    interpret=interpret, axis_name=ctx.axis)
+        return wl if with_le else w
+
+    return _shmap_multi(body, ctx, 3)(planes, v, lv, les)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1),
+                   static_argnames=("with_le", "direction"))
+def _label_collective_multi(spec, ctx, planes, lv, les, *, with_le,
+                            direction):
+    _count("label", "collective-multi")
+    from repro.kernels.vertex_scan.ops import label_aggregate_planes
+
+    def body(planes, lv, les):
+        w, wl = label_aggregate_planes(spec.config, planes, lv,
+                                       edge_label=les, direction=direction,
+                                       with_le=with_le, axis_name=ctx.axis)
+        return wl if with_le else w
+
+    return _shmap_multi(body, ctx, 2)(planes, lv, les)
+
+
 # --------------------------------------------------------------------------
 # public entry
 # --------------------------------------------------------------------------
@@ -659,7 +965,14 @@ def query(spec: SketchSpec, state, q: QueryBatch,
     device-resident plane cache, psum reduction; requires ``place``).
     All answer bit-identically (pinned in tests/test_query_path.py and
     tests/test_multidevice.py).
+
+    A list/tuple ``q.last`` is a multi-horizon sweep: ``int32 [H, B]``
+    out, row ``i`` bit-identical to ``query(..., last=q.last[i])`` — on
+    the plane paths answered from ONE horizon-stacked build + one batched
+    dispatch (DESIGN.md §14) rather than H dispatches.
     """
+    if isinstance(q.last, (list, tuple)):
+        return _query_multi(spec, state, q, path)
     path = resolve_query_path(spec, path)
     stacked = isinstance(state, ShardedState)
     shards = state.shards if stacked else state
@@ -718,3 +1031,72 @@ def query(spec: SketchSpec, state, q: QueryBatch,
         return out[:n]
 
     raise ValueError(f"unknown query kind {q.kind!r}")
+
+
+def _query_multi(spec: SketchSpec, state, q: QueryBatch,
+                 path: str = "auto") -> jnp.ndarray:
+    """Multi-horizon sweep dispatch: int32 [H, B] out, rows in the order
+    the user listed the horizons (duplicates and ``None`` welcome — the
+    stacked build runs over the sorted unique clamp, rows are gathered
+    back). The scan path loops the single-horizon reference per horizon
+    (it has no plane reuse to exploit); the pallas/collective paths build
+    one ``MultiPlanes`` and answer every horizon in one dispatch."""
+    lasts = list(q.last)
+    if not lasts:
+        raise ValueError("multi-horizon query needs at least one horizon")
+    path = resolve_query_path(spec, path)
+    if spec.kind == "gss":
+        # the window degenerates (normalize_query nulls `last`): one
+        # answer serves every horizon
+        out = query(spec, state, dataclasses.replace(q, last=None),
+                    path=path)
+        return jnp.broadcast_to(out[None], (len(lasts),) + out.shape)
+    if path == "scan":
+        outs = [query(spec, state, dataclasses.replace(
+            q, last=None if h is None else int(h)), path=path)
+            for h in lasts]
+        return jnp.stack(outs)
+
+    uniq, sel = _normalize_horizons(spec, lasts)
+    collective = path == "collective"
+    planes, _ = query_planes_multi(spec, state, lasts, collective=collective)
+    interpret = jax.default_backend() != "tpu"
+    arrays, with_le, _, n = normalize_query(
+        spec, dataclasses.replace(q, last=None))
+
+    if q.kind == "edge":
+        src, dst, la, lb, les = arrays
+        if collective:
+            ctx = _collective_ctx(spec, state)
+            out = _edge_collective_multi(spec, ctx, planes, src, dst, la, lb,
+                                         les, with_le=with_le,
+                                         interpret=interpret)
+        else:
+            out = _edge_pallas_multi(spec, planes, src, dst, la, lb, les,
+                                     with_le=with_le, interpret=interpret)
+    elif q.kind == "vertex":
+        v, lv, les = arrays
+        if collective:
+            ctx = _collective_ctx(spec, state)
+            out = _vertex_collective_multi(spec, ctx, planes, v, lv, les,
+                                           with_le=with_le,
+                                           direction=q.direction,
+                                           interpret=interpret)
+        else:
+            out = _vertex_pallas_multi(spec, planes, v, lv, les,
+                                       with_le=with_le,
+                                       direction=q.direction,
+                                       interpret=interpret)
+    elif q.kind == "label":
+        lv, les = arrays
+        if collective:
+            ctx = _collective_ctx(spec, state)
+            out = _label_collective_multi(spec, ctx, planes, lv, les,
+                                          with_le=with_le,
+                                          direction=q.direction)
+        else:
+            out = _label_pallas_multi(spec, planes, lv, les, with_le=with_le,
+                                      direction=q.direction)
+    else:
+        raise ValueError(f"unknown query kind {q.kind!r}")
+    return out[jnp.asarray(sel, jnp.int32)][:, :n]

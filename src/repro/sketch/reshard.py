@@ -60,7 +60,7 @@ from repro.core import hashing as hsh
 from repro.core.lsketch import VertexAddressing, edge_probes
 from repro.core.types import EMPTY
 
-from .routing import routed_assignment_vids
+from .routing import prune_routing, routed_assignment_vids
 from .spec import SketchSpec
 from .state import ShardedState
 
@@ -185,7 +185,8 @@ def _replay(cfg, n_shards, assign, vid_src, vid_dst, rec_C, rec_P, d):
 
 
 def reshard(spec: SketchSpec, state: ShardedState, n_shards: int,
-            routing=None) -> ShardedState:
+            routing=None, *, detector=None,
+            heat_threshold: float | None = None) -> ShardedState:
     """Re-partition a handle's contents across ``n_shards`` balanced
     shards (see module docstring for the algorithm and guarantees).
 
@@ -203,6 +204,15 @@ def reshard(spec: SketchSpec, state: ShardedState, n_shards: int,
     constant total memory — with the same conservation/one-sidedness
     guarantees as the unrouted replay (replica partials sum under every
     query path).
+
+    ``detector`` + ``heat_threshold`` enable the *un-split* transition
+    (``routing.prune_routing``): split keys whose ``HeavyKeyDetector``
+    count has decayed below ``heat_threshold * total`` fold back to
+    plain-hash placement. Reshard is the one place this is bit-exact —
+    every record re-places under the pruned table, so no history is left
+    stranded under a split that no longer exists. The pruned table is
+    carried on the result's intended spec; callers keep serving with
+    ``spec.replace(n_shards=..., routing=pruned)``.
     """
     if spec.kind == "lgs":
         raise NotImplementedError(
@@ -210,6 +220,10 @@ def reshard(spec: SketchSpec, state: ShardedState, n_shards: int,
             "restore keeps the merge-into-shard-0 path for LGS")
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if (detector is None) != (heat_threshold is None):
+        raise ValueError("detector and heat_threshold come together — the "
+                         "un-split prune needs both the heat summary and "
+                         "the threshold it was split under")
 
     cfg = spec.config
     shards = state.shards
@@ -217,6 +231,11 @@ def reshard(spec: SketchSpec, state: ShardedState, n_shards: int,
     target = spec.replace(n_shards=n_shards)
     if routing is not None:
         target = target.replace(routing=routing)
+    if detector is not None:
+        effective = getattr(target, "routing", None)
+        if effective:
+            target = target.replace(
+                routing=prune_routing(effective, detector, heat_threshold))
     assign = routed_assignment_vids(target, vid_src, vid_dst)
     d = np.asarray(shards.key).shape[1]
     key, C, Pn, pool_key, pool_C, pool_P, pool_lost = _replay(

@@ -235,6 +235,33 @@ class HeavyKeyDetector:
         return sorted(hot, key=lambda e: (-e[2], e[0], e[1]))
 
 
+def prune_routing(table: RoutingTable, detector: HeavyKeyDetector,
+                  threshold: float) -> RoutingTable:
+    """The un-split transition (ROADMAP follow-up to the split path): a
+    new table keeping only the split keys the detector still rates hot —
+    entries whose (one-sided) count has decayed below ``threshold *
+    total`` are dropped entirely (``RoutingTable`` forbids ``n_replicas <
+    2``, so removal *is* the fold-back to plain-hash placement). Keys the
+    detector no longer tracks at all count as fully decayed.
+
+    Live ingest must NOT apply a pruned table — history placed under the
+    split would stop being probed-summed consistently only if placement
+    mattered to queries (it doesn't — every query sums all shards), but
+    the *pool/row pressure* the split relieved would return without the
+    history moving. The supported application point is ``reshard(...,
+    detector=, heat_threshold=)``: reshard re-places every decoded record
+    under the pruned table, so the fold-back is bit-exact — the same
+    records, the same per-record one-sided bound, just plain-hash homes
+    for the cooled keys.
+    """
+    if not table:
+        return table
+    cut = threshold * max(detector.total, 1)
+    keep = [(s, l, r) for s, l, r in table.splits
+            if detector.counts.get((s, l), 0) >= cut]
+    return RoutingTable(tuple(keep))
+
+
 @dataclass(frozen=True)
 class BudgetReport:
     """Per-shard workload fractions + the routing table that levels them

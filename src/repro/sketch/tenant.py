@@ -72,7 +72,8 @@ from repro.engine.window import bucket_size
 from . import checkpoint as _ckpt
 from .ingest import (_FIELDS, _degenerate_batch, _dispatch_stacked,
                      _shard_bucket)
-from .query import (QueryBatch, _count, _with_group_window, query_planes,
+from .query import (QueryBatch, _count, _normalize_horizons,
+                    _with_group_window, query_planes, query_planes_multi,
                     resolve_query_path)
 from .routing import routed_assignment
 from .spec import SketchSpec
@@ -264,6 +265,36 @@ def _topk_pooled_planes(spec, planes, *, kind, k, direction, interpret,
                                  interpret=interpret)
 
     return jax.vmap(per_group)(_grouped(planes, groups))
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("kind", "k", "direction", "interpret",
+                                    "groups"))
+def _topk_pooled_planes_multi(spec, planes, *, kind, k, direction, interpret,
+                              groups):
+    """Horizon-sweep twin of ``_topk_pooled_planes``: slice each horizon
+    off the stacked pooled ``MultiPlanes`` (DESIGN.md §14), run the same
+    grouped decode, and stack — the per-horizon decodes unroll inside ONE
+    jitted program, so an H-point sweep still costs one dispatch."""
+    _count("hh_" + kind, "pooled-multi")
+    from repro.kernels.heavy_hitters.ops import (
+        heavy_edges_planes, heavy_vertices_planes, top_labels_planes)
+
+    def per_group(gpl):
+        if kind == "vertex":
+            return heavy_vertices_planes(spec.config, gpl, k,
+                                         direction=direction,
+                                         interpret=interpret)
+        if kind == "edge":
+            return heavy_edges_planes(spec.config, gpl, k,
+                                      interpret=interpret)
+        return top_labels_planes(spec.config, gpl, k, direction=direction,
+                                 interpret=interpret)
+
+    H = planes.cw.shape[0]
+    outs = [jax.vmap(per_group)(_grouped(_q.slice_horizon(planes, i), groups))
+            for i in range(H)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
 
 
 # --------------------------------------------------------------------------
@@ -674,10 +705,17 @@ class TenantPool:
 
     # ---- query ------------------------------------------------------------
 
-    def prewarm(self, last=None) -> None:
+    def prewarm(self, last=None, *, horizons=None) -> None:
         """Build (or delta-refresh) the pooled ``QueryPlanes`` for a window
         horizon ahead of traffic — the pooled twin of the serving loop's
-        plane prewarm (DESIGN.md §8/§10)."""
+        plane prewarm (DESIGN.md §8/§10). ``horizons=[h1, ..., hH]``
+        prewarms the whole sweep in one fused multi-horizon build
+        (DESIGN.md §14) that later ``top_k_many(horizons=...)`` calls and
+        single-horizon lookups slice into."""
+        if horizons is not None:
+            query_planes_multi(self.spec, self.flush(), list(horizons),
+                               groups=self.n_slots)
+            return
         query_planes(self.spec, self.flush(), last, groups=self.n_slots)
 
     def query(self, tenant_id, q: QueryBatch, path: str = "auto"):
@@ -735,16 +773,19 @@ class TenantPool:
         return [out[s, off:off + m] for s, off, m in spans]
 
     def top_k(self, tenant_id, kind: str = "vertex", k: int = 10, *,
-              direction: str = "out", last=None):
+              direction: str = "out", last=None, horizons=None):
         """One tenant's windowed heavy-hitter top-k (DESIGN.md §12):
         ``kind`` "vertex" -> (vids [k], weights [k]), "edge" ->
         (src [k], dst [k], weights [k]), "label" -> (blocks [k],
-        weights [k]); (-1, 0) padding past the live identities."""
+        weights [k]); (-1, 0) padding past the live identities.
+        ``horizons=`` sweeps the ranking (leading ``[H]`` axis,
+        DESIGN.md §14)."""
         return self.top_k_many([tenant_id], kind=kind, k=k,
-                               direction=direction, last=last)[0]
+                               direction=direction, last=last,
+                               horizons=horizons)[0]
 
     def top_k_many(self, tenant_ids, kind: str = "vertex", k: int = 10, *,
-                   direction: str = "out", last=None):
+                   direction: str = "out", last=None, horizons=None):
         """Heavy-hitter top-k for many tenants in **one** pooled dispatch.
 
         The grouped planes are the same cached ``query_planes(...,
@@ -752,19 +793,51 @@ class TenantPool:
         vmapped across tenant blocks, so every tenant's answer is
         bit-identical to running ``repro.sketch.heavy_vertices`` (etc.) on
         its standalone handle. Returns per-tenant result tuples, in input
-        order. Evicted tenants are readmitted on touch."""
+        order. Evicted tenants are readmitted on touch.
+
+        ``horizons=[h1, ..., hH]`` (exclusive with ``last=``) sweeps the
+        ranking across time horizons — each tenant's result leaves gain a
+        leading ``[H]`` axis, row ``i`` bit-identical to
+        ``last=horizons[i]`` — served from one fused multi-horizon pooled
+        plane build (DESIGN.md §14)."""
         if self.spec.kind == "lgs":
             raise NotImplementedError(
                 "LGS cells store no keys — the reversible cell-owner "
                 "decode needs LSketch/GSS")
+        if horizons is not None and last is not None:
+            raise ValueError("pass either last= (one horizon) or horizons= "
+                             "(a sweep), not both")
         tenant_ids = list(tenant_ids)
         if not tenant_ids:
             return []
+        interpret = jax.default_backend() != "tpu"
+        if horizons is not None:
+            horizons = list(horizons)
+            if not horizons:
+                raise ValueError("horizons= needs at least one horizon")
+            if self.spec.kind == "gss":  # no window ring: one ranking
+                out = self.top_k_many(tenant_ids, kind=kind, k=k,
+                                      direction=direction)
+                return [jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None],
+                                               (len(horizons),) + x.shape),
+                    o) for o in out]
+            slots = [self._ensure(tid) for tid in tenant_ids]
+            state = self.flush()
+            _, sel = _normalize_horizons(self.spec, horizons)
+            planes, _ = query_planes_multi(self.spec, state, horizons,
+                                           groups=self.n_slots)
+            out = _topk_pooled_planes_multi(
+                self.spec, planes, kind=kind, k=k, direction=direction,
+                interpret=interpret, groups=self.n_slots)
+            sel_arr = jnp.asarray(sel, jnp.int32)
+            out = jax.tree.map(lambda x: x[sel_arr], out)
+            return [jax.tree.map(lambda x: x[:, s], out) for s in slots]
         slots = [self._ensure(tid) for tid in tenant_ids]
         state = self.flush()
         last = None if self.spec.kind == "gss" else last
         planes = query_planes(self.spec, state, last, groups=self.n_slots)
         out = _topk_pooled_planes(
             self.spec, planes, kind=kind, k=k, direction=direction,
-            interpret=jax.default_backend() != "tpu", groups=self.n_slots)
+            interpret=interpret, groups=self.n_slots)
         return [jax.tree.map(lambda x: x[s], out) for s in slots]

@@ -14,6 +14,20 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jax_compile_arena():
+    """Drop compiled executables between test modules. The full suite
+    jits several hundred programs into one process; past ~300 live
+    executables the CPU backend's compile step can segfault (the crash
+    lands in ``backend_compile`` of whichever test compiles next —
+    reproducibly the whole suite, never any subset). Modules rarely
+    share program shapes, so per-module recompiles cost little; plane
+    caches live on state objects and are untouched."""
+    yield
+    import jax
+    jax.clear_caches()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

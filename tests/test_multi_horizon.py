@@ -1,0 +1,375 @@
+"""Fused multi-horizon QueryPlanes contract (DESIGN.md §14).
+
+The property: the horizon-stacked ``build_query_planes_multi`` /
+``apply_planes_delta_multi`` pair and every surface built on it —
+``query(last=[h1, ..., hH])``, the ``MultiPlanes`` cache entry with its
+single-horizon slicing, the analytics sweeps, the pooled tenant sweep —
+answer **bit-identically** to the per-horizon ``last=h`` reference,
+across kinds x shard counts x window positions (including ring
+wraparound and pool overflow), with ONE jitted program per (kind,
+bucket) regardless of how many horizons a sweep spans. The collective
+(mesh-resident) variant lives in tests/test_multidevice.py — device
+counts are fixed at backend init, so it needs the fake-device
+subprocess recipe.
+"""
+
+import dataclasses
+import importlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import sketch as skt
+from repro.core import LSketchConfig
+from repro.core.gss import gss_config
+from repro.core.queries import (build_query_planes, build_query_planes_multi,
+                                slice_horizon)
+from repro.core.types import EdgeBatch
+
+q_mod = importlib.import_module("repro.sketch.query")
+
+# mirror tests/test_planes_delta_property.py: one config per (kind,
+# overflow) so jitted programs are shared across every case
+LS_CFG = LSketchConfig(d=16, n_blocks=2, F=256, r=2, s=2, c=4, k=4,
+                       window_size=400, pool_capacity=64, pool_probes=4)
+LS_CFG_TINY_POOL = LSketchConfig(d=8, n_blocks=2, F=256, r=2, s=2, c=4,
+                                 k=4, window_size=400, pool_capacity=8,
+                                 pool_probes=2)
+GSS_CFG = gss_config(d=16)
+
+BASE_N, FLUSH_N, TMAX = 256, 64, 1600
+PLACEMENTS = ("live", "late", "advance")
+HS = (1, 2, 3, 4)  # the full ladder for k=4 (4 == full window)
+
+
+def _tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _batch(rng, n, tlo, thi, n_vertices):
+    src = rng.integers(0, n_vertices, n).astype(np.int32)
+    dst = rng.integers(0, n_vertices, n).astype(np.int32)
+    arrays = (src, dst, src % 3, dst % 3, rng.integers(0, 5, n),
+              rng.integers(1, 4, n), np.sort(rng.integers(tlo, thi, n)))
+    return EdgeBatch(*[jnp.asarray(x, jnp.int32) for x in arrays])
+
+
+def _query_suite(n_queries=48, seed=7):
+    rng = np.random.default_rng(seed)
+    qs = rng.integers(0, 60, n_queries).astype(np.int32)
+    qd = rng.integers(0, 60, n_queries).astype(np.int32)
+    la, lb = (qs % 3).astype(np.int32), (qd % 3).astype(np.int32)
+    le = rng.integers(0, 5, n_queries).astype(np.int32)
+    vs = np.arange(32, dtype=np.int32)
+
+    def qbs(last):
+        yield skt.QueryBatch.edges(qs, la, qd, lb, last=last)
+        yield skt.QueryBatch.edges(qs, la, qd, lb, edge_label=le, last=last)
+        for direction in ("out", "in"):
+            yield skt.QueryBatch.vertices(vs, vs % 3, direction=direction,
+                                          last=last)
+            yield skt.QueryBatch.labels(np.arange(4, dtype=np.int32),
+                                        direction=direction, last=last)
+    return qbs
+
+
+# --------------------------------------------------------------------------
+# core: stacked build/delta bit-identical to per-horizon, every placement
+# --------------------------------------------------------------------------
+
+def _assert_multi_matches_per_horizon(spec, state, ctx):
+    """The full §14 contract on one handle: (a) the stacked core build
+    slices to the per-horizon builds, (b) the cached (possibly
+    delta-resolved) multi entry matches a cold multi rebuild, (c) the
+    sweeping query() matches per-horizon query() on scan AND pallas."""
+    sh = state.shards
+    multi = build_query_planes_multi(spec.config, sh, HS)
+    for i, h in enumerate(HS):
+        single = build_query_planes(spec.config, sh, h)
+        assert _tree_equal(slice_horizon(multi, i), single), \
+            f"{ctx}: stacked build row last={h} != per-horizon build"
+    full = build_query_planes(spec.config, sh, None)
+    assert _tree_equal(slice_horizon(multi, len(HS) - 1), full), \
+        f"{ctx}: last=k row != full-window build"
+
+    # cached entry (delta-resolved after a flush) vs cold multi rebuild
+    inc, uniq = skt.query_planes_multi(spec, state, list(HS))
+    assert uniq == HS
+    skt.clear_plane_cache(state)
+    cold, _ = skt.query_planes_multi(spec, state, list(HS))
+    assert _tree_equal(inc, cold), \
+        f"{ctx}: incremental multi planes != cold rebuild"
+
+    # full query surface, scan + pallas, dupes + None in user order
+    lasts = [3, None, 1, 3, 2]
+    qbs = _query_suite()
+    for qb in qbs(lasts):
+        for path in ("scan", "pallas"):
+            sweep = np.asarray(skt.query(spec, state, qb, path=path))
+            assert sweep.shape[0] == len(lasts)
+            for i, h in enumerate(lasts):
+                ref = np.asarray(skt.query(
+                    spec, state, dataclasses.replace(qb, last=h), path=path))
+                assert np.array_equal(sweep[i], ref), (
+                    f"{ctx}: {path} sweep row last={h} != single "
+                    f"({qb.kind} dir={qb.direction})")
+
+
+@pytest.mark.parametrize("ns", [1, 4])
+@pytest.mark.parametrize("tiny_pool", [False, True])
+def test_multi_horizon_bit_identity_property(ns, tiny_pool):
+    cfg = LS_CFG_TINY_POOL if tiny_pool else LS_CFG
+    n_vertices = 400 if tiny_pool else 60
+    spec = skt.SketchSpec(kind="lsketch", config=cfg, n_shards=ns)
+    rng = np.random.default_rng(17 * ns + tiny_pool)
+    sw = max(cfg.subwindow_size, 1)
+    tmax = TMAX
+    base_n = 512 if tiny_pool else BASE_N
+    state = skt.ingest(spec, skt.create(spec),
+                       _batch(rng, base_n, 0, tmax, n_vertices))
+    if tiny_pool:
+        assert int(jnp.sum(state.shards.pool_lost)) > 0, \
+            "tiny-pool case must actually saturate"
+    skt.query_planes_multi(spec, state, list(HS))  # warm the sweep cache
+    for i, placement in enumerate(PLACEMENTS):
+        if placement == "live":
+            tlo, thi = tmax - sw, tmax
+        elif placement == "late":
+            tlo, thi = tmax - 2 * sw, tmax - sw
+        else:  # advance claims (and on wrap resets) a new subwindow
+            tlo, thi = tmax, tmax + sw
+            tmax += sw
+        state = skt.ingest(spec, state,
+                           _batch(rng, FLUSH_N, tlo, thi, n_vertices))
+        _assert_multi_matches_per_horizon(
+            spec, state, ctx=f"x{ns} tiny_pool={tiny_pool} flush={i} "
+                             f"{placement}")
+
+
+@pytest.mark.parametrize("ns", [1, 4])
+def test_multi_horizon_bit_identity_after_wraparound(ns):
+    """Drive the ring all the way around (> k window advances) and re-pin
+    the stacked-vs-single identity with expired slots in play."""
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=ns)
+    rng = np.random.default_rng(29)
+    sw = max(LS_CFG.subwindow_size, 1)
+    state = skt.create(spec)
+    t = 0
+    for _ in range(2 * LS_CFG.k + 1):  # wraps the k-slot ring twice
+        state = skt.ingest(spec, state, _batch(rng, FLUSH_N, t, t + sw, 60))
+        t += sw
+    _assert_multi_matches_per_horizon(spec, state, ctx=f"wrap x{ns}")
+
+
+def test_gss_multi_broadcasts_single_answer():
+    spec = skt.SketchSpec(kind="gss", config=GSS_CFG, n_shards=2)
+    rng = np.random.default_rng(5)
+    src = rng.integers(0, 60, 128).astype(np.int32)
+    dst = rng.integers(0, 60, 128).astype(np.int32)
+    z = np.zeros(128, np.int32)
+    state = skt.ingest(spec, skt.create(spec), EdgeBatch(
+        *[jnp.asarray(x, jnp.int32) for x in
+          (src, dst, z, z, z, rng.integers(1, 4, 128), z)]))
+    qb = skt.QueryBatch.edges(src[:16], z[:16], dst[:16], z[:16],
+                              last=[1, 5, None])
+    out = np.asarray(skt.query(spec, state, qb))
+    ref = np.asarray(skt.query(spec, state, skt.QueryBatch.edges(
+        src[:16], z[:16], dst[:16], z[:16])))
+    assert out.shape == (3, 16)
+    assert all(np.array_equal(out[i], ref) for i in range(3))
+
+
+def test_empty_horizon_list_raises():
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=1)
+    state = skt.create(spec)
+    with pytest.raises(ValueError):
+        skt.query(spec, state, skt.QueryBatch.labels([0], last=[]))
+    with pytest.raises(ValueError):
+        skt.heavy_vertices(spec, state, 3, horizons=[])
+    with pytest.raises(ValueError):
+        skt.heavy_vertices(spec, state, 3, last=1, horizons=[1, 2])
+
+
+# --------------------------------------------------------------------------
+# cache: multi entries slice, delta-fold, and LRU-evict
+# --------------------------------------------------------------------------
+
+def _ingested(seed=3, ns=2):
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=ns)
+    rng = np.random.default_rng(seed)
+    state = skt.ingest(spec, skt.create(spec),
+                       _batch(rng, BASE_N, 0, TMAX, 60))
+    return spec, state, rng
+
+
+def test_single_horizon_slices_cached_multi_entry():
+    spec, state, _ = _ingested()
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    skt.query_planes_multi(spec, state, [1, 2, 3])
+    # every covered horizon: a free slice, not a second build — and the
+    # slice is exactly the standalone per-horizon build
+    sliced = {h: skt.query_planes(spec, state, h) for h in (1, 2, 3)}
+    assert q_mod.PLANES_BUILD_COUNTS["build"] - before["build"] == 1
+    for h, planes in sliced.items():
+        cold = build_query_planes(spec.config, state.shards, h)
+        assert _tree_equal(planes, cold), f"sliced planes wrong at last={h}"
+    # an uncovered horizon still pays its own build
+    skt.query_planes(spec, state, 4)
+    assert q_mod.PLANES_BUILD_COUNTS["build"] - before["build"] == 2
+
+
+def test_multi_entry_rides_planes_delta_across_flush():
+    spec, state, rng = _ingested(seed=11)
+    skt.query_planes_multi(spec, state, list(HS))
+    before = dict(q_mod.PLANES_BUILD_COUNTS)
+    # a live-subwindow flush must fold into the cached multi entry via
+    # ONE delta apply — no rebuild
+    sw = max(LS_CFG.subwindow_size, 1)
+    state = skt.ingest(spec, state, _batch(rng, FLUSH_N, TMAX - sw, TMAX, 60))
+    inc, _ = skt.query_planes_multi(spec, state, list(HS))
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == before["build"], \
+        "live flush must not rebuild the multi entry"
+    assert q_mod.PLANES_BUILD_COUNTS["delta"] > before["delta"]
+    skt.clear_plane_cache(state)
+    cold, _ = skt.query_planes_multi(spec, state, list(HS))
+    assert _tree_equal(inc, cold)
+
+
+def test_plane_cache_lru_evicts_and_counts(monkeypatch):
+    spec, state, _ = _ingested(seed=13)
+    monkeypatch.setattr(q_mod, "PLANES_CACHE_CAP", 2)
+    before = q_mod.PLANES_BUILD_COUNTS["evict"]
+    for h in (1, 2, 3, 4):
+        skt.query_planes(spec, state, h)
+    cache = getattr(state, q_mod._PLANES_ATTR)
+    assert len(cache) <= 2, "cache must respect the LRU cap"
+    assert q_mod.PLANES_BUILD_COUNTS["evict"] - before >= 2
+    # the survivors are the most recently used horizons
+    assert list(cache) == [3, 4]
+    # touching 3 then inserting evicts 4, not 3
+    skt.query_planes(spec, state, 3)
+    skt.query_planes(spec, state, 1)
+    assert list(getattr(state, q_mod._PLANES_ATTR)) == [3, 1]
+
+
+# --------------------------------------------------------------------------
+# compile counts: one program per (kind, bucket) regardless of H
+# --------------------------------------------------------------------------
+
+def test_one_multi_program_per_kind_bucket():
+    spec, state, _ = _ingested(seed=19)
+    rng = np.random.default_rng(2)
+    qs = rng.integers(0, 60, 64).astype(np.int32)
+    qd = rng.integers(0, 60, 64).astype(np.int32)
+
+    def edge_q(n, lasts):
+        return skt.QueryBatch.edges(qs[:n], qs[:n] % 3, qd[:n], qd[:n] % 3,
+                                    last=lasts)
+
+    before = dict(q_mod.QUERY_TRACE_COUNTS)
+    delta = lambda kind: (q_mod.QUERY_TRACE_COUNTS.get(
+        (kind, "pallas-multi"), 0) - before.get((kind, "pallas-multi"), 0))
+    h8 = list(range(1, 9))  # an 8-point sweep clamps to uniq (1,2,3,4):
+    # ONE stacked dispatch, not 8 — and any sweep with the same clamped
+    # shape (dupes, reordering, full-window aliases) reuses the program
+    skt.query(spec, state, edge_q(20, h8), path="pallas")       # bucket 32
+    skt.query(spec, state, edge_q(27, [4, 3, 2, 1]), path="pallas")
+    skt.query(spec, state, edge_q(24, [1, 2, 3, None, 9]), path="pallas")
+    assert delta("edge") <= 1, "same (kind, bucket, H) retraced"
+    skt.query(spec, state, edge_q(40, h8), path="pallas")       # bucket 64
+    n2 = delta("edge")
+    skt.query(spec, state, edge_q(33, h8), path="pallas")
+    assert delta("edge") == n2, "repeated bucket retraced"
+    vq = lambda n, lasts: skt.QueryBatch.vertices(
+        np.arange(n, dtype=np.int32), np.arange(n, dtype=np.int32) % 3,
+        last=lasts)
+    skt.query(spec, state, vq(20, h8), path="pallas")
+    skt.query(spec, state, vq(25, [2, 1, 3, 4]), path="pallas")
+    assert delta("vertex") <= 1, "vertex bucket retraced"
+
+
+# --------------------------------------------------------------------------
+# analytics + tenant sweeps ride the same stacked planes
+# --------------------------------------------------------------------------
+
+def test_analytics_horizon_sweep_matches_per_horizon():
+    spec, state, _ = _ingested(seed=23)
+    hs = [1, 2, 4]
+    for path in ("scan", "pallas"):
+        for fn, kw in ((skt.heavy_vertices, {"direction": "out"}),
+                       (skt.heavy_edges, {}),
+                       (skt.top_labels, {"direction": "in"})):
+            sweep = fn(spec, state, 5, horizons=hs, path=path, **kw)
+            for i, h in enumerate(hs):
+                ref = fn(spec, state, 5, last=h, path=path, **kw)
+                assert _tree_equal(jax.tree.map(lambda x: x[i], sweep),
+                                   ref), (fn.__name__, path, h)
+
+
+def test_reachable_horizon_sweep_matches_per_horizon():
+    spec, state, rng = _ingested(seed=27)
+    # recent edges so the loosest horizon has live paths
+    sw = max(LS_CFG.subwindow_size, 1)
+    eb = _batch(rng, FLUSH_N, TMAX - sw, TMAX, 60)
+    state = skt.ingest(spec, state, eb)
+    src, dst = np.asarray(eb.src)[:8], np.asarray(eb.dst)[:8]
+    sl, dl = src % 3, dst % 3
+    hs = [4, None, 1, 4]  # dupes + None in user order
+    sweep = skt.reachable_many(spec, state, src, sl, dst, dl, max_hops=3,
+                               horizons=hs)
+    assert sweep.shape == (4, 8)
+    assert sweep[1].any(), "expected live paths at the full window"
+    for i, h in enumerate(hs):
+        ref = np.asarray(skt.reachable_many(spec, state, src, sl, dst, dl,
+                                            max_hops=3, last=h))
+        assert np.array_equal(sweep[i], ref), h
+    # monotone nesting: tighter horizons reach a subset
+    assert (sweep[2] <= sweep[1]).all()
+
+
+def test_tenant_pool_horizon_sweep_matches_per_horizon():
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=2)
+    pool = skt.TenantPool(spec, n_slots=4)
+    rng = np.random.default_rng(31)
+    for t in range(3):
+        pool.submit([(t, _batch(rng, BASE_N, 0, TMAX, 60))])
+    pool.flush()
+    pool.prewarm(horizons=[1, 2, 4])
+    outs = pool.top_k_many([0, 2], kind="vertex", k=5, horizons=[1, 2, 4])
+    for tid, out in zip([0, 2], outs):
+        for i, h in enumerate([1, 2, 4]):
+            ref = pool.top_k(tid, kind="vertex", k=5, last=h)
+            assert _tree_equal(jax.tree.map(lambda x: x[i], out), ref), \
+                (tid, h)
+    with pytest.raises(ValueError):
+        pool.top_k_many([0], last=1, horizons=[1, 2])
+
+
+def test_sketch_server_fused_prewarm_and_sweep():
+    from repro.launch.serve_sketch import SketchServer
+    spec = skt.SketchSpec(kind="lsketch", config=LS_CFG, n_shards=2)
+    rng = np.random.default_rng(37)
+    server = SketchServer(spec, query_path="pallas", horizons=[1, 2, 4])
+    server.ingest(_batch(rng, BASE_N, 0, TMAX, 60))
+    server.submit("edge", src=3, la=0, dst=7, lb=1, last=1)
+    server.flush()  # first flush settles (ring claims force one rebuild)
+    builds = q_mod.PLANES_BUILD_COUNTS["build"]
+    # steady state: a live-subwindow append folds ONE delta into the
+    # registered sweep's stacked entry, and single-horizon query groups
+    # (whose flush prewarm clamps to the same sweep) slice out of it —
+    # zero further builds however many horizons are in play
+    sw = max(LS_CFG.subwindow_size, 1)
+    server.ingest(_batch(rng, FLUSH_N, TMAX - sw, TMAX, 60))
+    r1 = server.submit("edge", src=3, la=0, dst=7, lb=1, last=1)
+    r2 = server.submit("edge", src=3, la=0, dst=7, lb=1, last=2)
+    server.flush()
+    assert q_mod.PLANES_BUILD_COUNTS["build"] == builds, \
+        "steady-state flush must ride the fused delta, not rebuild"
+    qb = skt.QueryBatch.edges(np.int32([3]), np.int32([0]), np.int32([7]),
+                              np.int32([1]), last=[1, 2])
+    ref = np.asarray(skt.query(spec, server.state, qb, path="scan"))
+    assert r1.answer == int(ref[0, 0]) and r2.answer == int(ref[1, 0])
+    assert "planes[build=" in server.serving_summary()

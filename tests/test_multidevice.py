@@ -461,3 +461,79 @@ def test_collective_planes_delta_across_flushes():
         print("COLLECTIVE_DELTA_OK")
     """, timeout=1200)
     assert "COLLECTIVE_DELTA_OK" in stdout
+
+
+def test_collective_multi_horizon_parity_and_delta():
+    """DESIGN.md §14 on the mesh: ``query(last=[h1, ..., hH])`` under
+    path="collective" answers bit-identically to the per-horizon scan
+    reference, the device-resident stacked ``MultiPlanes`` entry keeps
+    its sharding and folds flush deltas device-locally (no rebuild in
+    steady state), and the analytics horizon sweep matches its
+    single-horizon collective twin."""
+    stdout = _run(_SKETCH_PRELUDE + """
+        import dataclasses
+        spec = skt.SketchSpec(kind="lsketch", config=LS, n_shards=8)
+        # dense enough that every shard claims the live subwindow (same
+        # reasoning as the single-horizon delta test above)
+        ARRS = stream("lsketch", seed=41, n=1600)
+        st = skt.place(spec, skt.create(spec), mesh_over(4))
+        st = skt.ingest(spec, st, batch(ARRS))
+        src, dst, la, lb = ARRS[0], ARRS[1], ARRS[2], ARRS[3]
+        lasts = [3, None, 1, 3, 2]  # dupes + full-window alias in user order
+
+        def check(st, ctx):
+            vs = np.arange(24, dtype=np.int32)
+            for qb in (skt.QueryBatch.edges(src[:32], la[:32], dst[:32],
+                                            lb[:32], last=lasts),
+                       skt.QueryBatch.vertices(vs, vs % 3, last=lasts)):
+                sweep = np.asarray(skt.query(spec, st, qb,
+                                             path="collective"))
+                for i, h in enumerate(lasts):
+                    ref = np.asarray(skt.query(
+                        spec, st, dataclasses.replace(qb, last=h),
+                        path="scan"))
+                    assert np.array_equal(sweep[i], ref), (ctx, qb.kind, h)
+
+        check(st, "cold")
+        mp, uniq = skt.query_planes_multi(spec, st, lasts, collective=True)
+        assert uniq == (1, 2, 3, 4)
+        assert not mp.cw.sharding.is_fully_replicated, \\
+            "stacked device planes lost their sharding"
+
+        # steady state: one live flush folds ONE delta into the stacked
+        # entry — bit-identical to a cold rebuild, zero extra builds
+        b0 = qmod.PLANES_BUILD_COUNTS["build"]
+        d0 = qmod.PLANES_BUILD_COUNTS["delta"]
+        rng = np.random.default_rng(42)
+        lsrc = rng.integers(0, 50, 64).astype(np.int32)
+        ldst = rng.integers(0, 50, 64).astype(np.int32)
+        live = batch((lsrc, ldst, lsrc % 3, ldst % 3,
+                      rng.integers(0, 5, 64), rng.integers(1, 4, 64),
+                      np.sort(rng.integers(2300, 2400, 64))))
+        st2 = skt.ingest(spec, st, live)
+        mp2, _ = skt.query_planes_multi(spec, st2, lasts, collective=True)
+        assert qmod.PLANES_BUILD_COUNTS["build"] == b0, \\
+            "live flush must fold into the stacked entry, not rebuild"
+        assert qmod.PLANES_BUILD_COUNTS["delta"] > d0
+        assert not mp2.cw.sharding.is_fully_replicated
+        inc = jax.tree.leaves(mp2)
+        skt.clear_plane_cache(st2)
+        cold = jax.tree.leaves(skt.query_planes_multi(
+            spec, st2, lasts, collective=True)[0])
+        assert all(bool(jnp.array_equal(x, y))
+                   for x, y in zip(inc, cold)), "delta diverged from cold"
+        check(st2, "delta-maintained")
+
+        # analytics sweep rides the same stacked device entry
+        hs = [1, 2, 4]
+        for fn in (skt.heavy_vertices, skt.top_labels):
+            sweep = fn(spec, st2, 5, horizons=hs, path="collective")
+            for i, h in enumerate(hs):
+                ref = fn(spec, st2, 5, last=h, path="collective")
+                a = jax.tree.leaves(jax.tree.map(lambda x: x[i], sweep))
+                b = jax.tree.leaves(ref)
+                assert all(np.array_equal(np.asarray(x), np.asarray(y))
+                           for x, y in zip(a, b)), (fn.__name__, h)
+        print("MULTI_COLLECTIVE_OK")
+    """, timeout=1200)
+    assert "MULTI_COLLECTIVE_OK" in stdout

@@ -309,3 +309,67 @@ def test_recommend_budget_splits_hot_shard_keys_only():
     j = rep.to_json()
     assert set(j) == {"ingest_load", "query_load", "combined", "routing"}
     assert hot_n / det.total > 0.3  # the stream really was skewed
+
+
+def test_prune_routing_drops_decayed_keys_and_round_trips():
+    """The un-split transition (DESIGN.md §13): keys whose detector count
+    decayed below threshold * total leave the table (removal IS the
+    fold-back — the table forbids n_replicas < 2), untracked keys count
+    as fully decayed, survivors keep their replica widths, and the pruned
+    table JSON round-trips like any other."""
+    det = skt.HeavyKeyDetector(capacity=8)
+    det.update([HOT] * 80 + [3] * 15 + [5] * 5,
+               [HOT % 3] * 80 + [0] * 15 + [2] * 5)
+    table = RoutingTable(((HOT, HOT % 3, 4), (3, 0, 2), (5, 2, 2),
+                          (99, 1, 2)))
+    pruned = skt.prune_routing(table, det, 0.10)
+    split = {(s, l): r for s, l, r in pruned.splits}
+    assert split == {(HOT, HOT % 3): 4, (3, 0): 2}, split
+    assert RoutingTable.from_json(pruned.to_json()) == pruned
+    # threshold 0 keeps everything (untracked counts of 0 still pass);
+    # pruning the empty table is a no-op identity (the reshard guard path)
+    assert skt.prune_routing(table, det, 0.0) == table
+    assert skt.prune_routing(RoutingTable(()), det, 0.5) == RoutingTable(())
+
+
+def test_reshard_unsplit_folds_back_bit_identical_to_plain_hash():
+    """Reshard under a fully-decayed detector re-places every record by
+    plain hash — bit-identical to resharding with no routing at all (the
+    history-level fold-back the split state machine can't do in place) —
+    while a still-hot detector keeps the split layout untouched."""
+    arrays = _heavy_arrays(seed=21)
+    spec = skt.SketchSpec(kind="lsketch", config=CFG,
+                          n_shards=2).with_splits([(HOT, HOT % 3, 4)])
+    state = skt.ingest(spec, skt.create(spec), _batch(arrays), path="scan")
+
+    cold_det = skt.HeavyKeyDetector(capacity=8)
+    cold_det.update([1, 2, 3] * 50)  # HOT fully decayed from the summary
+    folded = skt.reshard(spec, state, 4, detector=cold_det,
+                         heat_threshold=0.05)
+    plain = skt.reshard(spec.replace(routing=None), state, 4)
+    for a, b in zip(jax.tree.leaves(folded.shards),
+                    jax.tree.leaves(plain.shards)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "decayed splits must fold back to plain-hash placement"
+
+    hot_det = skt.HeavyKeyDetector(capacity=8)
+    src, _, la, *_ = arrays
+    hot_det.update(src, la)  # HOT still carries ~half the stream
+    kept = skt.reshard(spec, state, 4, detector=hot_det,
+                       heat_threshold=0.05)
+    routed = skt.reshard(spec, state, 4)  # spec's own (unpruned) table
+    for a, b in zip(jax.tree.leaves(kept.shards),
+                    jax.tree.leaves(routed.shards)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "still-hot splits must keep their routed placement"
+    # one-sidedness survives the fold-back
+    truth = _truth(arrays)
+    keys = sorted(truth)[::2]
+    spec4 = spec.replace(n_shards=4, routing=None)
+    lost = int(np.asarray(folded.shards.pool_lost).sum())
+    est = np.asarray(skt.query(spec4, folded, _edges_qb(keys), path="scan"))
+    for i, k in enumerate(keys):
+        assert est[i] >= truth[k] - lost, (k, est[i], truth[k], lost)
+
+    with pytest.raises(ValueError):
+        skt.reshard(spec, state, 4, detector=hot_det)  # threshold missing
